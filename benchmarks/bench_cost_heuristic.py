@@ -1,0 +1,62 @@
+"""Appendix B: static log-normalised cost heuristic validation.
+
+Ranking preservation (K=3 and K=4 with Flash), log-cost tier separation
+(Cohen's d), prompt-cost and cross-model cost correlations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import benchmark, emit
+from repro.core import simulator
+
+
+def spearman(a, b):
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    return float(np.corrcoef(ra, rb)[0, 1])
+
+
+def cohens_d(a, b):
+    s = np.sqrt((a.var() + b.var()) / 2)
+    return float(abs(b.mean() - a.mean()) / s)
+
+
+def main():
+    b = benchmark()
+    env = b.val
+    rows = []
+    c = env.costs
+    full = np.mean((c[:, 0] < c[:, 1]) & (c[:, 1] < c[:, 2]))
+    rows.append(["k3_full_ordering", f"{100 * full:.1f}%", ""])
+    logc = np.log(c)
+    for i, j, name in ((0, 1, "llama_mistral"), (1, 2, "mistral_gemini")):
+        d = cohens_d(logc[:, i], logc[:, j])
+        frac = np.mean(c[:, i] < c[:, j])
+        rows.append([f"k3_pair_{name}", f"{100 * frac:.1f}%",
+                     f"cohens_d={d:.2f}"])
+
+    env4 = simulator.extend_with_flash(env, "rate_card")
+    c4 = env4.costs
+    # heuristic ordering by rate card (llama < mistral < flash < gemini)
+    order = [int(i) for i in np.argsort(env4.prices_per_1k)]
+    ok = np.ones(env4.n, bool)
+    for a, bb in zip(order[:-1], order[1:]):
+        ok &= c4[:, a] < c4[:, bb]
+    rows.append(["k4_full_ordering", f"{100 * ok.mean():.1f}%",
+                 f"order={order}"])
+    pair = np.mean(c4[:, 1] < c4[:, 3])
+    d_close = cohens_d(np.log(c4[:, 1]), np.log(c4[:, 3]))
+    rows.append(["k4_mistral_flash_pair", f"{100 * pair:.1f}%",
+                 f"cohens_d={d_close:.2f} (closest pair)"])
+
+    # prompt length proxy: costs share the lognormal token factor
+    for k, name in enumerate(env.names):
+        rho = spearman(c[:, k], c[:, (k + 1) % 3])
+        rows.append([f"cross_model_rho_{name}", f"{rho:.2f}", ""])
+    emit(rows, ["name", "value", "derived"], "cost_heuristic")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Appendix E (Tables 6-9, Fig. 12): reward-signal robustness across
+judges.
+
+Three synthetic judges with distinct calibration profiles (the stand-ins
+for DeepSeek-R1 / GPT-4.1-mini / Claude-3.7): a shared latent quality per
+(prompt, model) plus judge-specific gain, offset, and noise. Checks:
+population-level ordering invariance, cross-judge oracle capture, and
+cold-start bandit regret replication under each judge.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import TABULA_CFG, benchmark, emit
+from repro.core import evaluate
+
+# (gain, offset, extra noise): R1 has the widest margins (paper E.2);
+# the supplementary judges compress margins ~15-30% and add per-response
+# disagreement noise (Table 8's MAD ~0.075 vs R1).
+JUDGES = {
+    "r1": (1.00, 0.000, 0.000),
+    "gpt41mini": (0.85, 0.045, 0.020),
+    "claude37": (0.90, -0.010, 0.025),
+}
+
+
+def judge_views(env, seed=0):
+    rng = np.random.default_rng(seed)
+    views = {}
+    for name, (gain, off, noise) in JUDGES.items():
+        mean = env.rewards.mean()
+        r = mean + gain * (env.rewards - mean) + off
+        r = r + noise * rng.standard_normal(env.rewards.shape)
+        views[name] = dataclasses.replace(
+            env, rewards=np.clip(r, 0.0, 1.0).astype(np.float32))
+    return views
+
+
+def main(seeds=tuple(range(10))):
+    b = benchmark()
+    env = b.test
+    views = judge_views(env)
+    rows = []
+
+    # Table 6: expected reward ordering per judge
+    for name, v in views.items():
+        means = v.rewards.mean(axis=0)
+        order = "".join("<" if means[i] < means[i + 1] else ">"
+                        for i in range(2))
+        rows.append([f"judge_{name}_means",
+                     "/".join(f"{m:.3f}" for m in means),
+                     f"ordering_llama_mistral_gemini={order}"])
+
+    # Table 7: cross-judge oracle capture — follow row judge's oracle,
+    # evaluate with column judge
+    r1_oracle_arms = views["r1"].rewards.argmax(axis=1)
+    for name, v in views.items():
+        own = v.rewards.max(axis=1).mean()
+        got = v.rewards[np.arange(env.n), r1_oracle_arms].mean()
+        rows.append([f"cross_oracle_r1_to_{name}", f"{got / own:.3f}",
+                     f"own_oracle={own:.4f}"])
+
+    # Fig. 12: cold-start regret reduction vs random, per judge
+    for name, v in views.items():
+        res = evaluate.run(TABULA_CFG, v, 1.0, seeds=seeds)
+        oracle = v.rewards.max(axis=1)
+        regret = []
+        rnd = []
+        for i, s in enumerate(seeds):
+            perm = np.random.default_rng(int(s)).permutation(v.n)
+            regret.append((oracle[perm] - res.rewards[i]).sum())
+            rng = np.random.default_rng(1000 + s)
+            arms = rng.integers(0, 3, v.n)
+            rnd.append((oracle - v.rewards[np.arange(v.n), arms]).sum())
+        red = 1.0 - np.mean(regret) / np.mean(rnd)
+        rows.append([f"coldstart_regret_{name}", f"{np.mean(regret):.1f}",
+                     f"vs_random={np.mean(rnd):.1f};reduction={red:.0%}"])
+    emit(rows, ["name", "value", "derived"], "judges")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

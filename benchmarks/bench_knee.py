@@ -1,0 +1,97 @@
+"""Tables 3-4 / Appendix A: T_adapt-constrained Pareto knee-point
+hyper-parameter selection.
+
+Grid over (alpha, gamma) with n_eff derived from the adaptation horizon
+(Eq. 13). Objective 1: budget-paced Pareto AUC on the val split;
+objective 2: Phase-2 reward under a catastrophic Mistral failure
+(reward -> 0.50). Knee-point vs AUC-only selection, for warmup and
+tabula-rasa variants, plus the T_adapt in {250, 500, 1000} sensitivity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_EFF, SEEDS, benchmark, emit, warmup_priors
+from repro.core import evaluate, knee, simulator, warmup
+from repro.core.types import RouterConfig
+
+ALPHAS = (0.005, 0.01, 0.05, 0.1)
+GAMMAS = (0.994, 0.995, 0.996, 0.997, 0.998, 0.999, 1.0)
+AUC_BUDGETS = (1.0e-4, 3.0e-4, 6.6e-4, 1.9e-3, 6.0e-3)
+PHASE = 595  # half the val split, as in the paper
+MISTRAL = 1
+GRID_SEEDS = tuple(range(10))
+
+
+def _auc(cfg, env, priors, n_eff, seeds):
+    qualities, costs = [], []
+    for b in AUC_BUDGETS:
+        res = evaluate.run(cfg, env, b, seeds=seeds, priors=priors,
+                           n_eff=n_eff)
+        qualities.append(res.mean_reward)
+        costs.append(max(res.mean_cost, 1e-7))
+    return knee.auc_of_frontier(np.asarray(costs), np.asarray(qualities))
+
+
+def _phase2_reward(cfg, env, priors, n_eff, seeds):
+    envs = []
+    for s in seeds:
+        rng = np.random.default_rng(5000 + s)
+        idx1 = rng.integers(0, env.n, PHASE)
+        idx2 = rng.integers(0, env.n, PHASE)
+        p1 = env.subset(idx1)
+        p2 = simulator.with_quality_shift(env, MISTRAL, 0.50).subset(idx2)
+        envs.append(simulator.concat_environments((p1, p2)))
+    res = evaluate.run(cfg, envs, 6.6e-4, seeds=seeds, priors=priors,
+                       n_eff=n_eff, shuffle=False)
+    return res.phase(PHASE, 2 * PHASE).mean_reward
+
+
+def score_grid(t_adapt: float, use_priors: bool, seeds=GRID_SEEDS):
+    b = benchmark()
+    env = b.val
+    priors = list(warmup_priors()) if use_priors else None
+    results = []
+    for alpha in ALPHAS:
+        for gamma in GAMMAS:
+            n_eff = (warmup.t_adapt_to_n_eff(t_adapt, gamma)
+                     if use_priors else 0.0)
+            cfg = RouterConfig(alpha=alpha, gamma=gamma)
+            auc = _auc(cfg, env, priors, n_eff, seeds)
+            p2 = _phase2_reward(cfg, env, priors, n_eff, seeds)
+            results.append(dict(alpha=alpha, gamma=gamma, n_eff=n_eff,
+                                auc=auc, p2=p2))
+    return results
+
+
+def select(results):
+    pts = np.asarray([[r["auc"], r["p2"]] for r in results])
+    knee_i = knee.knee_point(pts)
+    auc_i = int(np.argmax(pts[:, 0]))
+    return results[knee_i], results[auc_i]
+
+
+def main(seeds=GRID_SEEDS):
+    rows = []
+    for variant, use_priors in (("paretobandit", True), ("tabula_rasa", False)):
+        res = score_grid(500.0, use_priors, seeds)
+        kp, ao = select(res)
+        rows.append([
+            f"knee_{variant}", f"a={kp['alpha']};g={kp['gamma']}",
+            f"n_eff={kp['n_eff']:.0f};auc={kp['auc']:.4f};p2={kp['p2']:.4f}"])
+        rows.append([
+            f"auconly_{variant}", f"a={ao['alpha']};g={ao['gamma']}",
+            f"auc={ao['auc']:.4f};p2={ao['p2']:.4f}"])
+    # T_adapt sensitivity (warmup variant)
+    for t_adapt in (250.0, 1000.0):
+        res = score_grid(t_adapt, True, seeds)
+        kp, _ = select(res)
+        rows.append([
+            f"tadapt_{int(t_adapt)}", f"a={kp['alpha']};g={kp['gamma']}",
+            f"n_eff={kp['n_eff']:.0f};auc={kp['auc']:.4f};p2={kp['p2']:.4f}"])
+    emit(rows, ["name", "selected", "derived"], "knee")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Tables 10-11 / §3.5: routing latency microbenchmark.
+
+Eight configurations isolating three factors, as in the paper:
+  * production overhead — the full jitted ParetoBandit route+update cycle;
+  * Sherman-Morrison vs full inversion (numpy, same route() code path);
+  * PCA dimensionality d=26 vs d=385 (raw-dimension baseline).
+Plus the Pallas batched-scoring kernel's oracle path and the end-to-end
+pipeline (hash-encode + PCA + route).
+
+Absolute numbers are container-CPU specific; the paper's *relative*
+claims (SM update advantage, d^2 scaling, sub-% share of inference
+latency) are the reproduction targets.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import router
+from repro.core.types import RouterConfig, init_state
+
+N_CYCLES = 2000
+WARMUP = 200
+
+
+def _percentiles(ts):
+    return (float(np.percentile(ts, 50) * 1e6),
+            float(np.percentile(ts, 95) * 1e6))
+
+
+# ---------------------------------------------------------------------------
+# numpy router variants (algorithmic isolation, same route() math)
+# ---------------------------------------------------------------------------
+
+class NumpyRouter:
+    """LinUCB with static cost penalty; update strategy selectable."""
+
+    def __init__(self, K, d, mode, alpha=0.05, lambda_c=0.3, seed=0):
+        rng = np.random.default_rng(seed)
+        self.K, self.d, self.mode = K, d, mode
+        self.A = np.stack([np.eye(d) for _ in range(K)])
+        self.A_inv = np.stack([np.eye(d) for _ in range(K)])
+        self.b = np.zeros((K, d))
+        self.theta = np.zeros((K, d))
+        self.alpha, self.lambda_c = alpha, lambda_c
+        self.c_tilde = np.linspace(0, 0.7, K)
+
+    def route(self, x):
+        if self.mode == "per_route_inv":
+            self.A_inv = np.linalg.inv(self.A)
+        s = self.theta @ x
+        for k in range(self.K):
+            s[k] += self.alpha * np.sqrt(
+                max(x @ (self.A_inv[k] @ x), 0.0))
+        s -= self.lambda_c * self.c_tilde
+        return int(np.argmax(s))
+
+    def update(self, k, x, r):
+        self.A[k] += np.outer(x, x)
+        self.b[k] += r * x
+        if self.mode == "sm":
+            Ax = self.A_inv[k] @ x
+            self.A_inv[k] -= np.outer(Ax, Ax) / (1.0 + x @ Ax)
+        elif self.mode == "cached_inv":
+            self.A_inv[k] = np.linalg.inv(self.A[k])
+        self.theta[k] = self.A_inv[k] @ self.b[k]
+
+
+def time_numpy(mode, d, n=N_CYCLES):
+    r = NumpyRouter(3, d, mode)
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((n + WARMUP, d))
+    xs /= np.linalg.norm(xs, axis=1, keepdims=True)
+    t_route, t_upd = [], []
+    for i, x in enumerate(xs):
+        t0 = time.perf_counter()
+        k = r.route(x)
+        t1 = time.perf_counter()
+        r.update(k, x, 0.8)
+        t2 = time.perf_counter()
+        if i >= WARMUP:
+            t_route.append(t1 - t0)
+            t_upd.append(t2 - t1)
+    return t_route, t_upd
+
+
+# ---------------------------------------------------------------------------
+# production (jitted JAX) router
+# ---------------------------------------------------------------------------
+
+def time_production(d, n=N_CYCLES):
+    cfg = RouterConfig(d=d, max_arms=3, alpha=0.05)
+    prices = jnp.asarray([1e-4, 1e-3, 5.6e-3])
+    state = init_state(cfg, prices, prices, budget=6.6e-4)
+    sel = jax.jit(lambda s, x: router.select(cfg, s, x))
+    upd = jax.jit(lambda s, a, x: router.update(
+        cfg, s, a, x, jnp.float32(0.8), jnp.float32(1e-4)))
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.standard_normal((n + WARMUP, d)), jnp.float32)
+    # warmup-compile
+    dec, state = sel(state, xs[0])
+    state = upd(state, dec.arm, xs[0])
+    jax.block_until_ready(state.A)
+    t_route, t_upd = [], []
+    for i in range(n + WARMUP):
+        t0 = time.perf_counter()
+        dec, state = sel(state, xs[i])
+        dec.arm.block_until_ready()
+        t1 = time.perf_counter()
+        state = upd(state, dec.arm, xs[i])
+        state.theta.block_until_ready()
+        t2 = time.perf_counter()
+        if i >= WARMUP:
+            t_route.append(t1 - t0)
+            t_upd.append(t2 - t1)
+    return t_route, t_upd
+
+
+def time_e2e(n=300):
+    """hash-encode + PCA + route (the paper's Table 11)."""
+    from repro.core.features import fit_pca_whitener, hash_encode
+    from repro.data import make_request_stream
+    rng = np.random.default_rng(0)
+    corpus = [r["prompt"] for r in make_request_stream(400, seed=1)]
+    raw = np.stack([hash_encode(p) for p in corpus])
+    wh = fit_pca_whitener(raw)
+    cfg = RouterConfig(max_arms=3, alpha=0.05)
+    prices = jnp.asarray([1e-4, 1e-3, 5.6e-3])
+    state = init_state(cfg, prices, prices, budget=6.6e-4)
+    sel = jax.jit(lambda s, x: router.select(cfg, s, x))
+    x = wh(jnp.asarray(hash_encode(corpus[0])))
+    dec, state = sel(state, x)
+    jax.block_until_ready(dec.arm)
+    t_embed, t_pca, t_route, t_total = [], [], [], []
+    for i in range(n):
+        p = corpus[i % len(corpus)]
+        t0 = time.perf_counter()
+        raw_v = hash_encode(p)
+        t1 = time.perf_counter()
+        x = wh(jnp.asarray(raw_v))
+        x.block_until_ready()
+        t2 = time.perf_counter()
+        dec, state = sel(state, x)
+        dec.arm.block_until_ready()
+        t3 = time.perf_counter()
+        t_embed.append(t1 - t0)
+        t_pca.append(t2 - t1)
+        t_route.append(t3 - t2)
+        t_total.append(t3 - t0)
+    return t_embed, t_pca, t_route, t_total
+
+
+def time_pallas_batch(n_requests=4096):
+    """Batched UCB scoring kernel throughput (requests/s)."""
+    from repro.kernels.linucb_score.ops import linucb_score
+    rng = np.random.default_rng(0)
+    d, K = 26, 3
+    x = jnp.asarray(rng.standard_normal((n_requests, d)), jnp.float32)
+    theta = jnp.asarray(rng.standard_normal((K, d)) * 0.1, jnp.float32)
+    M = rng.standard_normal((K, d, d)) * 0.1
+    A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None]
+    ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+    pen = jnp.asarray([0.0, 0.1, 0.2], jnp.float32)
+    infl = jnp.ones((K,), jnp.float32)
+    out = linucb_score(x, theta, ainv, pen, infl, alpha=0.05)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        out = linucb_score(x, theta, ainv, pen, infl, alpha=0.05)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return n_requests / dt
+
+
+def main():
+    rows = []
+    for d in (26, 385):
+        tr, tu = time_production(d, n=1000)
+        p50r, p95r = _percentiles(tr)
+        p50u, p95u = _percentiles(tu)
+        thr = 1.0 / (np.mean(tr) + np.mean(tu))
+        rows.append([f"paretobandit_d{d}", f"{p50r:.1f}",
+                     f"route_p95={p95r:.1f};update_p50={p50u:.1f};"
+                     f"update_p95={p95u:.1f};req_s={thr:.0f}"])
+    for mode, label in (("sm", "bare_sm"), ("cached_inv", "cached_inv"),
+                        ("per_route_inv", "per_route_inv")):
+        for d in (26, 385):
+            n = 500 if d == 385 else N_CYCLES
+            tr, tu = time_numpy(mode, d, n=n)
+            p50r, _ = _percentiles(tr)
+            p50u, p95u = _percentiles(tu)
+            thr = 1.0 / (np.mean(tr) + np.mean(tu))
+            rows.append([f"{label}_d{d}", f"{p50r:.1f}",
+                         f"update_p50={p50u:.1f};req_s={thr:.0f}"])
+    te, tp, trt, tt = time_e2e()
+    rows.append(["e2e_pipeline_ms", f"{np.percentile(tt, 50) * 1e3:.2f}",
+                 f"embed_p50_ms={np.percentile(te, 50) * 1e3:.2f};"
+                 f"pca_p50_ms={np.percentile(tp, 50) * 1e3:.2f};"
+                 f"route_p50_us={np.percentile(trt, 50) * 1e6:.1f}"])
+    rows.append(["pallas_batch_scoring_req_s", f"{time_pallas_batch():.0f}",
+                 "interpret-mode CPU; TPU is the target"])
+    emit(rows, ["name", "p50_us", "derived"], "latency")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""§Roofline: tabulate the dry-run results (one row per arch x shape x
+mesh) with the three roofline terms, the dominant bottleneck, and the
+useful-FLOPs ratio. Reads benchmarks/results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit
+
+
+def main():
+    rows = []
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*.json")))
+    if not paths:
+        rows.append(["roofline", "no dryrun results",
+                     "run: python -m repro.launch.dryrun --all"])
+        emit(rows, ["name", "value", "derived"], "roofline")
+        return rows
+    for p in paths:
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append([f"{r['arch']}|{r['shape']}|{r.get('mesh','-')}",
+                         "skipped", r["reason"]])
+            continue
+        rows.append([
+            f"{r['arch']}|{r['shape']}|{r['mesh']}",
+            f"{r['bound_s']:.4f}s",
+            f"dom={r['dominant']};compute={r['compute_s']:.4f};"
+            f"memory={r['memory_s']:.4f};coll={r['collective_s']:.4f};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"peakGB={r['memory']['peak_bytes'] / 1e9:.1f}",
+        ])
+    emit(rows, ["name", "bound", "derived"], "roofline")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Emit the EXPERIMENTS.md roofline table from dry-run JSONs."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(r):
+    mem_gb = r["memory"]["peak_bytes"] / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | {mem_gb:.1f} |")
+
+
+def main(d="benchmarks/results/dryrun", mesh="16x16"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(d, f"*_{mesh}.json"))):
+        r = json.load(open(p))
+        if r.get("skipped"):
+            rows.append((r["arch"], r["shape"],
+                         f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — |"))
+            continue
+        rows.append((r["arch"], r["shape"], fmt(r)))
+    rows.sort(key=lambda t: (t[0], ORDER.index(t[1])))
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | useful | peak GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for _, _, line in rows:
+        print(line)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

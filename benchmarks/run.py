@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only NAME ...]``
+
+Prints ``name,value,derived`` CSV rows per benchmark (and saves JSON
+under benchmarks/results/).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("pareto", "Fig. 1: stationary budget pacing frontier"),
+    ("cost_drift", "Table 2 / Fig. 2: budget pacing under cost drift"),
+    ("degradation", "Fig. 3: silent quality degradation"),
+    ("onboarding", "Figs. 4-5: cold-start model onboarding"),
+    ("knee", "Tables 3-4: Pareto knee-point hyperparameters"),
+    ("warmup", "Table 5: warmup-prior ablation"),
+    ("prior_mismatch", "Fig. 9: prior mismatch sensitivity"),
+    ("judges", "App. E: reward-signal robustness across judges"),
+    ("cost_heuristic", "App. B: cost heuristic validation"),
+    ("recovery_limit", "App. G: recovery limit"),
+    ("latency", "Tables 10-11: routing latency microbenchmark"),
+    ("roofline", "Roofline: dry-run roofline table"),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer seeds (CI smoke)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    import importlib
+    failures = []
+    for name, desc in BENCHES:
+        if args.only and name not in args.only:
+            continue
+        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        print(f"# === {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            if args.quick and name in ("pareto", "cost_drift", "degradation",
+                                       "onboarding", "warmup",
+                                       "prior_mismatch", "judges"):
+                mod.main(seeds=tuple(range(5)))
+            elif args.quick and name in ("knee", "recovery_limit"):
+                mod.main(seeds=tuple(range(3)))
+            else:
+                mod.main()
+        except Exception:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""deepseek-7b [dense]: 30L d_model=4096 32H (GQA kv=32) d_ff=11008
+vocab=102400 — llama-arch [arXiv:2401.02954]."""
+from repro.models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="deepseek-7b",
+    arch_type="dense",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=102400,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-7b-smoke",
+    arch_type="dense",
+    num_layers=2,
+    d_model=256,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=512,
+    vocab_size=256,
+    dtype="float32",
+)

@@ -1,0 +1,127 @@
+"""Assigned input shapes and per-(arch, shape) input specs.
+
+``input_specs`` returns ShapeDtypeStructs for every model input — the
+dry-run pattern: weak-type-correct, shardable, no device allocation.
+Decode shapes describe ``serve_step`` (ONE new token against a KV cache of
+``seq_len``); train describes ``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import DecodeCaches, cache_window
+
+SDS = jax.ShapeDtypeStruct
+
+LONG_CONTEXT_WINDOW = 8192  # sliding-window for dense archs at long_500k
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> Optional[ModelConfig]:
+    """Architecture variant used for a given input shape, or None = skip.
+
+    long_500k requires sub-quadratic attention: SSM/hybrid run as-is
+    (O(1) state); dense/moe/vlm run the sliding-window variant (ring
+    buffer of LONG_CONTEXT_WINDOW); whisper skips (enc-dec audio model,
+    500k-token decode is semantically undefined — DESIGN.md §5).
+    """
+    if shape.name == "long_500k":
+        if cfg.is_encdec:
+            return None
+        if cfg.arch_type in ("ssm",):
+            return cfg
+        if cfg.arch_type == "hybrid":
+            # Mamba2 state is O(1); the shared attention block gets the
+            # sliding window so its KV cache stays bounded.
+            return dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+        return dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def token_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    """train_step inputs."""
+    text_seq = seq
+    specs: Dict[str, SDS] = {}
+    if cfg.frontend_tokens > 0 and not cfg.is_encdec:
+        text_seq = seq - cfg.frontend_tokens
+        specs["frontend"] = SDS((batch, cfg.frontend_tokens,
+                                 cfg.frontend_dim), jnp.bfloat16)
+    if cfg.is_encdec:
+        specs["encoder_frames"] = SDS((batch, cfg.encoder_seq,
+                                       cfg.frontend_dim), jnp.bfloat16)
+    specs["tokens"] = SDS((batch, text_seq), jnp.int32)
+    specs["labels"] = SDS((batch, text_seq), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """serve_step inputs: (token, caches) as ShapeDtypeStructs."""
+    dt = cfg.kv_dtype_jnp
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    W = cache_window(cfg, seq_len)
+    kinds = cfg.layer_kinds()
+    if cfg.arch_type == "moe" and cfg.moe_every > 1:
+        n_attn = cfg.num_layers // cfg.moe_every
+        n_secondary = cfg.num_layers - n_attn
+    else:
+        n_attn = sum(1 for k in kinds if k in ("attn", "moe"))
+        n_secondary = 0
+    n_ssm = sum(1 for k in kinds if k == "ssm")
+
+    k = v = ssm_conv = ssm_h = shared_k = shared_v = cross_k = cross_v = None
+    if n_attn:
+        k = SDS((n_attn, batch, W, KV, hd), dt)
+        v = SDS((n_attn, batch, W, KV, hd), dt)
+    if n_ssm:
+        c_ch = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        ssm_conv = SDS((n_ssm, batch, cfg.conv_width - 1, c_ch), dt)
+        ssm_h = SDS((n_ssm, batch, cfg.ssm_heads, cfg.ssm_state,
+                     cfg.ssm_head_dim), jnp.float32)
+    if cfg.arch_type == "hybrid":
+        n_secondary = cfg.num_layers // cfg.shared_attn_every
+    if n_secondary:
+        shared_k = SDS((n_secondary, batch, W, KV, hd), dt)
+        shared_v = SDS((n_secondary, batch, W, KV, hd), dt)
+    if cfg.is_encdec:
+        cross_k = SDS((cfg.num_layers, batch, cfg.encoder_seq, KV, hd), dt)
+        cross_v = SDS((cfg.num_layers, batch, cfg.encoder_seq, KV, hd), dt)
+
+    token = SDS((batch, 1), jnp.int32)
+    caches = DecodeCaches(
+        k=k, v=v, ssm_conv=ssm_conv, ssm_h=ssm_h,
+        shared_k=shared_k, shared_v=shared_v,
+        cross_k=cross_k, cross_v=cross_v,
+        pos=SDS((), jnp.int32),
+    )
+    return token, caches
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """All model inputs for (arch, shape) as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        return token_batch_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "prefill":
+        return token_batch_specs(cfg, shape.global_batch, shape.seq_len)
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape.global_batch, shape.seq_len)
+    raise ValueError(shape.kind)

@@ -1,0 +1,18 @@
+"""ParetoBandit core: the paper's contribution as a composable JAX module."""
+from repro.core.types import (  # noqa: F401
+    ArmPrior,
+    PacerState,
+    RouterConfig,
+    RouterState,
+    init_state,
+    log_normalized_cost,
+)
+from repro.core.router import Decision, select, update, step, run_stream  # noqa: F401
+from repro.core.registry import add_arm, delete_arm, set_price  # noqa: F401
+from repro.core.warmup import (  # noqa: F401
+    apply_warmup,
+    fit_offline_prior,
+    n_eff_to_t_adapt,
+    scale_prior,
+    t_adapt_to_n_eff,
+)

@@ -1,0 +1,196 @@
+"""Multi-seed simulation harness shared by benchmarks and tests.
+
+Runs Algorithm 1 over an offline Environment stream with jax.lax.scan,
+vmapped over seeds, and reduces traces to the paper's metrics (mean
+reward, mean cost, compliance ratio, per-arm allocation, regret).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import router, warmup
+from repro.core.simulator import Environment
+from repro.core.types import ArmPrior, RouterConfig, RouterState, init_state
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    arms: np.ndarray     # (S, T) chosen arm per seed/step
+    rewards: np.ndarray  # (S, T)
+    costs: np.ndarray    # (S, T)
+    lams: np.ndarray     # (S, T) dual variable trace
+
+    @property
+    def mean_reward(self) -> float:
+        return float(self.rewards.mean())
+
+    @property
+    def mean_cost(self) -> float:
+        return float(self.costs.mean())
+
+    def compliance(self, budget: float) -> float:
+        """Realised mean cost as a multiple of the ceiling (1.0 = at)."""
+        return float(self.costs.mean() / budget)
+
+    def allocation(self, k: int) -> np.ndarray:
+        """(K,) fraction of traffic per arm."""
+        return np.asarray(
+            [(self.arms == a).mean() for a in range(k)], dtype=np.float64
+        )
+
+    def phase(self, start: int, stop: int) -> "RunResult":
+        return RunResult(
+            arms=self.arms[:, start:stop],
+            rewards=self.rewards[:, start:stop],
+            costs=self.costs[:, start:stop],
+            lams=self.lams[:, start:stop],
+        )
+
+    def regret_vs_oracle(self, env_rewards: np.ndarray) -> np.ndarray:
+        """(S,) cumulative regret vs the per-prompt oracle."""
+        oracle = env_rewards.max(axis=1)  # (T,)
+        return (oracle[None, :] - self.rewards).sum(axis=1)
+
+
+def make_states(
+    cfg: RouterConfig,
+    env: Environment,
+    budget: float,
+    seeds: Sequence[int],
+    *,
+    priors: Optional[Sequence[ArmPrior | None]] = None,
+    n_eff: float = 0.0,
+    pacer_enabled: bool = True,
+    active_arms: Optional[int] = None,
+) -> RouterState:
+    """Stacked (vmapped) initial states, one per seed."""
+    k = env.k
+    assert k <= cfg.max_arms, (k, cfg.max_arms)
+    pad = cfg.max_arms - k
+    preq = np.concatenate([env.prices_per_req, np.full(pad, 1e9)]).astype(np.float32)
+    p1k = np.concatenate([env.prices_per_1k, np.full(pad, 1e9)]).astype(np.float32)
+    n_active = k if active_arms is None else active_arms
+    active = np.zeros(cfg.max_arms, bool)
+    active[:n_active] = True
+
+    def one(seed):
+        st = init_state(
+            cfg, preq, p1k, budget,
+            key=jax.random.PRNGKey(seed), active=jnp.asarray(active),
+            pacer_enabled=pacer_enabled,
+        )
+        if priors is not None and n_eff > 0:
+            st = warmup.apply_warmup(cfg, st, list(priors) + [None] * pad, n_eff)
+        return st
+
+    states = [one(int(s)) for s in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def _pad_env_arrays(cfg: RouterConfig, env: Environment):
+    """Pad (T, K) matrices out to max_arms with harmless fillers."""
+    pad = cfg.max_arms - env.k
+    rewards = np.concatenate(
+        [env.rewards, np.zeros((env.n, pad), np.float32)], axis=1
+    )
+    costs = np.concatenate(
+        [env.costs, np.full((env.n, pad), 1e9, np.float32)], axis=1
+    )
+    return jnp.asarray(env.contexts), jnp.asarray(rewards), jnp.asarray(costs)
+
+
+def run(
+    cfg: RouterConfig,
+    env: Environment | Sequence[Environment],
+    budget: float,
+    seeds: Sequence[int] = tuple(range(20)),
+    *,
+    priors: Optional[Sequence[ArmPrior | None]] = None,
+    n_eff: float = 0.0,
+    pacer_enabled: bool = True,
+    states: Optional[RouterState] = None,
+    shuffle: bool = True,
+    return_states: bool = False,
+):
+    """Vectorised multi-seed run of Algorithm 1 over an environment stream.
+
+    ``env`` is either one Environment (per-seed prompt order is then a
+    seed-specific permutation unless ``shuffle=False``) or a sequence of
+    per-seed Environments of equal length (phase experiments build one
+    ordered stream per seed and pass them here; no further shuffling).
+    """
+    if isinstance(env, (list, tuple)):
+        assert len(env) == len(seeds), (len(env), len(seeds))
+        padded = [_pad_env_arrays(cfg, e) for e in env]
+        xs = jnp.stack([p[0] for p in padded])
+        rmat = jnp.stack([p[1] for p in padded])
+        cmat = jnp.stack([p[2] for p in padded])
+        env0 = env[0]
+        stream_axes = 0
+    else:
+        xs, rmat, cmat = _pad_env_arrays(cfg, env)
+        env0 = env
+        if shuffle:
+            perms = np.stack([
+                np.random.default_rng(int(s)).permutation(env.n) for s in seeds
+            ])
+            xs = xs[jnp.asarray(perms)]
+            rmat = rmat[jnp.asarray(perms)]
+            cmat = cmat[jnp.asarray(perms)]
+            stream_axes = 0
+        else:
+            stream_axes = None
+    if states is None:
+        states = make_states(
+            cfg, env0, budget, seeds,
+            priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+        )
+
+    run_fn = _cached_run_fn(cfg, stream_axes)
+    finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
+    res = RunResult(
+        arms=np.asarray(arms), rewards=np.asarray(r),
+        costs=np.asarray(c), lams=np.asarray(lam),
+    )
+    if return_states:
+        return res, finals
+    return res
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_run_fn(cfg: RouterConfig, stream_axes):
+    """One jitted sweep function per (RouterConfig, stream layout) — the
+    hyper-parameter grids re-enter with identical signatures thousands of
+    times, so caching the jit wrapper avoids retrace-per-call."""
+
+    def one_seed(state, x, rm, cm):
+        final, trace = router.run_stream(cfg, state, x, rm, cm)
+        return final, trace
+
+    return jax.jit(
+        jax.vmap(one_seed, in_axes=(0, stream_axes, stream_axes, stream_axes))
+    )
+
+
+def fit_warmup_priors(
+    cfg: RouterConfig, env: Environment, lambda0: float = 1.0
+):
+    """Fit per-arm offline priors from a train-split environment, emulating
+    the paper's offline characterisation (every arm sees every prompt)."""
+    priors = []
+    for a in range(env.k):
+        priors.append(
+            warmup.fit_offline_prior(
+                jnp.asarray(env.contexts), jnp.asarray(env.rewards[:, a]),
+                lambda0=lambda0,
+            )
+        )
+    return priors

@@ -1,0 +1,93 @@
+"""Context featurisation (§2.2).
+
+The paper encodes prompts with all-MiniLM-L6-v2 (384-d), projects to 25 PCA
+components whitened to unit variance, and appends a bias term (d = 26).
+
+This container is offline, so the encoder is pluggable. We ship a
+deterministic hashing n-gram encoder (384-d, the same width as MiniLM) so
+that real text prompts can be routed end-to-end; the PCA + whitening +
+bias pipeline is implemented in JAX and is identical regardless of the
+upstream encoder. Simulation benchmarks bypass the text encoder and draw
+contexts from the task-family generative model in simulator.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+RAW_DIM = 384   # MiniLM-L6-v2 width; hashing encoder matches it
+PCA_DIM = 25    # components kept, + 1 bias -> d = 26
+
+
+def _hash_token(tok: str, seed: int) -> int:
+    h = hashlib.blake2b(f"{seed}:{tok}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "little")
+
+
+def hash_encode(text: str, dim: int = RAW_DIM) -> np.ndarray:
+    """Deterministic bag-of-ngrams hashing embedding (signed feature
+    hashing over unigrams + bigrams), L2-normalised."""
+    toks = text.lower().split()
+    grams = toks + [f"{a}_{b}" for a, b in zip(toks, toks[1:])]
+    v = np.zeros((dim,), np.float32)
+    for g in grams:
+        h = _hash_token(g, 0)
+        idx = h % dim
+        sign = 1.0 if (h >> 32) & 1 else -1.0
+        v[idx] += sign
+    n = np.linalg.norm(v)
+    return v / n if n > 0 else v
+
+
+def hash_encode_batch(texts: Sequence[str], dim: int = RAW_DIM) -> np.ndarray:
+    return np.stack([hash_encode(t, dim) for t in texts])
+
+
+@dataclasses.dataclass(frozen=True)
+class PCAWhitener:
+    """PCA projection + whitening + bias append, fitted offline (the paper
+    fits on ~46k disjoint LMSYS prompts; we fit on any offline corpus)."""
+
+    mean: Array        # (raw_dim,)
+    components: Array  # (pca_dim, raw_dim)
+    scale: Array       # (pca_dim,) 1/sqrt(explained variance)
+
+    @property
+    def d(self) -> int:
+        return self.components.shape[0] + 1
+
+    def __call__(self, raw: Array) -> Array:
+        """(..., raw_dim) -> (..., pca_dim + 1) whitened + bias."""
+        z = (raw - self.mean) @ self.components.T * self.scale
+        bias = jnp.ones(z.shape[:-1] + (1,), z.dtype)
+        return jnp.concatenate([z, bias], axis=-1)
+
+
+def fit_pca_whitener(
+    raw: Array, pca_dim: int = PCA_DIM, eps: float = 1e-6
+) -> PCAWhitener:
+    """Fit PCA + whitening in JAX via SVD of the centred design matrix."""
+    raw = jnp.asarray(raw, jnp.float32)
+    n = raw.shape[0]
+    mean = raw.mean(axis=0)
+    xc = raw - mean
+    # Economy SVD: components are right singular vectors.
+    _, s, vt = jnp.linalg.svd(xc, full_matrices=False)
+    comps = vt[:pca_dim]
+    var = (s[:pca_dim] ** 2) / jnp.maximum(n - 1, 1)
+    scale = 1.0 / jnp.sqrt(var + eps)
+    return PCAWhitener(mean=mean, components=comps, scale=scale)
+
+
+def featurize_texts(texts: Sequence[str], whitener: PCAWhitener) -> Array:
+    """End-to-end prompt -> context vector x_t (the synchronous path's
+    feature extractor, §3.1)."""
+    raw = jnp.asarray(hash_encode_batch(texts))
+    return whitener(raw)

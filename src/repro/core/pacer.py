@@ -1,0 +1,66 @@
+"""Budget pacer: smoothed primal-dual rate control (§3.2, Eqs. 3-4).
+
+Two-layer enforcement:
+  * soft penalty   — lambda_t enters the UCB score (router.py, Eq. 2);
+  * hard ceiling   — when lambda_t > 0, arms priced above
+                     c_max / (1 + lambda_t) are excluded (circuit breaker).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PacerState, RouterConfig
+
+Array = jax.Array
+
+
+def pacer_update(cfg: RouterConfig, p: PacerState, cost: Array) -> PacerState:
+    """Algorithm 1 lines 25-26.
+
+    c_ema <- (1 - a_ema) c_ema + a_ema * c_t                       (Eq. 3)
+    lam   <- clip(lam + eta * (c_ema / B - 1), 0, lambda_bar)      (Eq. 4)
+
+    Normalising the gradient by B makes eta portfolio-independent.
+    When the pacer is disabled (ablations), lambda stays frozen at its
+    current value (zero unless explicitly set).
+    """
+    c_ema = (1.0 - cfg.alpha_ema) * p.c_ema + cfg.alpha_ema * cost
+    lam = jnp.clip(p.lam + cfg.eta * (c_ema / p.budget - 1.0), 0.0, cfg.lambda_bar)
+    lam = jnp.where(p.enabled, lam, p.lam)
+    c_ema = jnp.where(p.enabled, c_ema, p.c_ema)
+    return PacerState(lam=lam, c_ema=c_ema, budget=p.budget, enabled=p.enabled)
+
+
+def hard_ceiling_mask(
+    cfg: RouterConfig, p: PacerState, price: Array, active: Array
+) -> Array:
+    """Algorithm 1 lines 4-8: candidate set under the dynamic price ceiling.
+
+    A_t = {a : c_a <= c_max^A / (1 + lambda_t)}  when lambda_t > 0, else A.
+    c_max^A is the most expensive *active* rate. Guaranteed non-empty for
+    any lambda_t <= lambda_bar as long as one active arm is priced at
+    <= c_max/(1+lambda_bar); we additionally fall back to the cheapest
+    active arm if the mask empties (cannot happen with lambda_bar=5 and a
+    530x spread, but keeps the kernel total).
+    """
+    c_max = jnp.max(jnp.where(active, price, -jnp.inf))
+    ceiling = c_max / (1.0 + p.lam)
+    mask = jnp.where(p.lam > 0.0, price <= ceiling, True) & active
+    mask = jnp.where(p.enabled, mask, active)
+    # Fallback: never return an empty candidate set.
+    cheapest = jnp.argmin(jnp.where(active, price, jnp.inf))
+    empty = ~jnp.any(mask)
+    return jnp.where(
+        empty, jnp.zeros_like(mask).at[cheapest].set(True) & active, mask
+    )
+
+
+def set_budget(p: PacerState, budget: float) -> PacerState:
+    """Operator retargets the ceiling at runtime (no recompilation)."""
+    return PacerState(
+        lam=p.lam,
+        c_ema=p.c_ema,
+        budget=jnp.asarray(budget, jnp.float32),
+        enabled=p.enabled,
+    )

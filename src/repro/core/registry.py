@@ -1,0 +1,123 @@
+"""Hot-swap model registry (§3.6).
+
+Arms live in fixed-capacity slots of ``RouterState``; adding/removing a
+model flips the ``active`` mask and (re)initialises that slot's statistics,
+so the jitted routing step never recompiles across portfolio changes.
+
+``add_arm`` supports three initialisations:
+  * uninformative    — A = lambda0*I, b = 0 (cold start);
+  * heuristic prior  — n_eff pseudo-observations at isotropic uncertainty
+                       with a bias-only reward prediction (§3.4);
+  * offline prior    — scaled offline sufficient statistics (warmup.py).
+
+A newly added arm can be given a forced-exploration burn-in
+(cfg.forced_pulls unconditional routes, §4.5), after which UCB takes over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArmPrior, RouterConfig, RouterState, log_normalized_cost
+from repro.core import warmup as warmup_lib
+
+Array = jax.Array
+
+
+def _replace(state: RouterState, **kw) -> RouterState:
+    return dataclasses.replace(state, **kw)
+
+
+def heuristic_prior(cfg: RouterConfig, n_eff: float, bias_reward: float):
+    """§3.4: for models absent from offline data — n_eff pseudo-observations
+    at isotropic uncertainty with a bias-only reward prediction. Assumes the
+    bias coordinate is the last feature (features.py appends it)."""
+    d = cfg.d
+    A = jnp.eye(d, dtype=jnp.float32) * (cfg.lambda0 + n_eff / d)
+    b = jnp.zeros((d,), jnp.float32).at[d - 1].set(bias_reward * n_eff / d)
+    return A, b
+
+
+def add_arm(
+    cfg: RouterConfig,
+    state: RouterState,
+    slot: int,
+    price_per_req: float,
+    price_per_1k: float,
+    *,
+    prior: Optional[ArmPrior] = None,
+    n_eff: Optional[float] = None,
+    bias_reward: float = 0.5,
+    forced_exploration: bool = True,
+) -> RouterState:
+    """Register a model into ``slot`` at runtime. Host-side (not jitted):
+    portfolio changes are rare control-plane events."""
+    d = cfg.d
+    if prior is not None:
+        A, b = warmup_lib.scale_prior(cfg, prior, n_eff or 1.0)
+    elif n_eff is not None and n_eff > 0:
+        A, b = heuristic_prior(cfg, n_eff, bias_reward)
+    else:
+        A = jnp.eye(d, dtype=jnp.float32) * cfg.lambda0
+        b = jnp.zeros((d,), jnp.float32)
+    A_inv = jnp.linalg.inv(A)
+    theta = A_inv @ b
+    c_t = log_normalized_cost(jnp.asarray(price_per_1k, jnp.float32), cfg)
+    state = _replace(
+        state,
+        A=state.A.at[slot].set(A),
+        A_inv=state.A_inv.at[slot].set(A_inv),
+        b=state.b.at[slot].set(b),
+        theta=state.theta.at[slot].set(theta),
+        last_upd=state.last_upd.at[slot].set(state.t),
+        last_play=state.last_play.at[slot].set(state.t),
+        active=state.active.at[slot].set(True),
+        price=state.price.at[slot].set(price_per_req),
+        c_tilde=state.c_tilde.at[slot].set(c_t),
+    )
+    if forced_exploration:
+        state = _replace(
+            state,
+            force_arm=jnp.asarray(slot, jnp.int32),
+            force_left=jnp.asarray(cfg.forced_pulls, jnp.int32),
+        )
+    return state
+
+
+def delete_arm(cfg: RouterConfig, state: RouterState, slot: int) -> RouterState:
+    """Retire a model. Its statistics are zeroed so a future ``add_arm`` into
+    the same slot starts clean; any in-flight forced exploration of the slot
+    is cancelled."""
+    d = cfg.d
+    cancel = state.force_arm == slot
+    return _replace(
+        state,
+        A=state.A.at[slot].set(jnp.eye(d, dtype=jnp.float32) * cfg.lambda0),
+        A_inv=state.A_inv.at[slot].set(jnp.eye(d, dtype=jnp.float32) / cfg.lambda0),
+        b=state.b.at[slot].set(jnp.zeros((d,), jnp.float32)),
+        theta=state.theta.at[slot].set(jnp.zeros((d,), jnp.float32)),
+        active=state.active.at[slot].set(False),
+        force_arm=jnp.where(cancel, jnp.asarray(-1, jnp.int32), state.force_arm),
+        force_left=jnp.where(cancel, jnp.asarray(0, jnp.int32), state.force_left),
+    )
+
+
+def set_price(
+    cfg: RouterConfig, state: RouterState, slot: int,
+    price_per_req: float, price_per_1k: float,
+) -> RouterState:
+    """Reprice an arm (provider price change). The pacer reacts to realised
+    costs automatically; this keeps the hard ceiling and Eq. 6 in sync."""
+    c_t = log_normalized_cost(jnp.asarray(price_per_1k, jnp.float32), cfg)
+    return _replace(
+        state,
+        price=state.price.at[slot].set(price_per_req),
+        c_tilde=state.c_tilde.at[slot].set(c_t),
+    )
+
+
+def num_active(state: RouterState) -> int:
+    return int(jnp.sum(state.active))

@@ -1,0 +1,142 @@
+"""ParetoBandit Algorithm 1: budget-paced non-stationary routing.
+
+``select`` and ``update`` are pure jittable functions over ``RouterState``;
+``step`` fuses them for scan-based simulation (benchmarks run 20 seeds x
+1,824 steps via ``jax.vmap`` over seeds + ``jax.lax.scan`` over steps).
+
+The synchronous inference path is ``select``; the asynchronous feedback
+path is ``update`` (context cached at route time by the caller, §3.1, so
+late rewards never re-encode the prompt).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linucb, pacer
+from repro.core.types import RouterConfig, RouterState
+
+Array = jax.Array
+
+NEG_INF = jnp.float32(-1e30)
+
+
+class Decision(NamedTuple):
+    arm: Array         # scalar i32 — chosen arm slot
+    scores: Array      # (K,) f32   — Eq. 2 scores (NEG_INF for excluded)
+    candidates: Array  # (K,) bool  — post-hard-ceiling candidate set
+    lam: Array         # scalar f32 — dual variable at decision time
+    forced: Array      # scalar bool — forced-exploration override fired
+
+
+def select(cfg: RouterConfig, state: RouterState, x: Array):
+    """Algorithm 1 lines 3-15. Returns (Decision, new_state).
+
+    Only bookkeeping (t, last_play, tiebreak key, forced counter) changes
+    here; sufficient statistics change in ``update``.
+    """
+    cand = pacer.hard_ceiling_mask(cfg, state.pacer, state.price, state.active)
+    dt = state.t - jnp.maximum(state.last_upd, state.last_play)   # line 10
+    scores = linucb.ucb_scores(
+        cfg, state.theta, state.A_inv, state.c_tilde, x, dt, state.pacer.lam
+    )
+    key, sub = jax.random.split(state.key)
+    noise = cfg.tiebreak_scale * jax.random.uniform(sub, scores.shape)
+    masked = jnp.where(cand, scores + noise, NEG_INF)             # line 13
+    arm = jnp.argmax(masked).astype(jnp.int32)                    # line 14
+
+    # Forced-exploration burn-in for a hot-swapped arm (§3.6/§4.5): route
+    # unconditionally to the newcomer while pulls remain and it is active.
+    forced = (state.force_left > 0) & (state.force_arm >= 0)
+    forced = forced & state.active[jnp.clip(state.force_arm, 0)]
+    arm = jnp.where(forced, jnp.clip(state.force_arm, 0), arm)
+
+    t_new = state.t + 1                                           # line 15
+    new_state = RouterState(
+        A=state.A,
+        A_inv=state.A_inv,
+        b=state.b,
+        theta=state.theta,
+        last_upd=state.last_upd,
+        last_play=state.last_play.at[arm].set(t_new),
+        active=state.active,
+        price=state.price,
+        c_tilde=state.c_tilde,
+        t=t_new,
+        pacer=state.pacer,
+        force_arm=state.force_arm,
+        force_left=jnp.where(forced, state.force_left - 1, state.force_left),
+        key=key,
+    )
+    dec = Decision(
+        arm=arm, scores=masked, candidates=cand, lam=state.pacer.lam,
+        forced=forced,
+    )
+    return dec, new_state
+
+
+def update(
+    cfg: RouterConfig,
+    state: RouterState,
+    arm: Array,
+    x: Array,
+    reward: Array,
+    cost: Array,
+) -> RouterState:
+    """Algorithm 1 lines 17-26: geometric-forgetting reward update for the
+    played arm + budget-pacer dual ascent on the realised cost."""
+    dt = state.t - state.last_upd[arm]                            # line 18
+    A_a, Ainv_a, b_a, theta_a = linucb.rank1_update(
+        cfg, state.A[arm], state.A_inv[arm], state.b[arm], x, reward, dt
+    )
+    p = pacer.pacer_update(cfg, state.pacer, cost)                # lines 25-26
+    return RouterState(
+        A=state.A.at[arm].set(A_a),
+        A_inv=state.A_inv.at[arm].set(Ainv_a),
+        b=state.b.at[arm].set(b_a),
+        theta=state.theta.at[arm].set(theta_a),
+        last_upd=state.last_upd.at[arm].set(state.t),             # line 23
+        last_play=state.last_play,
+        active=state.active,
+        price=state.price,
+        c_tilde=state.c_tilde,
+        t=state.t,
+        pacer=p,
+        force_arm=state.force_arm,
+        force_left=state.force_left,
+        key=state.key,
+    )
+
+
+def step(cfg: RouterConfig, state: RouterState, x: Array, rewards: Array,
+         costs: Array):
+    """One full closed-loop step against a (K,)-vector environment: select,
+    observe the chosen arm's (reward, cost), update. For simulation sweeps.
+
+    Returns (new_state, (arm, reward, cost, lam)).
+    """
+    dec, state = select(cfg, state, x)
+    r = rewards[dec.arm]
+    c = costs[dec.arm]
+    state = update(cfg, state, dec.arm, x, r, c)
+    return state, (dec.arm, r, c, dec.lam)
+
+
+def run_stream(cfg: RouterConfig, state: RouterState, xs: Array,
+               rewards: Array, costs: Array):
+    """Scan Algorithm 1 over a request stream.
+
+    Args:
+      xs: (T, d) contexts; rewards/costs: (T, K) full environment matrices
+      (the router only ever reads the chosen arm's entry — bandit feedback).
+
+    Returns (final_state, trace) where trace = (arms, r, c, lam) each (T,).
+    """
+
+    def body(s, inp):
+        x, rv, cv = inp
+        return step(cfg, s, x, rv, cv)
+
+    return jax.lax.scan(body, state, (xs, rewards, costs))

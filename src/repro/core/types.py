@@ -1,0 +1,161 @@
+"""Core datatypes for the ParetoBandit router.
+
+Everything the per-step routing loop touches lives in ``RouterState``, a
+registered pytree of fixed-capacity arrays (``max_arms`` slots with an
+``active`` mask) so that ``add_arm``/``delete_arm`` never change array
+shapes and the jitted step functions never recompile on portfolio changes
+(the paper's hot-swap registry, §3.6).
+
+All hyper-parameters are static and live in ``RouterConfig`` (hashable, so
+it can be a jit static argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Static hyper-parameters of Algorithm 1.
+
+    Defaults are the paper's production configuration (knee-point selection,
+    Appendix A Table 3): alpha=0.01, gamma=0.997, n_eff=1164.
+    """
+
+    d: int = 26                  # context dim (25 PCA + bias), §2.2
+    max_arms: int = 8            # fixed registry capacity (K <= max_arms)
+    alpha: float = 0.01          # UCB exploration coefficient
+    gamma: float = 0.997         # geometric forgetting factor, §3.3
+    lambda_c: float = 0.3        # static cost penalty weight, Eq. 2
+    lambda0: float = 1.0         # ridge regularisation A_a = lambda0*I
+    eta: float = 0.05            # dual ascent step size, Eq. 4
+    alpha_ema: float = 0.05      # EMA smoothing of the cost signal, Eq. 3
+    lambda_bar: float = 5.0      # projection cap for lambda_t, Eq. 4
+    v_max: float = 200.0         # staleness-inflation cap, Eq. 9
+    c_floor: float = 1e-4        # market cost floor ($/1k tok), Eq. 6
+    c_ceil: float = 0.1          # market cost ceiling ($/1k tok), Eq. 6
+    forced_pulls: int = 20       # burn-in pulls for a hot-swapped arm, §4.5
+    dt_max: int = 4096           # numerical clamp on forgetting exponents
+    tiebreak_scale: float = 1e-7  # random tiebreak noise amplitude
+
+    def __post_init__(self):
+        assert 0.0 < self.gamma <= 1.0, "gamma must be in (0, 1]"
+        assert self.d >= 2 and self.max_arms >= 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PacerState:
+    """Budget pacer state (Eqs. 3-4). ``budget`` B is state, not config,
+    so operators can re-target the ceiling at runtime without recompiling."""
+
+    lam: Array      # scalar f32, dual variable lambda_t >= 0
+    c_ema: Array    # scalar f32, EMA-smoothed realised cost  (init: B)
+    budget: Array   # scalar f32, per-request ceiling B ($/req)
+    enabled: Array  # scalar bool — False recovers the "no pacer" ablations
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RouterState:
+    """Full ParetoBandit state: per-arm sufficient statistics + pacer.
+
+    Shapes use K = cfg.max_arms, d = cfg.d.
+    """
+
+    A: Array          # (K, d, d) f32 design matrices (ridge included)
+    A_inv: Array      # (K, d, d) f32 cached inverses (Sherman-Morrison)
+    b: Array          # (K, d)    f32 reward accumulators
+    theta: Array      # (K, d)    f32 ridge solutions A^{-1} b
+    last_upd: Array   # (K,) i32  step of last statistics update
+    last_play: Array  # (K,) i32  step of last dispatch
+    active: Array     # (K,) bool registry mask
+    price: Array      # (K,) f32  blended $/request (hard-ceiling + EMA use this)
+    c_tilde: Array    # (K,) f32  log-normalised unit cost in [0,1], Eq. 6
+    t: Array          # scalar i32 global step
+    pacer: PacerState
+    force_arm: Array   # scalar i32, -1 when no forced exploration
+    force_left: Array  # scalar i32, remaining forced pulls
+    key: Array         # PRNG key for random tiebreaks
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmPrior:
+    """Offline sufficient statistics for warm start (§3.4)."""
+
+    A_off: jnp.ndarray   # (d, d)
+    b_off: jnp.ndarray   # (d,)
+
+    @property
+    def theta_off(self) -> jnp.ndarray:
+        return jnp.linalg.solve(self.A_off, self.b_off)
+
+
+def log_normalized_cost(price_per_1k: Array, cfg: RouterConfig) -> Array:
+    """Eq. 6: compress the ~530x price range into [0, 1] on a log scale.
+
+    ``price_per_1k`` is the blended $/1k-token rate. Values at or below the
+    market floor map to 0 (the paper: "any model priced at or below the
+    floor is treated as zero-cost").
+    """
+    num = jnp.log(jnp.maximum(price_per_1k, cfg.c_floor)) - jnp.log(cfg.c_floor)
+    den = jnp.log(cfg.c_ceil) - jnp.log(cfg.c_floor)
+    return jnp.clip(num / den, 0.0, 1.0)
+
+
+def init_state(
+    cfg: RouterConfig,
+    prices_per_req: jnp.ndarray,
+    prices_per_1k: jnp.ndarray,
+    budget: float,
+    *,
+    key: Optional[Array] = None,
+    active: Optional[jnp.ndarray] = None,
+    pacer_enabled: bool = True,
+) -> RouterState:
+    """Uninformative (tabula-rasa) initial state; warm start via warmup.py.
+
+    Args:
+      prices_per_req: (K,) blended realised $/request per arm (used by the
+        hard ceiling and reported compliance).
+      prices_per_1k: (K,) blended $/1k-token rate per arm (drives Eq. 6).
+      budget: operator ceiling B in $/request.
+    """
+    K, d = cfg.max_arms, cfg.d
+    prices_per_req = jnp.asarray(prices_per_req, jnp.float32)
+    prices_per_1k = jnp.asarray(prices_per_1k, jnp.float32)
+    assert prices_per_req.shape == (K,), (prices_per_req.shape, K)
+    if active is None:
+        active = jnp.ones((K,), bool)
+    eye = jnp.eye(d, dtype=jnp.float32)
+    A = jnp.tile(eye[None] * cfg.lambda0, (K, 1, 1))
+    A_inv = jnp.tile(eye[None] / cfg.lambda0, (K, 1, 1))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return RouterState(
+        A=A,
+        A_inv=A_inv,
+        b=jnp.zeros((K, d), jnp.float32),
+        theta=jnp.zeros((K, d), jnp.float32),
+        last_upd=jnp.zeros((K,), jnp.int32),
+        last_play=jnp.zeros((K,), jnp.int32),
+        active=jnp.asarray(active, bool),
+        price=prices_per_req,
+        c_tilde=log_normalized_cost(prices_per_1k, cfg),
+        t=jnp.zeros((), jnp.int32),
+        pacer=PacerState(
+            lam=jnp.zeros((), jnp.float32),
+            c_ema=jnp.asarray(budget, jnp.float32),  # \bar c_0 <- B (Alg. 1)
+            budget=jnp.asarray(budget, jnp.float32),
+            enabled=jnp.asarray(pacer_enabled, bool),
+        ),
+        force_arm=jnp.asarray(-1, jnp.int32),
+        force_left=jnp.zeros((), jnp.int32),
+        key=key,
+    )

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticLMDataset, make_request_stream,
+)

@@ -1,0 +1,104 @@
+"""Pallas TPU decode-attention kernel: one query token vs a KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams through VMEM
+once per token); the kernel keeps all G query heads of one kv head
+resident and streams kv blocks, carrying the online-softmax state in VMEM
+scratch. Grid: (batch*kv_heads, num_kv_blocks), kv-block axis innermost.
+
+Invalid cache slots (ring-buffer wrap / unwritten / outside the sliding
+window) are masked via a validity vector computed by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,      # (1, G, hd)
+    k_ref,      # (1, bkv, hd)
+    v_ref,      # (1, bkv, hd)
+    valid_ref,  # (1, bkv) f32 {0,1}
+    o_ref,      # (1, G, hd)
+    m_ref, l_ref, acc_ref,
+    *, num_kv_blocks: int, scale: float,
+):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0].astype(jnp.float32)           # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    valid = valid_ref[0] > 0.5                 # (bkv,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (G, bkv)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_bkv(
+    q: jax.Array,      # (B*KV, G, hd)
+    k: jax.Array,      # (B*KV, W, hd)
+    v: jax.Array,
+    valid: jax.Array,  # (B*KV, W) f32
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    BKV, G, hd = q.shape
+    W = k.shape[1]
+    block_kv = min(block_kv, W)
+    assert W % block_kv == 0
+    nk = W // block_kv
+    if scale is None:
+        scale = 1.0 / float(hd) ** 0.5
+    kernel = functools.partial(
+        _decode_kernel, num_kv_blocks=nk, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, kj: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, kj: (b, kj, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, kj: (b, kj, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, kj: (b, kj)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, kj: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

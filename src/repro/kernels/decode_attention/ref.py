@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid):
+    """q (B,1,H,hd), k/v (B,W,KV,hd), valid (W,) bool -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    kx = jnp.repeat(k_cache, G, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v_cache, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx)
+    s = s / jnp.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vx)
+    return out.astype(q.dtype)

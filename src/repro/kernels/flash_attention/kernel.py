@@ -1,0 +1,125 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks); the kv-block axis is the
+innermost (sequential on TPU), so VMEM scratch carries the online-softmax
+state (m, l, acc) across kv blocks for a fixed (bh, qi). Block shapes are
+MXU-aligned: q/k tiles (block_q x head_dim) and (block_kv x head_dim) with
+head_dim padded to a multiple of 128 by ops.py.
+
+GQA is handled in the k/v index maps: query head h reads kv head h // G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    # prefetch-style scalar args baked in via functools.partial:
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, block_q: int, block_kv: int, mode: str, window: int, scale: float,
+    num_kv_blocks: int,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                  # (bq, bkv)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    d = q_pos - k_pos
+    if mode == "causal":
+        mask = d >= 0
+    elif mode == "sliding":
+        mask = (d >= 0) & (d < window)
+    else:  # full
+        mask = jnp.ones_like(s, bool)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q: jax.Array,   # (BH, S, hd)  flattened batch*query-heads
+    k: jax.Array,   # (BKV, T, hd) flattened batch*kv-heads
+    v: jax.Array,
+    *,
+    groups: int,            # query heads per kv head (GQA)
+    num_q_heads: int,
+    mode: str = "causal",
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+    scale: float | None = None,
+) -> jax.Array:
+    BH, S, hd = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0
+    nq, nk = S // block_q, T // block_kv
+    if scale is None:  # NOTE: hd here may be padded; callers pass true scale
+        scale = 1.0 / float(hd) ** 0.5
+
+    def kv_index(bh, qi, kj):
+        b = bh // num_q_heads
+        h = bh % num_q_heads
+        return (b * (num_q_heads // groups) + h // groups, kj, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, block_q=block_q, block_kv=block_kv, mode=mode,
+        window=window, scale=scale, num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+            pl.BlockSpec((1, block_kv, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),      # l (running sum)
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

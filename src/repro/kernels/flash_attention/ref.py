@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import naive_attention
+
+
+def flash_attention_ref(q, k, v, mode: str = "causal", window: int = 0):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
+    S, T = q.shape[1], k.shape[1]
+    return naive_attention(
+        q, k, v, jnp.arange(S), jnp.arange(T), mode=mode, window=window
+    )

@@ -1,0 +1,1 @@
+from repro.kernels.linucb_score.ops import linucb_score  # noqa: F401

@@ -1,0 +1,39 @@
+"""jit'd wrapper: pads (requests, d, arms) to kernel-friendly shapes and
+derives the Eq. 2 penalty/inflation vectors from RouterState."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linucb_score.kernel import linucb_score_blocked
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "block_r", "interpret", "pad_d")
+)
+def linucb_score(
+    x, theta, ainv, pen, infl, *, alpha: float, block_r: int = 256,
+    interpret: bool = True, pad_d: int = 32,
+):
+    """x (R,d), theta (K,d), ainv (K,d,d), pen (K,), infl (K,) -> (R,K).
+
+    d is padded to a lane-friendly multiple (zero-padded contexts leave the
+    quadratic form unchanged); R is padded to the row block.
+    """
+    R, d = x.shape
+    K = theta.shape[0]
+    pd = (-d) % pad_d
+    pr = (-R) % min(block_r, max(R, 1))
+    if pd:
+        x = jnp.pad(x, [(0, 0), (0, pd)])
+        theta = jnp.pad(theta, [(0, 0), (0, pd)])
+        ainv = jnp.pad(ainv, [(0, 0), (0, pd), (0, pd)])
+    if pr:
+        x = jnp.pad(x, [(0, pr), (0, 0)])
+    out = linucb_score_blocked(
+        x, theta, ainv, pen[None, :], infl[None, :],
+        alpha=alpha, block_r=block_r, interpret=interpret,
+    )
+    return out[:R]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the batched UCB scoring kernel (= Eq. 2 vmapped)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linucb_score_ref(x, theta, ainv, pen, infl, alpha):
+    """x (R,d), theta (K,d), ainv (K,d,d), pen/infl (K,) -> (R,K)."""
+    exploit = x @ theta.T                                   # (R, K)
+    t = jnp.einsum("rd,kde->rke", x, ainv)
+    quad = jnp.maximum(jnp.einsum("rke,re->rk", t, x), 0.0)
+    v = quad / infl[None, :]
+    return exploit + alpha * jnp.sqrt(v) - pen[None, :]

@@ -1,0 +1,33 @@
+"""jit'd wrapper for the SSD kernel with the model-facing layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x, dt, A, B_in, C_in, D_skip, *, chunk: int = 128, interpret: bool = True
+):
+    """Same signature as models.ssm.ssd_chunked (h0=0).
+
+    x (B,L,H,P), dt (B,L,H), A (H,), B_in/C_in (B,L,N), D_skip (H,)
+    -> (y (B,L,H,P), h_final (B,H,N,P))
+    """
+    Bb, L, H, P = x.shape
+    N = B_in.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, L)
+    dtaf = dtf * jnp.tile(A, Bb)[:, None]  # row b*H+h has head h's A
+    bf = jnp.repeat(B_in[:, None], H, axis=1).reshape(Bb * H, L, N)
+    cf = jnp.repeat(C_in[:, None], H, axis=1).reshape(Bb * H, L, N)
+    y, h = ssd_scan_bh(xf, dtaf, dtf, bf, cf, chunk=min(chunk, L),
+                       interpret=interpret)
+    y = y.reshape(Bb, H, L, P).transpose(0, 2, 1, 3)
+    y = y + x.astype(y.dtype) * D_skip[None, None, :, None].astype(y.dtype)
+    h = h.reshape(Bb, H, N, P)
+    return y, h

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential recurrence."""
+from repro.models.ssm import ssd_sequential  # noqa: F401

@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape), lower + compile the right step
+function (train_step / prefill_step / serve_step) for the production mesh
+(single-pod 16x16 or multi-pod 2x16x16) on 512 placeholder host devices,
+print memory_analysis() and cost_analysis(), and record the collective
+schedule parsed from the compiled HLO for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.shapes import INPUT_SHAPES, input_specs, variant_for_shape
+from repro.launch import costmodel
+from repro.launch import roofline as rl
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, init_model
+from repro.models.pspec import set_mesh
+from repro.models.transformer import prefill_forward
+from repro.optim.adamw import AdamWState
+from repro.training import make_train_step, train_state_init
+from repro.training.train_step import TrainState
+
+
+def _state_shardings(mesh, param_sh):
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=param_sh,
+        opt=AdamWState(step=rep, mu=param_sh, nu=param_sh),
+    )
+
+
+def _build_lowered(cfg, shape, mesh, remat, profile="tp", infer_dtype="",
+                   ep_axis="model"):
+    """Lower the right step function for one (cfg, shape) on ``mesh``.
+    Returns (lowered, cost_fn) where cost_fn() -> (global flops, bytes)."""
+    params_shape = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+    if infer_dtype and shape.kind != "train":
+        dt = jnp.dtype(infer_dtype)
+        params_shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dt if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype),
+            params_shape)
+    param_sh = shard_lib.tree_param_shardings(mesh, params_shape, profile,
+                                              ep_axis)
+    if shape.kind == "train":
+        specs = input_specs(cfg, shape)
+        state_shape = jax.eval_shape(train_state_init, params_shape)
+        state_sh = _state_shardings(mesh, param_sh)
+        batch_sh = shard_lib.train_batch_shardings(mesh, specs, profile)
+        step = make_train_step(cfg, remat=remat)
+        lowered = jax.jit(step, in_shardings=(state_sh, batch_sh)).lower(
+            state_shape, specs)
+        return lowered, lambda: costmodel.fn_cost(step, state_shape, specs)
+    if shape.kind == "prefill":
+        specs = input_specs(cfg, shape)
+        specs.pop("labels", None)
+        batch_sh = shard_lib.train_batch_shardings(mesh, specs, profile)
+
+        def prefill_step(params, batch):
+            return prefill_forward(
+                params, cfg, batch["tokens"],
+                frontend=batch.get("frontend"),
+                encoder_frames=batch.get("encoder_frames"))
+
+        lowered = jax.jit(
+            prefill_step, in_shardings=(param_sh, batch_sh)
+        ).lower(params_shape, specs)
+        return lowered, lambda: costmodel.fn_cost(
+            prefill_step, params_shape, specs)
+    token, caches = input_specs(cfg, shape)
+    tok_sh, caches_sh = shard_lib.cache_shardings(mesh, cfg, token, caches)
+
+    def serve_step(params, tok, cch):
+        return decode_step(params, cfg, tok, cch, impl="einsum")
+
+    lowered = jax.jit(
+        serve_step, in_shardings=(param_sh, tok_sh, caches_sh)
+    ).lower(params_shape, token, caches)
+    return lowered, lambda: costmodel.fn_cost(
+        serve_step, params_shape, token, caches)
+
+
+def _layer_unit(cfg) -> int:
+    if cfg.arch_type == "hybrid":
+        return cfg.shared_attn_every
+    if cfg.arch_type == "moe":
+        return cfg.moe_every
+    return 1
+
+
+def _depth_variant(cfg, k: int):
+    """cfg with num_layers = k * unit (encoder scaled alongside)."""
+    u = _layer_unit(cfg)
+    kw = {"num_layers": k * u}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = k * u
+    return dataclasses.replace(cfg, **kw)
+
+
+def collective_estimate(cfg, shape, mesh, remat, verbose=False,
+                        profile="tp", infer_dtype="", ep_axis="model"):
+    """Per-device collective bytes with scan-aware depth extrapolation.
+
+    GSPMD-inserted collectives live inside the rolled layer-scan body of
+    the compiled HLO and are therefore textually counted ONCE. We compile
+    depth-2u and depth-4u variants, fit wire_bytes = a + b*k (k = depth
+    in units), and evaluate at the full depth. Intercept ``a`` captures
+    per-step collectives (embedding, loss, gradient sync), slope ``b``
+    the per-layer-group ones.
+    """
+    from repro.models.unroll import unrolled_layers
+
+    u = _layer_unit(cfg)
+    k_full = cfg.num_layers // u
+    k_lo, k_hi = 1, 2
+    samples = {}
+    for k in (k_lo, k_hi):
+        cfg_k = _depth_variant(cfg, k)
+        with unrolled_layers():
+            lowered, _ = _build_lowered(cfg_k, shape, mesh, remat, profile,
+                                        infer_dtype, ep_axis)
+            colls = rl.parse_collectives(lowered.compile().as_text())
+        samples[k] = colls
+    dk = k_hi - k_lo
+    est = {}
+    total_wire = 0.0
+    for kind in samples[k_lo]:
+        c2 = samples[k_lo][kind]
+        c4 = samples[k_hi][kind]
+        b = (c4["wire_bytes"] - c2["wire_bytes"]) / dk
+        a = c2["wire_bytes"] - k_lo * b
+        wire = max(a + b * k_full, 0.0)
+        bb = (c4["result_bytes"] - c2["result_bytes"]) / dk
+        aa = c2["result_bytes"] - k_lo * bb
+        cnt_b = (c4["count"] - c2["count"]) / dk
+        cnt_a = c2["count"] - k_lo * cnt_b
+        est[kind] = {
+            "count": cnt_a + cnt_b * k_full,
+            "result_bytes": max(aa + bb * k_full, 0.0),
+            "wire_bytes": wire,
+        }
+        total_wire += wire
+    if verbose:
+        print("collective estimate (depth-extrapolated):",
+              {k: "%.3e" % v["wire_bytes"] for k, v in est.items()})
+    return est, total_wire
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                remat: bool = True, verbose: bool = True,
+                collectives: bool = True, profile: str = "tp",
+                kv_dtype: str = "", infer_dtype: str = "",
+                moe_groups: int = 0, ep_axis: str = "model"):
+    """Returns a result dict (or raises). Prints the analyses.
+
+    ``collectives=False`` skips the depth-extrapolation compiles (the
+    multi-pod pass only needs the lowering proof; §Roofline is single-pod).
+    ``profile``/``kv_dtype``/``infer_dtype`` select the §Perf hillclimb
+    variants (see EXPERIMENTS.md).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = variant_for_shape(configs.get_config(arch), shape)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "documented skip (DESIGN.md §5)"}
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+    if moe_groups:
+        cfg = dataclasses.replace(cfg, moe_dispatch_groups=moe_groups)
+    set_mesh(mesh, shard_lib.activation_hint_specs(mesh, profile, ep_axis))
+
+    t0 = time.time()
+    n_chips = mesh.devices.size
+
+    with mesh:
+        lowered, cost_fn = _build_lowered(cfg, shape, mesh, remat, profile,
+                                          infer_dtype, ep_axis)
+        gflops, gbytes = cost_fn()
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        if collectives:
+            colls, wire = collective_estimate(cfg, shape, mesh, remat,
+                                              verbose=verbose,
+                                              profile=profile,
+                                              infer_dtype=infer_dtype,
+                                              ep_axis=ep_axis)
+        else:
+            colls, wire = {}, 0.0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"== {arch} x {shape_name} "
+              f"({'2x16x16' if multi_pod else '16x16'}) ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis (per-device, scan bodies once): "
+              "flops=%.3e bytes=%.3e" % (
+                  cost.get("flops", -1), cost.get("bytes accessed", -1)))
+        print("jaxpr cost (global, scan-corrected): flops=%.3e bytes=%.3e"
+              % (gflops, gbytes))
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "variant": {"profile": profile, "kv_dtype": kv_dtype,
+                    "infer_dtype": infer_dtype},
+        "n_chips": int(n_chips),
+        # scan-corrected global totals / chips (DESIGN.md: XLA's
+        # cost_analysis counts rolled loop bodies once)
+        "flops_per_device": gflops / n_chips,
+        "hbm_bytes_per_device": gbytes / n_chips,
+        "xla_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": colls,
+        "wire_bytes_per_device": wire,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "active_params": cfg.active_params(),
+        "total_params": cfg.total_params(),
+        "model_flops_global": rl.model_flops(cfg, shape),
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+    }
+    result["model_flops_per_device"] = result["model_flops_global"] / n_chips
+    result["useful_flops_ratio"] = (
+        result["model_flops_global"] / max(gflops, 1.0))
+    result.update(rl.roofline_terms(
+        result["flops_per_device"], result["hbm_bytes_per_device"], wire))
+    if verbose:
+        print("collective wire bytes/device: %.3e" % wire)
+        print("roofline: compute %.4fs memory %.4fs collective %.4fs -> %s"
+              % (result["compute_s"], result["memory_s"],
+                 result["collective_s"], result["dominant"]))
+        print("lower %.1fs compile %.1fs" % (t_lower, t_compile), flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-collectives", action="store_true",
+                    help="lowering proof only (multi-pod pass)")
+    ap.add_argument("--profile", default="tp", choices=("tp", "fsdp", "dp"))
+    ap.add_argument("--kv-dtype", default="",
+                    help="decode cache dtype override (e.g. float8_e4m3fn)")
+    ap.add_argument("--infer-dtype", default="",
+                    help="inference param dtype override (e.g. bfloat16)")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="grouped MoE dispatch (see models/moe.py)")
+    ap.add_argument("--ep-axis", default="model", choices=("model", "data"),
+                    help="mesh axis carrying the MoE expert dimension")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result files (perf iterations)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in configs.ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in combos:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.tag:
+            tag += f"_{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"skip (exists): {tag}", flush=True)
+            continue
+        try:
+            res = lower_combo(arch, shape, multi_pod=args.multi_pod,
+                              remat=not args.no_remat,
+                              collectives=not args.skip_collectives,
+                              profile=args.profile, kv_dtype=args.kv_dtype,
+                              infer_dtype=args.infer_dtype,
+                              moe_groups=args.moe_groups,
+                              ep_axis=args.ep_axis)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            failures.append((arch, shape, str(e)[:200]))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"all {len(combos)} combos lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

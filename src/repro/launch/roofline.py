@@ -1,0 +1,127 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs_per_device / 197e12            (bf16 MXU, v5e)
+  memory     = HLO_bytes_per_device / 819e9             (HBM)
+  collective = wire_bytes_per_device / 50e9             (ICI, per link)
+
+``collective_bytes`` is not in cost_analysis: we parse the compiled HLO
+and sum collective operands, converting result sizes to per-device wire
+bytes with the standard ring models (all-gather (g-1)/g, all-reduce
+2(g-1)/g, reduce-scatter (g-1), all-to-all (g-1)/g, permute 1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] shape in a result signature."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)  # collective-permute
+
+
+_OP_RE = re.compile(
+    r"= *(?P<shape>\((?:[^()]*)\)|\S+) *"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(",
+)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-kind counts / result bytes / estimated wire bytes per device.
+
+    HLO line form: ``%name = bf16[2,1024]{1,0} all-reduce(%x), ...`` —
+    the RESULT shape sits between '=' and the op name; async pairs are
+    counted on their -start instruction only.
+    """
+    out = {k: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0}
+           for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None or m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        rb = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += rb
+        out[kind]["wire_bytes"] += _wire_bytes(kind, rb, g)
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   wire_bytes: float) -> Dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    memory = hbm_bytes / HBM_BW
+    collective = wire_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs (global): 6*N*D train, 2*N*D inference."""
+    n_act = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch

@@ -1,0 +1,74 @@
+"""Serving driver: ``python -m repro.launch.serve [--requests N]``.
+
+Stands up a ParetoBandit-routed portfolio of (reduced) assigned
+architectures — one budget arm, one SSM arm, one frontier arm — and
+streams synthetic requests through the closed loop. ``--dry-run`` lowers
+the FULL decode configs on the production mesh instead.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=60)
+    ap.add_argument("--budget", type=float, default=6.6e-4)
+    ap.add_argument("--arch", action="append", default=None,
+                    help="portfolio member (repeatable); default trio")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        import subprocess
+        rc = 0
+        for arch in args.arch or ["olmo-1b", "mamba2-370m", "deepseek-67b"]:
+            rc |= subprocess.call([
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", args.shape])
+        raise SystemExit(rc)
+
+    import numpy as np
+
+    from repro import configs
+    from repro.core.costs import price_from_active_params
+    from repro.core.features import fit_pca_whitener, hash_encode_batch
+    from repro.core.types import RouterConfig
+    from repro.data import make_request_stream
+    from repro.serving import PortfolioServer, ServedModel
+
+    arch_ids = args.arch or ["olmo-1b", "mamba2-370m", "deepseek-67b"]
+    tiers = ["budget", "mid", "frontier"]
+    corpus = [r["prompt"] for r in make_request_stream(400, seed=7)]
+    whitener = fit_pca_whitener(hash_encode_batch(corpus))
+    models = []
+    for i, a in enumerate(arch_ids):
+        smoke = configs.get_smoke(a)
+        # price the arm from the FULL architecture's active params
+        pricing = price_from_active_params(
+            a, configs.get_config(a).active_params(), mean_req_tokens=600)
+        models.append(ServedModel.init(smoke, pricing,
+                                       tiers[min(i, 2)], seed=i))
+        print(f"arm {i}: {a} @ ${pricing.price_per_1k:.2e}/1k tok "
+              f"({tiers[min(i, 2)]})")
+
+    server = PortfolioServer(models, whitener, budget=args.budget,
+                             router_cfg=RouterConfig(max_arms=8),
+                             max_new_tokens=4)
+    results = [server.serve(r)
+               for r in make_request_stream(args.requests, seed=11)]
+    reward = np.mean([r.reward for r in results])
+    cost = np.mean([r.cost for r in results])
+    traffic = {m.name: 0 for m in models}
+    for r in results:
+        traffic[r.model] += 1
+    print(f"\nserved {len(results)} requests: reward {reward:.3f}, "
+          f"cost ${cost:.2e}/req ({cost / args.budget:.2f}x ceiling)")
+    print("traffic:", traffic)
+    print(f"lambda_t = {float(server.state.pacer.lam):.3f}")
+
+
+if __name__ == "__main__":
+    main()

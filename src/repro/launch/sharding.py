@@ -1,0 +1,205 @@
+"""Logical sharding rules: parameter paths -> PartitionSpecs.
+
+Megatron-style tensor parallelism on the ``model`` axis:
+  * column-parallel in-projections (attention q/k/v, MLP up/gate, SSM
+    wz/wx/wdt), row-parallel out-projections (attention o, MLP down, SSM
+    out) — activations stay model-replicated between blocks with the two
+    canonical all-reduces per block;
+  * vocab-parallel embedding and LM head;
+  * expert-parallel MoE (expert dim on ``model``);
+  * decode KV caches sequence-sharded on ``model`` (W axis) and
+    batch-sharded on the data axes — the right layout when
+    num_kv_heads < model-parallel degree (see attention._einsum_decode).
+
+Optimizer moments inherit parameter specs (same tree structure).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axis_names
+from repro.models.config import ModelConfig
+
+COL = {"w_q", "w_k", "w_v", "w_gate", "w_up", "w_in", "wz", "wx", "wdt"}
+ROW = {"w_o", "w_down", "w_out", "out_proj"}
+HEADED = {"A_log", "dt_bias", "D", "b_q", "b_k", "b_v", "norm_w"}
+REPLICATED = {"router", "conv_w", "conv_b", "w", "wB", "wC",
+              "frontend_proj"}
+STACKS = {"blocks", "encoder_blocks", "dense_blocks"}
+
+
+def _path_names(path) -> tuple:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def param_spec(path_names: tuple, ndim: int, profile: str = "tp",
+               ep_axis: str = "model") -> P:
+    """Profiles:
+      tp    — Megatron tensor parallelism on 'model', replicated on data
+              (the baseline).
+      fsdp  — tp + a large weight dim additionally sharded on 'data'
+              (ZeRO-3-style: 16x less parameter/optimizer memory; GSPMD
+              inserts the gather/partial-sum collectives).
+      dp    — pure data parallelism: params replicated, BOTH mesh axes
+              carry batch (for small models where TP is all overhead).
+
+    ``ep_axis`` places the MoE expert dimension: 'model' (baseline) or
+    'data' — with grouped dispatch, the G<->E exchange then stays on ONE
+    mesh axis and lowers as a true all-to-all (§Perf, dbrx iteration 4).
+    """
+    name = path_names[-1]
+    stacked = any(s in path_names for s in STACKS)
+    moe = "moe" in path_names
+    if profile == "dp":
+        return P(*([None] * ndim))
+    fs = "data" if profile == "fsdp" else None
+
+    def wrap(*spec):
+        if stacked:
+            spec = (None,) + spec
+        spec = spec + (None,) * (ndim - len(spec))
+        assert len(spec) == ndim, (path_names, ndim, spec)
+        return P(*spec)
+
+    if name == "embed":
+        return P(("data", "model") if profile == "fsdp" else "model", None)
+    if name == "lm_head":
+        return P(fs, "model")
+    if name == "frontend_proj":
+        return P(None, None)
+    if moe and name in ("w_gate", "w_up", "w_down"):
+        if ep_axis == "data":
+            # EP on the data axis: one expert shard per data rank, FFN
+            # fully local (no model-axis collectives inside experts)
+            return wrap("data", None, None)
+        return wrap("model", fs, None)          # expert parallel (+ fsdp D)
+    if name in COL:
+        return wrap(fs, "model")
+    if name in ROW:
+        return wrap("model", fs)
+    if name in HEADED:
+        return wrap("model")
+    if name in REPLICATED or ndim == 0:
+        return wrap()
+    # default: replicate (norm scales etc.)
+    return wrap()
+
+
+def _drop_indivisible(mesh: Mesh, spec: P, shape) -> P:
+    """Replace axis assignments whose size doesn't divide the dim (e.g.
+    vocab 50280 on a 16-way 'model' axis) with replication."""
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = math.prod(mesh.shape[a] for a in axes)
+        out.append(s if dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_param_shardings(mesh: Mesh, tree_shape: Any, profile: str = "tp",
+                         ep_axis: str = "model"):
+    """ShapeDtypeStruct tree -> NamedSharding tree via param_spec rules."""
+    def one(path, leaf):
+        spec = param_spec(_path_names(path), len(leaf.shape), profile,
+                          ep_axis)
+        spec = _drop_indivisible(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, tree_shape)
+
+
+def _div(n: int, size: int) -> bool:
+    return n % size == 0 and n >= size
+
+
+def batch_axes(mesh: Mesh, batch: int, profile: str = "tp"):
+    """Data-parallel axes if the batch divides them, else replicate.
+    In the 'dp' profile every mesh axis carries batch."""
+    dd = (tuple(mesh.axis_names) if profile == "dp"
+          else data_axis_names(mesh))
+    size = math.prod(mesh.shape[n] for n in dd)
+    if _div(batch, size):
+        return dd
+    dd2 = data_axis_names(mesh)
+    size2 = math.prod(mesh.shape[n] for n in dd2)
+    return dd2 if _div(batch, size2) else None
+
+
+def train_batch_shardings(mesh: Mesh, specs: Dict[str, jax.ShapeDtypeStruct],
+                          profile: str = "tp"):
+    out = {}
+    for k, s in specs.items():
+        bspec = batch_axes(mesh, s.shape[0], profile)
+        out[k] = NamedSharding(mesh, P(bspec, *([None] * (len(s.shape) - 1))))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, token, caches):
+    """NamedShardings for (token, DecodeCaches)."""
+    batch = token.shape[0]
+    dd = batch_axes(mesh, batch)
+    model = "model"
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    def kv_spec(sds):
+        # (L, B, W, KV, hd): W sequence-sharded on model
+        W = sds.shape[2]
+        wspec = model if _div(W, mesh.shape["model"]) else None
+        return ns(None, dd, wspec, None, None)
+
+    tok_s = ns(dd, None)
+    f = {}
+    f["k"] = kv_spec(caches.k) if caches.k is not None else None
+    f["v"] = kv_spec(caches.v) if caches.v is not None else None
+    if caches.ssm_conv is not None:
+        f["ssm_conv"] = ns(None, dd, None, None)
+        # (L, B, H, N, P): SSD heads on model
+        H = caches.ssm_h.shape[2]
+        hspec = model if _div(H, mesh.shape["model"]) else None
+        f["ssm_h"] = ns(None, dd, hspec, None, None)
+    else:
+        f["ssm_conv"] = f["ssm_h"] = None
+    f["shared_k"] = kv_spec(caches.shared_k) if caches.shared_k is not None else None
+    f["shared_v"] = kv_spec(caches.shared_v) if caches.shared_v is not None else None
+    if caches.cross_k is not None:
+        f["cross_k"] = ns(None, dd, None, None, None)
+        f["cross_v"] = ns(None, dd, None, None, None)
+    else:
+        f["cross_k"] = f["cross_v"] = None
+    f["pos"] = ns()
+    caches_s = type(caches)(**f)
+    return tok_s, caches_s
+
+
+def activation_hint_specs(mesh: Mesh, profile: str = "tp",
+                          ep_axis: str = "model") -> Dict[str, P]:
+    if profile == "dp":
+        all_ax = tuple(mesh.axis_names)
+        return {
+            "logits": P(all_ax, None, None),
+            "activations": P(all_ax, None, None),
+        }
+    dd = data_axis_names(mesh)
+    return {
+        "moe_buffer": P(ep_axis, None, None),
+        "moe_group_local": P(dd, None, None, None),
+        "logits": P(dd, None, "model"),
+        "activations": P(dd, None, None),
+    }

@@ -1,0 +1,76 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs the pjit train step on the production mesh;
+on this container it runs the reduced (smoke) variant on CPU, or —
+with ``--dry-run`` — lowers the FULL config exactly like
+``repro.launch.dryrun`` (which owns the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL config (hardware required)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower-only on the production mesh")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        # delegate: dryrun.py must own XLA_FLAGS before jax init
+        import subprocess
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k"]
+        raise SystemExit(subprocess.call(cmd))
+
+    from repro import configs
+    from repro.data import SyntheticLMDataset
+    from repro.models import init_model
+    from repro.training import (make_train_step, save_checkpoint,
+                                train_state_init)
+
+    cfg = configs.get_config(args.arch) if args.full else \
+        configs.get_smoke(args.arch)
+    print(f"training {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    state = train_state_init(params)
+    step_fn = jax.jit(make_train_step(
+        cfg, peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, remat=False))
+    ds = iter(SyntheticLMDataset(vocab_size=cfg.vocab_size,
+                                 seq_len=args.seq, batch_size=args.batch))
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), ds):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.frontend_tokens:
+            batch["frontend"] = jnp.zeros(
+                (args.batch, cfg.frontend_tokens, cfg.frontend_dim))
+        if cfg.is_encdec:
+            batch["encoder_frames"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq, cfg.frontend_dim))
+        state, m = step_fn(state, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} ({time.time() - t0:.1f}s)",
+                  flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

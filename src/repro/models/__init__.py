@@ -1,0 +1,11 @@
+"""Model substrate: dense / MoE / SSM / hybrid / enc-dec / VLM in pure JAX."""
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    DecodeCaches,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_model,
+    prefill,
+    prefill_forward,
+)

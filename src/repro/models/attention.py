@@ -1,0 +1,338 @@
+"""GQA attention: full-causal, sliding-window, bidirectional and cross.
+
+Three interchangeable inner implementations (``impl``):
+
+  * ``naive``   — materialises (S, T) scores; reference & small tests.
+  * ``chunked`` — nested ``lax.scan`` over query/key blocks with an online
+                  softmax (flash-attention recurrence expressed in XLA).
+                  O(block^2) live memory; the default for training,
+                  prefill and the multi-pod dry-run. Rectangular blocks are
+                  masked rather than skipped (static trip counts keep
+                  ``cost_analysis`` faithful; see EXPERIMENTS.md §Perf for
+                  the causal-skip iteration).
+  * ``pallas``  — the TPU flash-attention kernel in repro.kernels
+                  (validated against ``naive`` in interpret mode).
+
+Decode attention (1 new token against a KV cache, optionally a
+sliding-window ring buffer) lives in ``decode_attention`` below.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def init_attention(key: Array, cfg: ModelConfig):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": layers.dense_init(ks[0], D, H * hd),
+        "w_k": layers.dense_init(ks[1], D, KV * hd),
+        "w_v": layers.dense_init(ks[2], D, KV * hd),
+        "w_o": layers.dense_init(ks[3], H * hd, D),
+    }
+    if cfg.attn_bias:
+        p["b_q"] = jnp.zeros((H * hd,), jnp.float32)
+        p["b_k"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["b_v"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def qkv_project(p, cfg: ModelConfig, x: Array, kv_src: Optional[Array] = None):
+    """x: (B, S, D) -> q (B, S, H, hd), k/v (B, T, KV, hd)."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    src = x if kv_src is None else kv_src
+    T = src.shape[1]
+    q = x @ p["w_q"].astype(dt)
+    k = src @ p["w_k"].astype(dt)
+    v = src @ p["w_v"].astype(dt)
+    if "b_q" in p:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    q = q.reshape(B, S, cfg.num_heads, cfg.hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _expand_kv(k: Array, groups: int) -> Array:
+    """(B, T, KV, hd) -> (B, T, KV*G, hd) by repeat (GQA)."""
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _mask(mode: str, q_pos: Array, k_pos: Array, window: int) -> Array:
+    """Boolean validity mask (Sq, Tk) from absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    if mode == "causal":
+        m = d >= 0
+    elif mode == "sliding":
+        m = (d >= 0) & (d < window)
+    elif mode == "full":
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    else:
+        raise ValueError(mode)
+    return m
+
+
+def naive_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                    mode: str = "causal", window: int = 0) -> Array:
+    """Reference: q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    k = _expand_kv(k, G)
+    v = _expand_kv(v, G)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    m = _mask(mode, q_pos, k_pos, window)
+    scores = jnp.where(m[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _fit_block(n: int, b: int) -> int:
+    """Largest block <= b that divides n (e.g. 1500 @ 512 -> 500)."""
+    b = min(b, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+    mode: str = "causal", window: int = 0,
+    q_block: int = 512, kv_block: int = 512,
+) -> Array:
+    """Online-softmax attention with O(q_block * kv_block) live scores.
+
+    Outer scan over query blocks, inner scan over key/value blocks.
+    Static trip counts (all blocks visited, invalid ones masked) so the
+    compiled HLO has an analysable FLOP count.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_block = _fit_block(S, q_block)
+    kv_block = _fit_block(T, kv_block)
+    nq, nk = S // q_block, T // kv_block
+    scale = 1.0 / float(hd) ** 0.5
+
+    # (nq, B, qb, H, hd) blocks
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)
+    qpb = q_pos.reshape(nq, q_block)
+    kb = k.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(nk, kv_block)
+
+    def q_step(_, q_in):
+        q_i, qp_i = q_in  # (B, qb, H, hd), (qb,)
+        q32 = q_i.astype(jnp.float32)
+
+        @jax.checkpoint  # flash-bwd: recompute p per block, never store it
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            k_j, v_j, kp_j = kv_in
+            kx = _expand_kv(k_j, G).astype(jnp.float32)   # (B, kb, H, hd)
+            vx = _expand_kv(v_j, G).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q32, kx) * scale
+            msk = _mask(mode, qp_i, kp_j, window)
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vx)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, q_block), NEG_INF)
+        l0 = jnp.zeros((B, H, q_block))
+        a0 = jnp.zeros((B, H, q_block, hd))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]     # (B, H, qb, hd)
+        return None, out.transpose(0, 2, 1, 3)             # (B, qb, H, hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, qpb))        # (nq, B, qb, H, hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    *,
+    kv_src: Optional[Array] = None,
+    kv_positions: Optional[Array] = None,
+    mode: str = "causal",
+    rope: bool = True,
+    impl: str = "chunked",
+    return_kv: bool = False,
+):
+    """Full attention block (projections + inner attention + output proj).
+
+    x: (B, S, D); positions: (S,) absolute positions.
+    kv_src: encoder output for cross-attention (mode='full', rope=False).
+    return_kv=True additionally returns the (roped) K and V — the cache
+    content a batched prefill must emit.
+    """
+    B, S, D = x.shape
+    q, k, v = qkv_project(p, cfg, x, kv_src)
+    q_pos = positions
+    k_pos = positions if kv_positions is None else kv_positions
+    if rope:
+        q = layers.apply_rope(q, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
+        k = layers.apply_rope(k, jnp.broadcast_to(k_pos, (B, k.shape[1])),
+                              cfg.rope_theta)
+    window = cfg.window
+    if mode == "causal" and window > 0:
+        mode = "sliding"
+    if impl == "naive":
+        out = naive_attention(q, k, v, q_pos, k_pos, mode, window)
+    elif impl == "chunked":
+        out = chunked_attention(q, k, v, q_pos, k_pos, mode, window)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, q_pos, k_pos, mode=mode,
+                                     window=window)
+    else:
+        raise ValueError(impl)
+    out = out.reshape(B, S, cfg.num_heads * cfg.hd)
+    out = out @ p["w_o"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token against a KV cache (ring buffer when windowed)
+# ---------------------------------------------------------------------------
+
+def decode_attention(
+    p,
+    cfg: ModelConfig,
+    x: Array,            # (B, 1, D) current-token activations
+    k_cache: Array,      # (B, W, KV, hd)
+    v_cache: Array,      # (B, W, KV, hd)
+    pos: Array,          # scalar i32: absolute position of the new token
+    *,
+    impl: str = "chunked",
+    kv_block: int = 1024,
+):
+    """Serve-step attention. Writes the new KV at ``pos mod W`` (ring
+    buffer; W = full seq_len when cfg.window == 0) and attends over the
+    valid region. Returns (out (B,1,D), k_cache, v_cache)."""
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    q, k_new, v_new = qkv_project(p, cfg, x)
+    posb = jnp.broadcast_to(pos, (B, 1))
+    q = layers.apply_rope(q, posb, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, posb, cfg.rope_theta)
+
+    slot = jnp.mod(pos, W)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1
+    )
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1
+    )
+
+    # Validity: slot i holds absolute position p_i; valid iff p_i <= pos and
+    # pos - p_i < window (when windowed). Ring-buffer slot i's latest
+    # absolute position is derived from pos and slot index.
+    idx = jnp.arange(W)
+    # Absolute position currently stored in slot i: the largest value
+    # <= pos congruent to i (mod W); negative means never written.
+    wraps = (pos - idx) // W
+    abs_pos = idx + wraps * W
+    valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - W)
+    if cfg.window > 0:
+        valid &= abs_pos > pos - cfg.window
+
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q, k_cache, v_cache, valid)
+    elif impl == "einsum":
+        out = _einsum_decode(q, k_cache, v_cache, valid)
+    else:
+        out = _masked_decode(q, k_cache, v_cache, valid, kv_block)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.hd)
+    return out @ p["w_o"].astype(x.dtype), k_cache, v_cache
+
+
+def _einsum_decode(q, k_cache, v_cache, valid):
+    """Single einsum over the whole cache — no scan, no KV repeat.
+
+    This is the *sequence-parallel* decode form: with the cache's W axis
+    sharded on the ``model`` mesh axis, the softmax reductions and the
+    value contraction become small all-reduces over W shards, which is
+    the TPU-native layout when num_kv_heads < model-parallel degree.
+
+    Mixed precision: the matmuls run in the query dtype with f32
+    accumulation (``preferred_element_type``) rather than casting the
+    whole cache to f32 — on TPU this streams the cache at its storage
+    width through the MXU instead of materialising an f32 copy
+    (§Perf hillclimb, command-r-35b x decode_32k).
+    """
+    B, _, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / float(hd) ** 0.5
+    cdt = q.dtype
+    q4 = q[:, 0].reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", q4, k_cache.astype(cdt),
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", w.astype(cdt), v_cache.astype(cdt),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _masked_decode(q, k_cache, v_cache, valid, kv_block):
+    """Online-softmax over KV blocks; q (B, 1, H, hd)."""
+    B, _, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    kv_block = _fit_block(W, kv_block)
+    n = W // kv_block
+    scale = 1.0 / float(hd) ** 0.5
+    q32 = q[:, 0].astype(jnp.float32)                      # (B, H, hd) order bhd
+    kb = k_cache.reshape(B, n, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    vb = v_cache.reshape(B, n, kv_block, KV, hd).transpose(1, 0, 2, 3, 4)
+    valb = valid.reshape(n, kv_block)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        k_j, v_j, val_j = inp
+        kx = _expand_kv(k_j, G).astype(jnp.float32)        # (B, kb, H, hd)
+        vx = _expand_kv(v_j, G).astype(jnp.float32)
+        s = jnp.einsum("bhd,bkhd->bhk", q32, kx) * scale
+        s = jnp.where(val_j[None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        pw = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + pw.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhk,bkhd->bhd", pw, vx)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H), NEG_INF)
+    l0 = jnp.zeros((B, H))
+    a0 = jnp.zeros((B, H, hd))
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, valb))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out[:, None].transpose(0, 1, 2, 3).astype(q.dtype).reshape(B, 1, H, hd)

@@ -1,0 +1,117 @@
+"""Shared layer primitives: norms, RoPE, MLPs, initialisers.
+
+Functional style: ``init_*`` returns a param dict; ``apply`` functions are
+pure. Params are stored in fp32 and cast to the compute dtype at use
+(master-weight convention; the optimizer updates fp32).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out: int, scale: float = 1.0) -> Array:
+    std = scale / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std)
+
+
+def embed_init(key: Array, vocab: int, d: int) -> Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Optional[Array], eps: float = 1e-6) -> Array:
+    """RMSNorm; ``weight=None`` gives the OLMo non-parametric variant
+    (arXiv:2402.00838 uses parameter-free LayerNorm; we implement it as a
+    parameter-free normalisation in the same spirit — no learned gain)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def layer_norm(x: Array, weight: Optional[Array], bias: Optional[Array],
+               eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def init_norm(cfg_norm: str, d: int):
+    if cfg_norm == "nonparametric":
+        return {}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg_norm: str, p, x: Array) -> Array:
+    if cfg_norm == "nonparametric":
+        return rms_norm(x, None)
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, kind: str, d: int, f: int):
+    if kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, d, f),
+            "w_up": dense_init(k2, d, f),
+            "w_down": dense_init(k3, f, d),
+        }
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, f), "w_out": dense_init(k2, f, d)}
+
+
+def apply_mlp(kind: str, p, x: Array) -> Array:
+    dt = x.dtype
+    if kind == "swiglu":
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        return (jax.nn.silu(g) * u) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_in"].astype(dt))
+    return h @ p["w_out"].astype(dt)

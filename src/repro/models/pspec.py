@@ -1,0 +1,52 @@
+"""Activation-sharding hints, decoupled from model code.
+
+Model code calls ``hint(x, "moe_buffer")`` etc.; the launch layer installs
+a mapping from hint names to PartitionSpecs for the active mesh. On a
+single device (tests, benchmarks) hints are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_MESH: Optional[Mesh] = None
+_SPECS: Dict[str, PartitionSpec] = {}
+
+
+def set_mesh(mesh: Optional[Mesh], specs: Optional[Dict[str, PartitionSpec]] = None):
+    global _MESH, _SPECS
+    _MESH = mesh
+    _SPECS = dict(specs or {})
+
+
+def hint(x, name: str):
+    if _MESH is None:
+        return x
+    spec = _SPECS.get(name)
+    if spec is None:
+        return x
+    # Drop axis assignments that don't divide the dimension (e.g. a
+    # 50280-vocab logits tensor on a 16-way model axis): replicate instead.
+    import math
+    fixed = []
+    ndim = getattr(x, "ndim", 0)
+    padded = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    for dim, s in zip(x.shape, padded):
+        if s is None:
+            fixed.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = math.prod(_MESH.shape[a] for a in axes)
+        fixed.append(s if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, PartitionSpec(*fixed)))
+
+
+def data_axes():
+    """Name(s) of the batch-sharding mesh axes for the active mesh."""
+    if _MESH is None:
+        return None
+    names = _MESH.axis_names
+    return tuple(n for n in names if n in ("pod", "data")) or None

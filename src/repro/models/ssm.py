@@ -1,0 +1,258 @@
+"""Mamba2 blocks via state-space duality (SSD), arXiv:2405.21060.
+
+TPU adaptation: the SSD *chunked* form is used for training/prefill — the
+intra-chunk term is a masked (Q x Q) matmul batch (MXU-friendly), and the
+inter-chunk recurrence is a ``lax.scan`` over chunk summaries, i.e. the
+sequential work scales with L/Q rather than L. There is no warp-level
+selective-scan port (GPU Mamba kernels rely on intra-warp shuffles); the
+chunk-matmul formulation *is* the TPU-native equivalent (DESIGN.md §3).
+
+Projections are separate matrices (wz/wx/wB/wC/wdt) rather than one fused
+in_proj: under tensor parallelism each output then shards cleanly
+(d_inner and heads on the ``model`` axis, the small B/C/dt heads
+replicated) instead of forcing a reshard at fused-split boundaries.
+
+Decode is the O(1) recurrent update h <- exp(dtA) h + dt B (x) x with a
+rolling conv window — constant state per token, which is what makes the
+``long_500k`` shape tractable for SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array  # (B, conv_width-1, d_in + 2N) rolling raw conv inputs
+    h: Array     # (B, H, N, P) recurrent state (f32)
+
+
+def init_mamba2(key: Array, cfg: ModelConfig):
+    D = cfg.d_model
+    d_in, N, H, w = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 9)
+    # dt bias: softplus^{-1} of log-spaced dt in [1e-3, 0.1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (H,), jnp.float32)
+        * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "wz": layers.dense_init(ks[1], D, d_in),
+        "wx": layers.dense_init(ks[2], D, d_in),
+        "wB": layers.dense_init(ks[3], D, N),
+        "wC": layers.dense_init(ks[4], D, N),
+        "wdt": layers.dense_init(ks[5], D, H),
+        "conv_w": jax.random.normal(ks[6], (w, d_in + 2 * N), jnp.float32)
+        * (1.0 / jnp.sqrt(w)),
+        "conv_b": jnp.zeros((d_in + 2 * N,), jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[7], (H,), jnp.float32, 1.0, 16.0)
+        ),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[8], d_in, D),
+    }
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv, width W, as a sum of shifted slices."""
+    W = w.shape[0]
+    B, L, C = xBC.shape
+    pad = jnp.zeros((B, W - 1, C), xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)          # (B, L+W-1, C)
+    out = jnp.zeros_like(xBC)
+    for k in range(W):
+        out = out + xp[:, k:k + L, :] * w[k].astype(xBC.dtype)
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _project_xBC(p, x: Array) -> Array:
+    """Raw (pre-conv) concat [x_ssd | B | C] channels."""
+    dt_ = x.dtype
+    return jnp.concatenate(
+        [x @ p["wx"].astype(dt_), x @ p["wB"].astype(dt_),
+         x @ p["wC"].astype(dt_)], axis=-1)
+
+
+def ssd_chunked(
+    x: Array,     # (B, L, H, P)
+    dt: Array,    # (B, L, H) positive step sizes
+    A: Array,     # (H,) negative
+    B_in: Array,  # (B, L, N)
+    C_in: Array,  # (B, L, N)
+    D_skip: Array,  # (H,)
+    chunk: int,
+    h0: Array | None = None,
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B, L, H, P), h_final (B, H, N, P)).
+
+    With inclusive in-chunk cumulants ``cum_i = sum_{k<=i} dt_k A``:
+
+      y_i = C_i h_prev e^{cum_i}
+            + sum_{j<=i} (C_i . B_j) e^{cum_i - cum_j} dt_j x_j + D x_i
+      h'  = e^{cum_Q} h_prev + sum_j e^{cum_Q - cum_j} dt_j B_j (x) x_j
+    """
+    Bb, L, H, P = x.shape
+    N = B_in.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bb, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bb, nc, chunk, H).transpose(1, 0, 2, 3).astype(f32)
+    Bc = B_in.reshape(Bb, nc, chunk, N).transpose(1, 0, 2, 3).astype(f32)
+    Cc = C_in.reshape(Bb, nc, chunk, N).transpose(1, 0, 2, 3).astype(f32)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P), f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))  # i >= j
+
+    @jax.checkpoint  # recompute the (Q,Q,H) decay matrix in bwd
+    def step(h_prev, inp):
+        xq, dtq, Bq, Cq = inp          # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        x32 = xq.astype(f32)
+        dtA = dtq * A                  # (B,Q,H) negative
+        cum = jnp.cumsum(dtA, axis=1)  # inclusive
+        # intra-chunk: masked decay matrix per head
+        Ldec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        Ldec = jnp.where(tri[None, :, :, None], Ldec, 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Cq, Bq)                  # (B,Q,Q)
+        M = CB[..., None] * Ldec * dtq[:, None, :, :]            # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, x32)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhnp->bihp", Cq, h_prev)
+        y_inter = y_inter * jnp.exp(cum)[..., None]
+        y = y_intra + y_inter + x32 * D_skip[None, None, :, None]
+        # state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)             # (B,Q,H)
+        h_new = h_prev * jnp.exp(cum[:, -1])[:, :, None, None]
+        h_new = h_new + jnp.einsum(
+            "bjn,bjh,bjhp->bhnp", Bq, decay_to_end * dtq, x32
+        )
+        return h_new, y.astype(x.dtype)
+
+    h_final, yc = jax.lax.scan(step, h0, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, L, H, P)
+    return y, h_final
+
+
+def mamba2_forward(
+    p, cfg: ModelConfig, x: Array, *, return_state: bool = False
+):
+    """Full Mamba2 block for train/prefill. x: (B, L, D) -> (B, L, D)."""
+    Bb, L, D = x.shape
+    dt_ = x.dtype
+    d_in, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    z = x @ p["wz"].astype(dt_)
+    xBC_raw = _project_xBC(p, x)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs, B_in, C_in = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dt_raw = x @ p["wdt"].astype(dt_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    # pad L up to a chunk multiple; dt padded with ZEROS after softplus so
+    # padded steps neither decay the state (exp(0)=1) nor inject input —
+    # h_final stays exact for prefill -> decode continuation.
+    Lp = (L + cfg.ssm_chunk - 1) // cfg.ssm_chunk * cfg.ssm_chunk
+    if Lp != L:
+        padw = [(0, 0), (0, Lp - L), (0, 0)]
+        xs = jnp.pad(xs, padw)
+        B_in = jnp.pad(B_in, padw)
+        C_in = jnp.pad(C_in, padw)
+        dt = jnp.pad(dt, padw)
+    xs = xs.reshape(Bb, Lp, H, P)
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ssd_chunked(xs, dt, A, B_in, C_in, p["D"], cfg.ssm_chunk)
+    y = y.reshape(Bb, Lp, d_in)[:, :L]
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"].astype(dt_)
+    if return_state:
+        conv_state = xBC_raw[:, -(cfg.conv_width - 1):, :]
+        return out, SSMState(conv=conv_state, h=h_final)
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    d_in, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+        h=jnp.zeros((batch, H, N, P), jnp.float32),
+    )
+
+
+def mamba2_decode(
+    p, cfg: ModelConfig, x: Array, state: SSMState
+) -> Tuple[Array, SSMState]:
+    """One-token recurrent update. x: (B, 1, D) -> (B, 1, D)."""
+    Bb = x.shape[0]
+    dt_ = x.dtype
+    d_in, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                     cfg.ssm_head_dim)
+    x0 = x[:, 0]
+    z = x0 @ p["wz"].astype(dt_)
+    xBC_new = _project_xBC(p, x0[:, None])[:, 0]          # (B, d_in + 2N)
+
+    # rolling causal conv over the last conv_width raw inputs
+    window = jnp.concatenate([state.conv, xBC_new[:, None]], axis=1)
+    w = p["conv_w"].astype(dt_)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(dt_)
+    xBC = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs, B_in, C_in = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(Bb, H, P).astype(jnp.float32)
+    dt_raw = x0 @ p["wdt"].astype(dt_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                  # (B, H)
+    B32 = B_in.astype(jnp.float32)
+    C32 = C_in.astype(jnp.float32)
+    h = state.h * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", B32, dt, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C32, h) + xs * p["D"][None, :, None]
+    y = y.reshape(Bb, d_in).astype(dt_)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["out_proj"].astype(dt_))[:, None]
+    return out, SSMState(conv=new_conv, h=h)
+
+
+# ---------------------------------------------------------------------------
+# sequential reference (oracle for tests & the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(x, dt, A, B_in, C_in, D_skip, h0=None):
+    """O(L) token-by-token recurrence; ground truth for ssd_chunked."""
+    Bb, L, H, P = x.shape
+    N = B_in.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, N, P), f32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)                            # (B, H)
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bn,bh,bhp->bhnp", B_t.astype(f32), dt_t, x_t.astype(f32)
+        )
+        y = jnp.einsum("bn,bhnp->bhp", C_t.astype(f32), h)
+        y = y + x_t.astype(f32) * D_skip[None, :, None]
+        return h, y
+
+    xs = x.transpose(1, 0, 2, 3)
+    dts = dt.transpose(1, 0, 2).astype(f32)
+    Bs = B_in.transpose(1, 0, 2)
+    Cs = C_in.transpose(1, 0, 2)
+    h_final, ys = jax.lax.scan(step, h0, (xs, dts, Bs, Cs))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h_final

@@ -1,0 +1,780 @@
+"""Model assembly for every architecture family.
+
+Parameters are nested dicts with per-layer leaves *stacked* on axis 0 and
+the decoder expressed as ``lax.scan`` over layers — this keeps HLO size
+(and multi-pod compile time) independent of depth, which is what makes
+the 95-layer deepseek-67b dry-run tractable.
+
+Three entry points:
+  * ``forward_train``  — tokens -> (loss, metrics); chunked cross-entropy
+    so full logits (B, S, V) are never materialised.
+  * ``prefill``        — builds decode caches from a prompt.
+  * ``decode_step``    — one token against the caches (serve_step).
+
+Hybrid (Zamba2-style) models scan over *groups*: ``shared_attn_every``
+Mamba2 layers followed by one application of the parameter-shared
+attention block. Whisper runs a bidirectional encoder stack and a decoder
+stack with cross-attention to the (stubbed) conv frontend's frames.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import ModelConfig
+from repro.models.pspec import hint
+from repro.models.unroll import layer_scan
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key: Array, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_norm(cfg.norm, cfg.d_model),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.norm, cfg.d_model),
+        "mlp": layers.init_mlp(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff),
+    }
+    if cross:
+        p["ln_x"] = layers.init_norm(cfg.norm, cfg.d_model)
+        p["xattn"] = attention.init_attention(ks[2], cfg)
+    return p
+
+
+def _init_moe_block(key: Array, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": layers.init_norm(cfg.norm, cfg.d_model),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": layers.init_norm(cfg.norm, cfg.d_model),
+        "moe": moe.init_moe(ks[1], cfg),
+    }
+
+
+def _init_ssm_block(key: Array, cfg: ModelConfig):
+    return {
+        "ln1": layers.init_norm(cfg.norm, cfg.d_model),
+        "mixer": ssm.init_mamba2(key, cfg),
+    }
+
+
+def _stack_init(fn, key: Array, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_model(key: Array, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(ks[1], cfg.d_model,
+                                              cfg.vocab_size)
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        blk = functools.partial(_init_attn_block, cfg=cfg,
+                                cross=cfg.is_encdec)
+        params["blocks"] = _stack_init(blk, ks[2], cfg.num_layers)
+    elif cfg.arch_type == "moe":
+        blk = functools.partial(_init_moe_block, cfg=cfg)
+        n_moe = cfg.num_layers // cfg.moe_every
+        params["blocks"] = _stack_init(blk, ks[2], n_moe)
+        if cfg.moe_every > 1:  # interleaved dense layers (Llama-4 style)
+            dblk = functools.partial(_init_attn_block, cfg=cfg)
+            params["dense_blocks"] = _stack_init(
+                dblk, ks[6], cfg.num_layers - n_moe)
+    elif cfg.arch_type in ("ssm", "hybrid"):
+        blk = functools.partial(_init_ssm_block, cfg=cfg)
+        params["blocks"] = _stack_init(blk, ks[2], cfg.num_layers)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    if cfg.arch_type == "hybrid":
+        params["shared_attn"] = _init_attn_block(ks[3], cfg)
+    if cfg.is_encdec:
+        enc_blk = functools.partial(_init_attn_block, cfg=cfg, cross=False)
+        params["encoder_blocks"] = _stack_init(enc_blk, ks[4],
+                                               cfg.encoder_layers)
+        params["enc_final_norm"] = layers.init_norm(cfg.norm, cfg.d_model)
+    if cfg.frontend_tokens > 0 or cfg.is_encdec:
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = layers.dense_init(ks[5], fd, cfg.d_model)
+    return params
+
+
+def head_weight(params, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# block application (sequence form)
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(p, cfg: ModelConfig, x, positions, impl,
+                      enc_out=None, enc_positions=None, mode="causal"):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    x = x + attention.attention(p["attn"], cfg, h, positions, mode=mode,
+                                impl=impl)
+    if enc_out is not None:
+        h = layers.apply_norm(cfg.norm, p["ln_x"], x)
+        x = x + attention.attention(
+            p["xattn"], cfg, h, positions, kv_src=enc_out,
+            kv_positions=enc_positions, mode="full", rope=False, impl=impl,
+        )
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    return x + layers.apply_mlp(cfg.mlp, p["mlp"], h)
+
+
+def _apply_moe_block(p, cfg: ModelConfig, x, positions, impl):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    x = x + attention.attention(p["attn"], cfg, h, positions, impl=impl)
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    y, aux = moe.apply_moe(p["moe"], cfg, h)
+    return x + y, aux
+
+
+def _apply_ssm_block(p, cfg: ModelConfig, x):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    return x + ssm.mamba2_forward(p["mixer"], cfg, h)
+
+
+def _maybe_remat(fn, remat: bool):
+    """Per-layer activation checkpointing: inside the layer scan, so the
+    backward pass holds one layer's internals at a time (the whole-forward
+    placement saves nothing — EXPERIMENTS.md §Perf)."""
+    return jax.checkpoint(fn) if remat else fn
+
+
+def decoder_stack(params, cfg: ModelConfig, x: Array, positions: Array,
+                  impl: str = "chunked", enc_out=None, enc_positions=None,
+                  remat: bool = False):
+    """Scan the decoder blocks over a full sequence. Returns (x, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        blk = _maybe_remat(
+            lambda p, c: _apply_attn_block(p, cfg, c, positions, impl,
+                                           enc_out, enc_positions), remat)
+
+        def body(carry, p):
+            return blk(p, carry), None
+        x, _ = layer_scan(body, x, params["blocks"])
+        return x, aux0
+
+    if cfg.arch_type == "moe":
+        moe_blk = _maybe_remat(
+            lambda p, c: _apply_moe_block(p, cfg, c, positions, impl), remat)
+        if cfg.moe_every > 1:
+            n_moe = cfg.num_layers // cfg.moe_every
+            dense_g = jax.tree.map(
+                lambda a: a.reshape((n_moe, cfg.moe_every - 1) + a.shape[1:]),
+                params["dense_blocks"])
+            attn_blk = _maybe_remat(
+                lambda p, c: _apply_attn_block(p, cfg, c, positions, impl),
+                remat)
+
+            def group_body(carry, inp):
+                pd, pm = inp
+
+                def inner(c, p):
+                    return attn_blk(p, c), None
+                y, _ = layer_scan(inner, carry, pd)
+                y, aux = moe_blk(pm, y)
+                return y, aux
+
+            x, auxs = layer_scan(group_body, x, (dense_g, params["blocks"]))
+            return x, auxs.mean()
+
+        def body(carry, p):
+            y, aux = moe_blk(p, carry)
+            return y, aux
+        x, auxs = layer_scan(body, x, params["blocks"])
+        return x, auxs.mean()
+
+    if cfg.arch_type == "ssm":
+        blk = _maybe_remat(lambda p, c: _apply_ssm_block(p, cfg, c), remat)
+
+        def body(carry, p):
+            return blk(p, carry), None
+        x, _ = layer_scan(body, x, params["blocks"])
+        return x, aux0
+
+    if cfg.arch_type == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["blocks"],
+        )
+        shared = params["shared_attn"]
+        ssm_blk = _maybe_remat(lambda p, c: _apply_ssm_block(p, cfg, c),
+                               remat)
+        attn_blk = _maybe_remat(
+            lambda p, c: _apply_attn_block(p, cfg, c, positions, impl),
+            remat)
+
+        def group_body(carry, pg):
+            def inner(c, p):
+                return ssm_blk(p, c), None
+            y, _ = layer_scan(inner, carry, pg)
+            y = attn_blk(shared, y)
+            return y, None
+
+        x, _ = layer_scan(group_body, x, grouped)
+        return x, aux0
+
+    raise ValueError(cfg.arch_type)
+
+
+def encoder_stack(params, cfg: ModelConfig, frames: Array, impl="chunked",
+                  remat: bool = False):
+    """Whisper-style bidirectional encoder over (stub) frame embeddings."""
+    x = frames @ params["frontend_proj"].astype(frames.dtype)
+    positions = jnp.arange(x.shape[1])
+    blk = _maybe_remat(
+        lambda p, c: _apply_attn_block(p, cfg, c, positions, impl,
+                                       mode="full"), remat)
+
+    def body(carry, p):
+        return blk(p, carry), None
+
+    x, _ = layer_scan(body, x, params["encoder_blocks"])
+    return layers.apply_norm(cfg.norm, params["enc_final_norm"], x)
+
+
+def _apply_attn_block_kv(p, cfg, x, positions, impl, enc_out=None,
+                         enc_positions=None):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, (k, v) = attention.attention(p["attn"], cfg, h, positions,
+                                    impl=impl, return_kv=True)
+    x = x + y
+    if enc_out is not None:
+        h = layers.apply_norm(cfg.norm, p["ln_x"], x)
+        x = x + attention.attention(
+            p["xattn"], cfg, h, positions, kv_src=enc_out,
+            kv_positions=enc_positions, mode="full", rope=False, impl=impl)
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    return x + layers.apply_mlp(cfg.mlp, p["mlp"], h), (k, v)
+
+
+def _apply_moe_block_kv(p, cfg, x, positions, impl):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, (k, v) = attention.attention(p["attn"], cfg, h, positions,
+                                    impl=impl, return_kv=True)
+    x = x + y
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    y, _ = moe.apply_moe(p["moe"], cfg, h)
+    return x + y, (k, v)
+
+
+def _apply_ssm_block_state(p, cfg, x):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, st = ssm.mamba2_forward(p["mixer"], cfg, h, return_state=True)
+    return x + y, st
+
+
+def _place_kv(ks: Array, W: int, S: int) -> Array:
+    """(n, B, S, KV, hd) fresh K/V -> (n, B, W, KV, hd) ring-buffer layout
+    with next position = S (slot of absolute position p is p mod W)."""
+    n, B = ks.shape[0], ks.shape[1]
+    if W >= S:
+        pad = jnp.zeros((n, B, W - S) + ks.shape[3:], ks.dtype)
+        return jnp.concatenate([ks, pad], axis=2)
+    keep = ks[:, :, S - W:]                     # last W positions
+    slots = jnp.mod(jnp.arange(S - W, S), W)    # their ring slots
+    cache = jnp.zeros((n, B, W) + ks.shape[3:], ks.dtype)
+    return cache.at[:, :, slots].set(keep)
+
+
+# ---------------------------------------------------------------------------
+# training forward + chunked loss
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(
+    h: Array, w_head: Array, labels: Array, mask: Array, block: int = 512
+) -> Tuple[Array, Array]:
+    """Next-token CE without materialising (B, S, V) logits.
+
+    h: (B, S, D) final hidden states; labels/mask: (B, S).
+    Returns (sum_nll, sum_mask) so callers can weight across microbatches.
+    """
+    B, S, D = h.shape
+    block = min(block, S)
+    assert S % block == 0
+    n = S // block
+    hb = h.reshape(B, n, block, D).transpose(1, 0, 2, 3)
+    lb = labels.reshape(B, n, block).transpose(1, 0, 2)
+    mb = mask.reshape(B, n, block).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute per-block logits in bwd: never hold (B,S,V)
+    def step(carry, inp):
+        nll_sum, m_sum = carry
+        h_i, l_i, m_i = inp
+        logits = (h_i @ w_head.astype(h_i.dtype)).astype(jnp.float32)
+        logits = hint(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, l_i[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = (lse - picked) * m_i
+        return (nll_sum + nll.sum(), m_sum + m_i.sum()), None
+
+    (nll_sum, m_sum), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hb, lb, mb),
+    )
+    return nll_sum, m_sum
+
+
+def forward_train(
+    params, cfg: ModelConfig, batch: Dict[str, Array], impl: str = "chunked",
+    remat: bool = False,
+) -> Tuple[Array, Dict[str, Array]]:
+    """batch: tokens (B, S_text), labels (B, S_text), optional
+    frontend (B, F, fd) [vlm], encoder_frames (B, Senc, fd) [audio]."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B = tokens.shape[0]
+    dt = cfg.dtype_jnp
+    x = params["embed"].astype(dt)[tokens]
+    x = hint(x, "activations")
+
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = encoder_stack(params, cfg, batch["encoder_frames"].astype(dt),
+                                impl, remat=remat)
+        enc_positions = jnp.arange(enc_out.shape[1])
+    if cfg.frontend_tokens > 0 and not cfg.is_encdec:
+        fe = batch["frontend"].astype(dt) @ params["frontend_proj"].astype(dt)
+        x = jnp.concatenate([fe, x], axis=1)          # early fusion
+        pad = jnp.zeros((B, cfg.frontend_tokens), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.frontend_tokens), jnp.float32),
+             jnp.ones_like(batch["labels"], jnp.float32)], axis=1)
+    else:
+        mask = jnp.ones_like(labels, jnp.float32)
+
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, aux = decoder_stack(params, cfg, x, positions, impl,
+                           enc_out, enc_positions, remat=remat)
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    nll_sum, m_sum = chunked_cross_entropy(
+        x, head_weight(params, cfg), labels, mask
+    )
+    loss = nll_sum / jnp.maximum(m_sum, 1.0)
+    if cfg.is_moe:
+        loss = loss + cfg.router_aux_weight * aux
+    return loss, {"nll": loss, "aux": aux, "tokens": m_sum}
+
+
+# ---------------------------------------------------------------------------
+# serving: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+class DecodeCaches(NamedTuple):
+    """All mutable decode state, stacked over layers where applicable.
+
+    ``shared_k/shared_v`` hold the *secondary* attention cache stack:
+    the hybrid family's parameter-shared block (one entry per application
+    point) or the interleaved-MoE family's dense layers (Llama-4 style).
+    """
+    k: Optional[Array]          # (L, B, W, KV, hd) primary attention stack
+    v: Optional[Array]
+    ssm_conv: Optional[Array]   # (L, B, cw-1, Cch)
+    ssm_h: Optional[Array]      # (L, B, H, N, P)
+    shared_k: Optional[Array]   # (n2, B, W, KV, hd) secondary stack
+    shared_v: Optional[Array]
+    cross_k: Optional[Array]    # (L, B, Senc, KV, hd) whisper
+    cross_v: Optional[Array]
+    pos: Array                  # scalar i32: next absolute position
+
+
+def cache_window(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window > 0 else seq_len
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int,
+                enc_seq: int = 0) -> DecodeCaches:
+    dt = cfg.kv_dtype_jnp
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    W = cache_window(cfg, seq_len)
+    k = v = ssm_conv = ssm_h = shared_k = shared_v = cross_k = cross_v = None
+    kinds = cfg.layer_kinds()
+    if cfg.arch_type == "moe" and cfg.moe_every > 1:
+        n_attn = cfg.num_layers // cfg.moe_every          # moe layers
+        n_secondary = cfg.num_layers - n_attn             # dense layers
+    else:
+        n_attn = sum(1 for kk in kinds if kk in ("attn", "moe"))
+        n_secondary = 0
+    if n_attn:
+        k = jnp.zeros((n_attn, batch, W, KV, hd), dt)
+        v = jnp.zeros((n_attn, batch, W, KV, hd), dt)
+    n_ssm = sum(1 for kk in kinds if kk == "ssm")
+    if n_ssm:
+        st = ssm.init_ssm_state(cfg, batch, dt)
+        ssm_conv = jnp.zeros((n_ssm,) + st.conv.shape, dt)
+        ssm_h = jnp.zeros((n_ssm,) + st.h.shape, jnp.float32)
+    if cfg.arch_type == "hybrid":
+        n_secondary = cfg.num_layers // cfg.shared_attn_every
+    if n_secondary:
+        shared_k = jnp.zeros((n_secondary, batch, W, KV, hd), dt)
+        shared_v = jnp.zeros((n_secondary, batch, W, KV, hd), dt)
+    if cfg.is_encdec:
+        cross_k = jnp.zeros((cfg.num_layers, batch, enc_seq, KV, hd), dt)
+        cross_v = jnp.zeros((cfg.num_layers, batch, enc_seq, KV, hd), dt)
+    return DecodeCaches(k, v, ssm_conv, ssm_h, shared_k, shared_v,
+                        cross_k, cross_v, jnp.zeros((), jnp.int32))
+
+
+def _decode_attn_block(p, cfg, x, kc, vc, pos, impl, cross_kv=None):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, kc, vc = attention.decode_attention(p["attn"], cfg, h, kc, vc, pos,
+                                           impl=impl)
+    x = x + y
+    if cross_kv is not None:
+        ck, cv = cross_kv
+        h = layers.apply_norm(cfg.norm, p["ln_x"], x)
+        x = x + _cross_decode(p["xattn"], cfg, h, ck, cv)
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    return x + layers.apply_mlp(cfg.mlp, p["mlp"], h), kc, vc
+
+
+def _cross_decode(p, cfg: ModelConfig, x, ck, cv):
+    """Cross-attention for one decode token: K/V precomputed (B,Senc,KV,hd).
+    Uses the einsum form — the encoder context is short (e.g. 1,500
+    frames) and need not be block-divisible."""
+    B = x.shape[0]
+    dt = x.dtype
+    q = (x @ p["w_q"].astype(dt)).reshape(B, 1, cfg.num_heads, cfg.hd)
+    valid = jnp.ones((ck.shape[1],), bool)
+    out = attention._einsum_decode(q, ck, cv, valid)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.hd)
+    return out @ p["w_o"].astype(dt)
+
+
+def _decode_moe_block(p, cfg, x, kc, vc, pos, impl):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, kc, vc = attention.decode_attention(p["attn"], cfg, h, kc, vc, pos,
+                                           impl=impl)
+    x = x + y
+    h = layers.apply_norm(cfg.norm, p["ln2"], x)
+    y, _ = moe.apply_moe(p["moe"], cfg, h)
+    return x + y, kc, vc
+
+
+def _decode_ssm_block(p, cfg, x, state: ssm.SSMState):
+    h = layers.apply_norm(cfg.norm, p["ln1"], x)
+    y, state = ssm.mamba2_decode(p["mixer"], cfg, h, state)
+    return x + y, state
+
+
+def decode_step(
+    params, cfg: ModelConfig, token: Array, caches: DecodeCaches,
+    impl: str = "chunked",
+) -> Tuple[Array, DecodeCaches]:
+    """One serve step: token (B, 1) -> logits (B, V), updated caches."""
+    dt = cfg.dtype_jnp
+    pos = caches.pos
+    x = params["embed"].astype(dt)[token]                 # (B, 1, D)
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        def body(carry, inp):
+            if cfg.is_encdec:
+                p, kc, vc, ck, cv = inp
+                y, kc, vc = _decode_attn_block(p, cfg, carry, kc, vc, pos,
+                                               impl, cross_kv=(ck, cv))
+            else:
+                p, kc, vc = inp
+                y, kc, vc = _decode_attn_block(p, cfg, carry, kc, vc, pos,
+                                               impl)
+            return y, (kc, vc)
+        xs = ((params["blocks"], caches.k, caches.v, caches.cross_k,
+               caches.cross_v) if cfg.is_encdec else
+              (params["blocks"], caches.k, caches.v))
+        x, (k_new, v_new) = layer_scan(body, x, xs)
+        caches = caches._replace(k=k_new, v=v_new)
+
+    elif cfg.arch_type == "moe":
+        if cfg.moe_every > 1:
+            n_moe = cfg.num_layers // cfg.moe_every
+            dense_g = jax.tree.map(
+                lambda a: a.reshape((n_moe, cfg.moe_every - 1) + a.shape[1:]),
+                params["dense_blocks"])
+            sk = caches.shared_k.reshape(
+                (n_moe, cfg.moe_every - 1) + caches.shared_k.shape[1:])
+            sv = caches.shared_v.reshape(
+                (n_moe, cfg.moe_every - 1) + caches.shared_v.shape[1:])
+
+            def group_body(carry, inp):
+                pd, pm, kd, vd, km, vm = inp
+
+                def inner(c, blk):
+                    p, kc, vc = blk
+                    y, kc, vc = _decode_attn_block(p, cfg, c, kc, vc, pos,
+                                                   impl)
+                    return y, (kc, vc)
+                y, (kd_n, vd_n) = layer_scan(inner, carry, (pd, kd, vd))
+                y, km_n, vm_n = _decode_moe_block(pm, cfg, y, km, vm, pos,
+                                                  impl)
+                return y, (kd_n, vd_n, km_n, vm_n)
+
+            x, (kd_n, vd_n, km_n, vm_n) = layer_scan(
+                group_body, x,
+                (dense_g, params["blocks"], sk, sv, caches.k, caches.v))
+            caches = caches._replace(
+                k=km_n, v=vm_n,
+                shared_k=kd_n.reshape(caches.shared_k.shape),
+                shared_v=vd_n.reshape(caches.shared_v.shape))
+        else:
+            def body(carry, inp):
+                p, kc, vc = inp
+                y, kc, vc = _decode_moe_block(p, cfg, carry, kc, vc, pos,
+                                              impl)
+                return y, (kc, vc)
+            x, (k_new, v_new) = layer_scan(
+                body, x, (params["blocks"], caches.k, caches.v))
+            caches = caches._replace(k=k_new, v=v_new)
+
+    elif cfg.arch_type == "ssm":
+        def body(carry, inp):
+            p, conv, h = inp
+            y, st = _decode_ssm_block(p, cfg, carry, ssm.SSMState(conv, h))
+            return y, (st.conv, st.h)
+        x, (conv_new, h_new) = layer_scan(
+            body, x, (params["blocks"], caches.ssm_conv, caches.ssm_h))
+        caches = caches._replace(ssm_conv=conv_new, ssm_h=h_new)
+
+    elif cfg.arch_type == "hybrid":
+        every = cfg.shared_attn_every
+        n_app = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_app, every) + a.shape[1:]),
+            params["blocks"],
+        )
+        conv_g = caches.ssm_conv.reshape((n_app, every) + caches.ssm_conv.shape[1:])
+        h_g = caches.ssm_h.reshape((n_app, every) + caches.ssm_h.shape[1:])
+        shared = params["shared_attn"]
+
+        def group_body(carry, inp):
+            pg, conv_i, h_i, sk, sv = inp
+
+            def inner(c, blk):
+                p, conv, h = blk
+                y, st = _decode_ssm_block(p, cfg, c, ssm.SSMState(conv, h))
+                return y, (st.conv, st.h)
+
+            y, (conv_o, h_o) = layer_scan(inner, carry, (pg, conv_i, h_i))
+            y2, sk, sv = _decode_attn_block(shared, cfg, y, sk, sv, pos, impl)
+            return y2, (conv_o, h_o, sk, sv)
+
+        x, (conv_new, h_new, sk_new, sv_new) = layer_scan(
+            group_body, x,
+            (grouped, conv_g, h_g, caches.shared_k, caches.shared_v))
+        caches = caches._replace(
+            ssm_conv=conv_new.reshape(caches.ssm_conv.shape),
+            ssm_h=h_new.reshape(caches.ssm_h.shape),
+            shared_k=sk_new, shared_v=sv_new,
+        )
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, 0] @ head_weight(params, cfg).astype(dt)).astype(jnp.float32)
+    return logits, caches._replace(pos=pos + 1)
+
+
+def prefill(
+    params, cfg: ModelConfig, tokens: Array, *,
+    frontend: Optional[Array] = None, encoder_frames: Optional[Array] = None,
+    cache_len: Optional[int] = None, impl: str = "chunked",
+) -> Tuple[Array, DecodeCaches]:
+    """Run the prompt through the decoder, filling caches token-by-token
+    via ``decode_step`` (correct for every family; optimised batched
+    prefill is a serving-engine concern, tracked in EXPERIMENTS.md §Perf).
+
+    Returns (logits of last position, caches).
+    """
+    B, S = tokens.shape
+    W = cache_len or S
+    enc_seq = 0
+    caches = init_caches(cfg, B, W,
+                         enc_seq=(encoder_frames.shape[1]
+                                  if encoder_frames is not None else 0))
+    if cfg.is_encdec:
+        enc_out = encoder_stack(params, cfg, encoder_frames.astype(cfg.dtype_jnp))
+        caches = caches._replace(
+            **_cross_kv(params, cfg, enc_out)
+        )
+    if frontend is not None:
+        fe = frontend.astype(cfg.dtype_jnp) @ params["frontend_proj"].astype(
+            cfg.dtype_jnp)
+        # feed frontend embeddings as pseudo-tokens first
+        for i in range(fe.shape[1]):
+            _, caches = _decode_embedded(params, cfg, fe[:, i:i + 1], caches,
+                                         impl)
+
+    def step(caches, tok):
+        logits, caches = decode_step(params, cfg, tok[:, None], caches, impl)
+        return caches, logits
+
+    caches, logits_all = jax.lax.scan(step, caches, tokens.T)
+    return logits_all[-1], caches
+
+
+def prefill_forward(
+    params, cfg: ModelConfig, tokens: Array, *,
+    frontend: Optional[Array] = None, encoder_frames: Optional[Array] = None,
+    cache_len: Optional[int] = None, impl: str = "chunked",
+) -> Tuple[Array, DecodeCaches]:
+    """Batched prefill: one full-sequence forward pass that emits the
+    decode caches (roped per-layer K/V in ring-buffer layout, SSM states,
+    hybrid shared-block K/V, enc-dec cross K/V) plus last-token logits.
+
+    This is the production prefill path (and what the prefill_32k dry-run
+    lowers); the token-by-token ``prefill`` above is the slow oracle.
+    """
+    B = tokens.shape[0]
+    dt = cfg.dtype_jnp
+    x = params["embed"].astype(dt)[tokens]
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = encoder_stack(params, cfg, encoder_frames.astype(dt), impl)
+        enc_positions = jnp.arange(enc_out.shape[1])
+    if frontend is not None and not cfg.is_encdec:
+        fe = frontend.astype(dt) @ params["frontend_proj"].astype(dt)
+        x = jnp.concatenate([fe, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    W = cache_window(cfg, cache_len or S)
+
+    k = v = ssm_conv = ssm_h = shared_k = shared_v = cross_k = cross_v = None
+
+    if cfg.arch_type in ("dense", "vlm", "audio"):
+        def body(carry, p):
+            y, kv = _apply_attn_block_kv(p, cfg, carry, positions, impl,
+                                         enc_out, enc_positions)
+            return y, kv
+        x, (ks, vs) = layer_scan(body, x, params["blocks"])
+        k, v = _place_kv(ks, W, S), _place_kv(vs, W, S)
+        if cfg.is_encdec:
+            ckv = _cross_kv(params, cfg, enc_out)
+            cross_k, cross_v = ckv["cross_k"], ckv["cross_v"]
+
+    elif cfg.arch_type == "moe":
+        if cfg.moe_every > 1:
+            n_moe = cfg.num_layers // cfg.moe_every
+            dense_g = jax.tree.map(
+                lambda a: a.reshape((n_moe, cfg.moe_every - 1) + a.shape[1:]),
+                params["dense_blocks"])
+
+            def group_body(carry, inp):
+                pd, pm = inp
+
+                def inner(c, p):
+                    y, kv = _apply_attn_block_kv(p, cfg, c, positions, impl)
+                    return y, kv
+                y, d_kv = layer_scan(inner, carry, pd)
+                y, m_kv = _apply_moe_block_kv(pm, cfg, y, positions, impl)
+                return y, (d_kv, m_kv)
+
+            x, ((dks, dvs), (ks, vs)) = layer_scan(
+                group_body, x, (dense_g, params["blocks"]))
+            k, v = _place_kv(ks, W, S), _place_kv(vs, W, S)
+            n_dense = cfg.num_layers - n_moe
+            dks = dks.reshape((n_dense,) + dks.shape[2:])
+            dvs = dvs.reshape((n_dense,) + dvs.shape[2:])
+            shared_k, shared_v = _place_kv(dks, W, S), _place_kv(dvs, W, S)
+        else:
+            def body(carry, p):
+                y, kv = _apply_moe_block_kv(p, cfg, carry, positions, impl)
+                return y, kv
+            x, (ks, vs) = layer_scan(body, x, params["blocks"])
+            k, v = _place_kv(ks, W, S), _place_kv(vs, W, S)
+
+    elif cfg.arch_type == "ssm":
+        def body(carry, p):
+            y, st = _apply_ssm_block_state(p, cfg, carry)
+            return y, (st.conv, st.h)
+        x, (ssm_conv, ssm_h) = layer_scan(body, x, params["blocks"])
+
+    elif cfg.arch_type == "hybrid":
+        every = cfg.shared_attn_every
+        n_app = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_app, every) + a.shape[1:]),
+            params["blocks"])
+        shared = params["shared_attn"]
+
+        def group_body(carry, pg):
+            def inner(c, p):
+                y, st = _apply_ssm_block_state(p, cfg, c)
+                return y, (st.conv, st.h)
+            y, states = layer_scan(inner, carry, pg)
+            y, kv = _apply_attn_block_kv(shared, cfg, y, positions, impl)
+            return y, (states, kv)
+        x, ((conv_g, h_g), (ks, vs)) = layer_scan(group_body, x, grouped)
+        ssm_conv = conv_g.reshape((cfg.num_layers,) + conv_g.shape[2:])
+        ssm_h = h_g.reshape((cfg.num_layers,) + h_g.shape[2:])
+        shared_k, shared_v = _place_kv(ks, W, S), _place_kv(vs, W, S)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = (x[:, -1] @ head_weight(params, cfg).astype(dt)).astype(
+        jnp.float32)
+    caches = DecodeCaches(
+        k=k, v=v, ssm_conv=ssm_conv, ssm_h=ssm_h,
+        shared_k=shared_k, shared_v=shared_v,
+        cross_k=cross_k, cross_v=cross_v,
+        pos=jnp.asarray(S, jnp.int32),
+    )
+    return logits, caches
+
+
+def _cross_kv(params, cfg: ModelConfig, enc_out: Array):
+    """Precompute per-decoder-layer cross-attention K/V from encoder out."""
+    dt = enc_out.dtype
+    B, T, _ = enc_out.shape
+
+    def one(p):
+        k = (enc_out @ p["xattn"]["w_k"].astype(dt)).reshape(
+            B, T, cfg.num_kv_heads, cfg.hd)
+        v = (enc_out @ p["xattn"]["w_v"].astype(dt)).reshape(
+            B, T, cfg.num_kv_heads, cfg.hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["blocks"])
+    return {"cross_k": ks, "cross_v": vs}
+
+
+def _decode_embedded(params, cfg, x_emb, caches, impl):
+    """decode_step variant fed with an embedding instead of a token id
+    (VLM patch embeddings during prefill)."""
+    # Reuse decode_step by temporarily bypassing the embedding lookup:
+    # simplest correct route — push through the same layer scans.
+    pos = caches.pos
+    if cfg.arch_type in ("dense", "vlm", "audio") and not cfg.is_encdec:
+        def body(carry, inp):
+            p, kc, vc = inp
+            y, kc, vc = _decode_attn_block(p, cfg, carry, kc, vc, pos, impl)
+            return y, (kc, vc)
+        x, (k_new, v_new) = layer_scan(
+            body, x_emb, (params["blocks"], caches.k, caches.v))
+        caches = caches._replace(k=k_new, v=v_new)
+        return None, caches._replace(pos=pos + 1)
+    raise NotImplementedError(
+        "embedded prefill only used for decoder-only VLM")

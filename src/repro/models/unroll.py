@@ -1,0 +1,35 @@
+"""Layer-scan unroll switch.
+
+The multi-pod dry-run counts GSPMD collectives from the compiled HLO
+text; inside a rolled ``while`` loop they appear once regardless of trip
+count. ``layer_scan`` lets the dry-run compile reduced-depth variants
+with the *layer* scans fully unrolled (inner attention/SSD scans stay
+rolled — they contain no collectives), so textual counts are exact at
+those depths and extrapolate linearly to the full depth.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = False
+
+
+@contextlib.contextmanager
+def unrolled_layers():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev
+
+
+def layer_scan(body, init, xs):
+    """lax.scan over the layer stack, honouring the unroll switch."""
+    if _UNROLL:
+        length = jax.tree.leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, init, xs, unroll=length)
+    return jax.lax.scan(body, init, xs)

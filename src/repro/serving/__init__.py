@@ -1,0 +1,1 @@
+from repro.serving.engine import PortfolioServer, ServedModel, SimulatedJudge  # noqa: F401

@@ -1,0 +1,240 @@
+"""PortfolioServer: ParetoBandit routing wired into real model serving.
+
+This is the framework's integration point for the paper: a portfolio of
+*actually served* JAX models (any architecture from repro.configs), a
+feature pipeline (hash-encoder + PCA), Algorithm 1 arm selection, greedy
+decode on the chosen model, and closed-loop bandit/pacer updates from the
+observed (reward, cost).
+
+Rewards come from a pluggable judge. Offline we ship ``SimulatedJudge``
+(per-(family, tier) quality + noise — the stand-in for DeepSeek-R1);
+in production the same interface is an async LLM-judge callback, which is
+why the router caches context vectors at route time (§3.1/§3.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry as registry_lib
+from repro.core import router as router_lib
+from repro.core.costs import ArmPricing
+from repro.core.features import PCAWhitener, hash_encode
+from repro.core.types import RouterConfig, RouterState, init_state
+from repro.models import decode_step, init_model, prefill_forward
+from repro.models.config import ModelConfig
+from repro.serving.feedback_store import InMemoryFeedbackStore
+from repro.serving.sampler import sample_token
+from repro.serving.tokenizer import HashTokenizer
+
+
+@dataclasses.dataclass
+class ServedModel:
+    """One portfolio arm: a runnable model + its pricing."""
+
+    name: str
+    cfg: ModelConfig
+    params: Dict
+    pricing: ArmPricing
+    tier: str = "mid"  # budget | mid | frontier (judge quality profile)
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, pricing: ArmPricing, tier: str,
+             seed: int = 0) -> "ServedModel":
+        params = init_model(jax.random.PRNGKey(seed), cfg)
+        return cls(name=cfg.name, cfg=cfg, params=params, pricing=pricing,
+                   tier=tier)
+
+    PROMPT_BUCKET = 32  # pad prompts to a fixed bucket: one compile
+
+    def generate(self, tokens: np.ndarray, max_new: int = 16) -> np.ndarray:
+        pad = (-len(tokens)) % self.PROMPT_BUCKET or (
+            self.PROMPT_BUCKET if len(tokens) == 0 else 0)
+        # left-pad with BOS so the causal suffix is the real prompt
+        toks = np.concatenate([np.ones(pad, np.int32), tokens])[
+            -4 * self.PROMPT_BUCKET:]
+        toks = jnp.asarray(toks[None, :])
+        cache_len = toks.shape[1] + max_new
+        logits, caches = self._prefill(toks, cache_len)
+        out = []
+        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(max_new):
+            out.append(int(cur[0, 0]))
+            logits, caches = self._decode(cur, caches)
+            cur = sample_token(logits, jax.random.PRNGKey(0))[:, None]
+        return np.asarray(out, np.int32)
+
+    def _prefill(self, toks, cache_len: int):
+        if not hasattr(self, "_prefill_jit"):
+            self._prefill_jit = {}
+        key = (toks.shape, cache_len)
+        if key not in self._prefill_jit:
+            import functools
+            self._prefill_jit[key] = jax.jit(functools.partial(
+                prefill_forward, cfg=self.cfg, cache_len=cache_len))
+        return self._prefill_jit[key](self.params, tokens=toks)
+
+    def _decode(self, cur, caches):
+        if not hasattr(self, "_decode_jit"):
+            self._decode_jit = jax.jit(
+                lambda p, t, c: decode_step(p, self.cfg, t, c))
+        return self._decode_jit(self.params, cur, caches)
+
+
+class SimulatedJudge:
+    """Offline reward oracle: quality by (task family, model tier) + noise.
+    Profiles mirror the simulator's calibrated matrix (DESIGN.md §4)."""
+
+    PROFILES = {
+        # family:     budget  mid   frontier
+        "math":       (0.69, 0.84, 0.96),
+        "code":       (0.73, 0.86, 0.96),
+        "reasoning":  (0.72, 0.85, 0.96),
+        "knowledge":  (0.81, 0.985, 0.945),
+        "commonsense": (0.87, 0.98, 0.93),
+    }
+    TIERS = ("budget", "mid", "frontier")
+
+    def __init__(self, seed: int = 0, noise: float = 0.055):
+        self.rng = np.random.default_rng(seed)
+        self.noise = noise
+        self.overrides: Dict[str, float] = {}  # model name -> forced mean
+
+    def score(self, family: str, model: ServedModel) -> float:
+        if model.name in self.overrides:
+            base = self.overrides[model.name]
+        else:
+            prof = self.PROFILES.get(family, self.PROFILES["reasoning"])
+            base = prof[self.TIERS.index(model.tier)]
+        return float(np.clip(base + self.noise * self.rng.standard_normal(),
+                             0.0, 1.0))
+
+    def degrade(self, model_name: str, mean: float):
+        """Silently regress one model (§4.4 stress test)."""
+        self.overrides[model_name] = mean
+
+    def restore(self, model_name: str):
+        self.overrides.pop(model_name, None)
+
+
+@dataclasses.dataclass
+class ServeResult:
+    request_id: int
+    model: str
+    arm: int
+    reward: float
+    cost: float
+    tokens_out: int
+    route_us: float
+    total_ms: float
+    lam: float
+
+
+class PortfolioServer:
+    """Closed-loop serving: route -> generate -> judge -> update."""
+
+    def __init__(
+        self,
+        models: List[ServedModel],
+        whitener: PCAWhitener,
+        budget: float,
+        router_cfg: Optional[RouterConfig] = None,
+        judge: Optional[SimulatedJudge] = None,
+        max_new_tokens: int = 8,
+        seed: int = 0,
+        feedback_store=None,
+    ):
+        self.cfg = router_cfg or RouterConfig()
+        self.whitener = whitener
+        self.judge = judge or SimulatedJudge(seed)
+        self.max_new_tokens = max_new_tokens
+        self.models: List[Optional[ServedModel]] = [None] * self.cfg.max_arms
+        self._select = jax.jit(
+            lambda s, x: router_lib.select(self.cfg, s, x))
+        self._update = jax.jit(
+            lambda s, a, x, r, c: router_lib.update(self.cfg, s, a, x, r, c))
+        prices_req = np.full(self.cfg.max_arms, 1e9, np.float32)
+        prices_1k = np.full(self.cfg.max_arms, 1e9, np.float32)
+        active = np.zeros(self.cfg.max_arms, bool)
+        self.state: RouterState = init_state(
+            self.cfg, prices_req, prices_1k, budget,
+            key=jax.random.PRNGKey(seed), active=jnp.asarray(active),
+        )
+        # context cache for async feedback (§3.6): in-memory default,
+        # SQLiteFeedbackStore for durable multi-worker deployments
+        self._ctx_cache = feedback_store or InMemoryFeedbackStore()
+        for i, m in enumerate(models):
+            self.add_model(m, slot=i, forced_exploration=False)
+
+    # -- portfolio management (hot swap, §3.6) ------------------------------
+    def add_model(self, model: ServedModel, slot: Optional[int] = None,
+                  n_eff: float = 0.0, forced_exploration: bool = True) -> int:
+        if slot is None:
+            slot = next(
+                i for i, m in enumerate(self.models)
+                if m is None and not bool(self.state.active[i])
+            )
+        self.models[slot] = model
+        self.state = registry_lib.add_arm(
+            self.cfg, self.state, slot,
+            model.pricing.price_per_req, model.pricing.price_per_1k,
+            n_eff=n_eff or None, forced_exploration=forced_exploration,
+        )
+        return slot
+
+    def remove_model(self, slot: int) -> None:
+        self.models[slot] = None
+        self.state = registry_lib.delete_arm(self.cfg, self.state, slot)
+
+    def set_budget(self, budget: float) -> None:
+        from repro.core import pacer
+        self.state = dataclasses.replace(
+            self.state, pacer=pacer.set_budget(self.state.pacer, budget))
+
+    # -- request path -------------------------------------------------------
+    def featurize(self, prompt: str) -> jnp.ndarray:
+        raw = jnp.asarray(hash_encode(prompt))
+        return self.whitener(raw)
+
+    def serve(self, request: Dict) -> ServeResult:
+        t0 = time.perf_counter()
+        x = self.featurize(request["prompt"])
+        self._ctx_cache.put(request["id"], np.asarray(x), -1)
+
+        r0 = time.perf_counter()
+        dec, self.state = self._select(self.state, x)
+        arm = int(dec.arm)
+        route_us = (time.perf_counter() - r0) * 1e6
+
+        model = self.models[arm]
+        tok = HashTokenizer(model.cfg.vocab_size)
+        prompt_ids = tok.encode(request["prompt"])
+        out = model.generate(prompt_ids, self.max_new_tokens)
+
+        n_tokens = len(prompt_ids) + len(out)
+        cost = model.pricing.price_per_1k * n_tokens / 1e3
+        reward = self.judge.score(request.get("family", "reasoning"), model)
+
+        self.feedback(request["id"], arm, reward, cost)
+        return ServeResult(
+            request_id=request["id"], model=model.name, arm=arm,
+            reward=reward, cost=cost, tokens_out=len(out),
+            route_us=route_us, total_ms=(time.perf_counter() - t0) * 1e3,
+            lam=float(dec.lam),
+        )
+
+    def feedback(self, request_id: int, arm: int, reward: float,
+                 cost: float) -> None:
+        """Asynchronous feedback path: uses the context cached at route
+        time, so late rewards never re-encode the prompt (§3.1)."""
+        ctx, _ = self._ctx_cache.pop(request_id)
+        x = jnp.asarray(ctx)
+        self.state = self._update(
+            self.state, jnp.asarray(arm),
+            x, jnp.float32(reward), jnp.float32(cost),
+        )

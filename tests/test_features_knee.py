@@ -1,0 +1,88 @@
+"""Feature pipeline + knee-point selection + cost model tests."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs, features, knee
+
+
+class TestFeatures:
+    def test_hash_encode_deterministic_and_normalised(self):
+        a = features.hash_encode("solve the equation")
+        b = features.hash_encode("solve the equation")
+        np.testing.assert_array_equal(a, b)
+        assert abs(np.linalg.norm(a) - 1.0) < 1e-5
+
+    def test_different_texts_differ(self):
+        a = features.hash_encode("write a python function")
+        b = features.hash_encode("which element has atomic number")
+        assert np.abs(a - b).max() > 0.01
+
+    def test_pca_whitening_unit_variance(self):
+        rng = np.random.default_rng(0)
+        # anisotropic raw data
+        scales = np.linspace(0.1, 5.0, features.RAW_DIM)
+        raw = rng.standard_normal((2000, features.RAW_DIM)) * scales
+        wh = features.fit_pca_whitener(jnp.asarray(raw, jnp.float32))
+        z = np.asarray(wh(jnp.asarray(raw, jnp.float32)))
+        assert z.shape == (2000, 26)
+        np.testing.assert_allclose(z[:, :25].std(axis=0), 1.0, atol=0.05)
+        np.testing.assert_array_equal(z[:, 25], 1.0)  # bias
+
+    def test_featurize_texts_shape(self):
+        rng = np.random.default_rng(0)
+        corpus = [f"prompt number {i} about topic {i % 5}" for i in range(64)]
+        raw = features.hash_encode_batch(corpus)
+        wh = features.fit_pca_whitener(jnp.asarray(raw))
+        x = features.featurize_texts(["a new prompt"], wh)
+        assert x.shape == (1, 26)
+        assert np.isfinite(np.asarray(x)).all()
+
+
+class TestKnee:
+    def test_pareto_frontier_filters_dominated(self):
+        pts = np.array([[1, 1], [2, 0.5], [0.5, 2], [0.9, 0.9]])
+        idx = set(knee.pareto_frontier(pts).tolist())
+        assert idx == {0, 1, 2}  # [0.9, 0.9] dominated by [1, 1]
+
+    def test_knee_of_l_curve(self):
+        # classic L-curve: knee at the corner point
+        pts = np.array([[0.0, 1.0], [0.8, 0.98], [0.98, 0.8], [1.0, 0.0]])
+        k = knee.knee_point(pts)
+        assert k in (1, 2)
+
+    def test_knee_scale_invariance(self):
+        pts = np.array([[0.0, 100.0], [0.8, 98.0], [0.98, 80.0], [1.0, 0.0]])
+        k = knee.knee_point(pts)
+        assert k in (1, 2)  # min-max normalisation handles scales
+
+    def test_auc_monotone(self):
+        c = np.array([1e-4, 1e-3, 1e-2])
+        assert knee.auc_of_frontier(c, np.array([0.9, 0.9, 0.9])) > \
+            knee.auc_of_frontier(c, np.array([0.5, 0.5, 0.5]))
+
+
+class TestCosts:
+    def test_flops_pricing_monotone_in_size(self):
+        small = costs.price_from_active_params("s", 1e9)
+        big = costs.price_from_active_params("b", 70e9)
+        assert big.price_per_1k > small.price_per_1k
+        assert abs(big.price_per_1k / small.price_per_1k - 70) < 1
+
+    def test_calibration_anchor(self):
+        # 8B params ~ the $0.1/M market floor
+        llama = costs.price_from_active_params("llama8b", 8e9)
+        assert abs(llama.price_per_1k - 1e-4) / 1e-4 < 0.01
+
+    def test_paper_portfolio_spread(self):
+        p = costs.PAPER_PORTFOLIO
+        spread = p[2].price_per_req / p[0].price_per_req
+        assert 400 < spread < 700  # the ~530x headline
+
+    def test_framework_portfolio_from_configs(self):
+        """Assigned architectures produce a realistic tiered portfolio."""
+        from repro import configs
+        olmo = costs.price_from_active_params(
+            "olmo-1b", configs.get_config("olmo-1b").active_params())
+        ds67 = costs.price_from_active_params(
+            "deepseek-67b", configs.get_config("deepseek-67b").active_params())
+        assert 30 < ds67.price_per_1k / olmo.price_per_1k < 120

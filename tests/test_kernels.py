@@ -1,0 +1,169 @@
+"""Per-kernel validation: shape/dtype sweeps against pure-jnp oracles,
+executed with interpret=True on CPU (TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_sequential
+from repro.kernels.linucb_score.ops import linucb_score
+from repro.kernels.linucb_score.ref import linucb_score_ref
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-5),
+        jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,KV,hd", [
+        (64, 4, 2, 16), (128, 8, 8, 32), (96, 6, 3, 48), (130, 4, 1, 24),
+    ])
+    def test_shapes_causal(self, S, H, KV, hd):
+        q = randn((2, S, H, hd))
+        k = randn((2, S, KV, hd))
+        v = randn((2, S, KV, hd))
+        ref = flash_attention_ref(q, k, v)
+        got = flash_attention(q, k, v, block_q=32, block_kv=32)
+        np.testing.assert_allclose(got, ref, **TOLS[jnp.float32])
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q = randn((1, 64, 4, 32), dtype)
+        k = randn((1, 64, 2, 32), dtype)
+        v = randn((1, 64, 2, 32), dtype)
+        ref = flash_attention_ref(q, k, v).astype(jnp.float32)
+        got = flash_attention(q, k, v, block_q=32, block_kv=32).astype(jnp.float32)
+        np.testing.assert_allclose(got, ref, **TOLS[dtype])
+
+    def test_sliding_window(self):
+        q = randn((2, 64, 4, 16))
+        k = randn((2, 64, 2, 16))
+        v = randn((2, 64, 2, 16))
+        ref = flash_attention_ref(q, k, v, mode="sliding", window=24)
+        got = flash_attention(q, k, v, mode="sliding", window=24,
+                              block_q=16, block_kv=16)
+        np.testing.assert_allclose(got, ref, **TOLS[jnp.float32])
+
+    def test_cross_attention_full(self):
+        q = randn((2, 64, 4, 16))
+        k = randn((2, 32, 2, 16))
+        v = randn((2, 32, 2, 16))
+        ref = flash_attention_ref(q, k, v, mode="full")
+        got = flash_attention(q, k, v, mode="full", block_q=16, block_kv=16)
+        np.testing.assert_allclose(got, ref, **TOLS[jnp.float32])
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("W,H,KV,hd,nvalid", [
+        (64, 4, 2, 16, 64), (128, 8, 1, 32, 100), (256, 4, 4, 64, 7),
+    ])
+    def test_shapes(self, W, H, KV, hd, nvalid):
+        q = randn((2, 1, H, hd))
+        k = randn((2, W, KV, hd))
+        v = randn((2, W, KV, hd))
+        valid = jnp.arange(W) < nvalid
+        ref = decode_attention_ref(q, k, v, valid)
+        got = decode_attention(q, k, v, valid, block_kv=32)
+        np.testing.assert_allclose(got, ref, **TOLS[jnp.float32])
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q = randn((1, 1, 4, 32), dtype)
+        k = randn((1, 64, 2, 32), dtype)
+        v = randn((1, 64, 2, 32), dtype)
+        valid = jnp.arange(64) < 50
+        ref = decode_attention_ref(q, k, v, valid).astype(jnp.float32)
+        got = decode_attention(q, k, v, valid, block_kv=32).astype(jnp.float32)
+        np.testing.assert_allclose(got, ref, **TOLS[dtype])
+
+    def test_ring_buffer_scattered_validity(self):
+        """Non-contiguous valid slots (sliding-window wrap pattern)."""
+        W = 64
+        q = randn((2, 1, 4, 16))
+        k = randn((2, W, 2, 16))
+        v = randn((2, W, 2, 16))
+        valid = jnp.asarray(RNG.random(W) > 0.5)
+        ref = decode_attention_ref(q, k, v, valid)
+        got = decode_attention(q, k, v, valid, block_kv=16)
+        np.testing.assert_allclose(got, ref, **TOLS[jnp.float32])
+
+
+class TestSSDScan:
+    def _inputs(self, B=2, L=64, H=4, P=8, N=16, dtype=jnp.float32):
+        x = randn((B, L, H, P), dtype)
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, L, H)), jnp.float32)
+        A = -jnp.asarray(RNG.uniform(0.5, 4.0, (H,)), jnp.float32)
+        Bi = randn((B, L, N), dtype)
+        Ci = randn((B, L, N), dtype)
+        D = jnp.asarray(RNG.standard_normal((H,)), jnp.float32)
+        return x, dt, A, Bi, Ci, D
+
+    @pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+    def test_chunk_sweep(self, chunk):
+        x, dt, A, Bi, Ci, D = self._inputs()
+        y_ref, h_ref = ssd_sequential(x, dt, A, Bi, Ci, D)
+        y, h = ssd_scan(x, dt, A, Bi, Ci, D, chunk=chunk)
+        np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(h, h_ref, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("P,N", [(8, 8), (16, 32), (64, 16)])
+    def test_dim_sweep(self, P, N):
+        x, dt, A, Bi, Ci, D = self._inputs(P=P, N=N)
+        y_ref, h_ref = ssd_sequential(x, dt, A, Bi, Ci, D)
+        y, h = ssd_scan(x, dt, A, Bi, Ci, D, chunk=16)
+        np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(h, h_ref, rtol=2e-4, atol=2e-4)
+
+    def test_bf16_inputs(self):
+        x, dt, A, Bi, Ci, D = self._inputs(dtype=jnp.bfloat16)
+        y_ref, _ = ssd_sequential(x, dt, A, Bi, Ci, D)
+        y, _ = ssd_scan(x, dt, A, Bi, Ci, D, chunk=16)
+        np.testing.assert_allclose(
+            y.astype(jnp.float32), y_ref.astype(jnp.float32),
+            rtol=0.08, atol=0.08)
+
+
+class TestLinUCBScore:
+    @pytest.mark.parametrize("R,K,d", [(32, 3, 26), (100, 4, 26), (256, 8, 13)])
+    def test_matches_ref(self, R, K, d):
+        x = randn((R, d))
+        theta = randn((K, d)) * 0.1
+        # SPD inverses
+        M = RNG.standard_normal((K, d, d)) * 0.1
+        A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None] * 1.2
+        ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+        pen = jnp.asarray(RNG.uniform(0, 1, (K,)), jnp.float32)
+        infl = jnp.asarray(RNG.uniform(0.005, 1.0, (K,)), jnp.float32)
+        ref = linucb_score_ref(x, theta, ainv, pen, infl, 0.05)
+        got = linucb_score(x, theta, ainv, pen, infl, alpha=0.05, block_r=32)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+    def test_matches_router_scores(self):
+        """Kernel == the router's own per-request scoring math (Eq. 2)."""
+        from repro.core import linucb
+        from repro.core.types import RouterConfig
+        cfg = RouterConfig(d=6, max_arms=4, alpha=0.05)
+        theta = randn((4, 6)) * 0.1
+        M = RNG.standard_normal((4, 6, 6)) * 0.1
+        A = np.einsum("kij,klj->kil", M, M) + np.eye(6)[None]
+        ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+        c_tilde = jnp.asarray([0.0, 0.3, 0.6, 0.9])
+        lam = jnp.float32(0.7)
+        dt = jnp.zeros((4,), jnp.int32)
+        x = randn((6,))
+        want = linucb.ucb_scores(cfg, theta, ainv, c_tilde, x, dt, lam)
+        pen = (cfg.lambda_c + lam) * c_tilde
+        infl = jnp.ones((4,))
+        got = linucb_score(x[None], theta, ainv, pen, infl, alpha=cfg.alpha)
+        np.testing.assert_allclose(got[0], want, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,164 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linucb, pacer, router
+from repro.core.types import RouterConfig, init_state, log_normalized_cost
+
+CFG = RouterConfig(d=5, max_arms=3)
+
+
+def mk_state(budget, prices, key=0):
+    return init_state(
+        CFG, jnp.asarray(prices, jnp.float32), jnp.asarray(prices, jnp.float32),
+        budget, key=jax.random.PRNGKey(key),
+    )
+
+
+# NOTE: jax's CPU backend enables fast-math (FTZ/DAZ) process-wide, which
+# makes hypothesis' native float strategies error out; derive floats from
+# integer strategies instead.
+finite_f = st.integers(-3000, 3000).map(lambda i: i / 1000.0)
+pos_f = st.integers(1, 100_000).map(lambda i: i * 1e-6)
+
+
+class TestPacerInvariants:
+    @given(costs=st.lists(pos_f, min_size=1, max_size=60),
+           budget=pos_f)
+    @settings(max_examples=30, deadline=None)
+    def test_lambda_always_in_bounds(self, costs, budget):
+        """Property (1) of §3.2: lambda_t in [0, lambda_bar] for ANY cost
+        stream and budget."""
+        st_ = mk_state(budget, (1e-4, 1e-3, 1e-2))
+        p = st_.pacer
+        for c in costs:
+            p = pacer.pacer_update(CFG, p, jnp.float32(c))
+            lam = float(p.lam)
+            assert 0.0 <= lam <= CFG.lambda_bar + 1e-6
+
+    @given(budget=pos_f, lam=st.integers(1, 5000).map(lambda i: i / 1000.0))
+    @settings(max_examples=30, deadline=None)
+    def test_hard_ceiling_caps_price(self, budget, lam):
+        """Property (3): when lambda > 0, every candidate's price is
+        <= c_max / (1 + lambda)."""
+        prices = (1e-4, 1e-3, 1e-2)
+        st_ = mk_state(budget, prices)
+        p = dataclasses.replace(st_.pacer, lam=jnp.float32(lam))
+        mask = pacer.hard_ceiling_mask(CFG, p, st_.price, st_.active)
+        ceiling = max(prices) / (1.0 + lam)
+        sel = np.asarray(st_.price)[np.asarray(mask)]
+        if sel.size:  # non-empty candidate set
+            assert (sel <= ceiling + 1e-12).all() or sel.size == 1
+
+    @given(budget=pos_f)
+    @settings(max_examples=20, deadline=None)
+    def test_candidate_set_never_empty(self, budget):
+        st_ = mk_state(budget, (1e-4, 1e-3, 1e-2))
+        for lam in (0.0, 0.5, 5.0):
+            p = dataclasses.replace(st_.pacer, lam=jnp.float32(lam))
+            mask = pacer.hard_ceiling_mask(CFG, p, st_.price, st_.active)
+            assert bool(np.asarray(mask).any())
+
+
+class TestLinUCBInvariants:
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_sherman_morrison_tracks_inverse(self, data):
+        """A_inv stays the true inverse of A under arbitrary interleavings
+        of decay and rank-1 updates."""
+        cfg = RouterConfig(d=4, max_arms=2, gamma=0.98)
+        A = jnp.eye(4)
+        A_inv = jnp.eye(4)
+        b = jnp.zeros(4)
+        for i in range(data.draw(st.integers(3, 15))):
+            x = jnp.asarray(
+                data.draw(st.lists(finite_f, min_size=4, max_size=4)),
+                jnp.float32)
+            dt = data.draw(st.integers(1, 5))
+            r = data.draw(finite_f)
+            A, A_inv, b, _ = linucb.rank1_update(
+                cfg, A, A_inv, b, x, jnp.float32(r), jnp.int32(dt))
+        np.testing.assert_allclose(
+            np.asarray(A_inv), np.linalg.inv(np.asarray(A)),
+            rtol=2e-2, atol=2e-3)
+
+    @given(dt=st.integers(0, 100_000))
+    @settings(max_examples=30, deadline=None)
+    def test_variance_inflation_bounded(self, dt):
+        """Property (2): staleness inflation is capped at V_max."""
+        cfg = RouterConfig(d=4, max_arms=2, gamma=0.99, v_max=100.0)
+        A_inv = jnp.eye(4) * 0.7
+        x = jnp.asarray([1.0, -0.5, 0.2, 1.0])
+        v0 = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(0))
+        v = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(dt))
+        assert float(v) <= float(v0) * 100.0 * (1 + 1e-5)
+        assert float(v) >= float(v0) * (1 - 1e-5)
+
+    @given(price=st.integers(1, 10**8).map(lambda i: i * 1e-7))
+    @settings(max_examples=50, deadline=None)
+    def test_log_cost_always_in_unit_interval(self, price):
+        c = float(log_normalized_cost(jnp.float32(price), CFG))
+        assert 0.0 <= c <= 1.0
+
+
+class TestRouterClosedLoop:
+    @given(seed=st.integers(0, 10_000),
+           budget=st.integers(50, 5000).map(lambda i: i * 1e-6))
+    @settings(max_examples=10, deadline=None)
+    def test_stream_invariants(self, seed, budget):
+        """Over a random stream: arms are always active, state stays
+        finite, and lambda stays in bounds."""
+        rng = np.random.default_rng(seed)
+        T = 80
+        xs = jnp.asarray(rng.standard_normal((T, CFG.d)), jnp.float32)
+        rmat = jnp.asarray(rng.uniform(0, 1, (T, 3)), jnp.float32)
+        cmat = jnp.asarray(
+            rng.lognormal(-8, 1, (T, 3)) * np.array([0.1, 1, 10]),
+            jnp.float32)
+        st_ = mk_state(budget, (1e-4, 1e-3, 1e-2), key=seed)
+        final, (arms, r, c, lam) = router.run_stream(CFG, st_, xs, rmat, cmat)
+        arms = np.asarray(arms)
+        assert ((arms >= 0) & (arms < 3)).all()
+        assert np.isfinite(np.asarray(lam)).all()
+        assert (np.asarray(lam) >= 0).all()
+        assert (np.asarray(lam) <= CFG.lambda_bar + 1e-5).all()
+        for leaf in jax.tree.leaves(final):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+
+class TestKernelProperties:
+    @given(seed=st.integers(0, 1000), s=st.sampled_from([16, 32, 48]),
+           kv=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=10, deadline=None)
+    def test_flash_attention_random_shapes(self, seed, s, kv):
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.flash_attention.ref import flash_attention_ref
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.standard_normal((1, s, 4, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, s, kv, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, s, kv, 16)), jnp.float32)
+        ref = flash_attention_ref(q, k, v)
+        got = flash_attention(q, k, v, block_q=16, block_kv=16)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+    @given(seed=st.integers(0, 1000), chunk=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=10, deadline=None)
+    def test_ssd_chunk_invariance(self, seed, chunk):
+        """SSD output must be invariant to the chunk size."""
+        from repro.models import ssm
+        rng = np.random.default_rng(seed)
+        B, L, H, P, N = 1, 32, 2, 4, 8
+        x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.001, 0.2, (B, L, H)), jnp.float32)
+        A = -jnp.asarray(rng.uniform(0.5, 4, (H,)), jnp.float32)
+        Bi = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+        Ci = jnp.asarray(rng.standard_normal((B, L, N)), jnp.float32)
+        D = jnp.zeros((H,))
+        y1, h1 = ssm.ssd_chunked(x, dt, A, Bi, Ci, D, chunk=chunk)
+        y2, h2 = ssm.ssd_chunked(x, dt, A, Bi, Ci, D, chunk=L)
+        np.testing.assert_allclose(y1, y2, rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-5)

@@ -1,0 +1,121 @@
+"""Calibration and structural tests for the offline benchmark environment."""
+import numpy as np
+import pytest
+
+from repro.core import simulator
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return simulator.make_benchmark(seed=0)
+
+
+class TestCalibration:
+    def test_split_sizes(self, bench):
+        assert bench.train.n == 8374
+        assert bench.val.n == 1785
+        assert bench.test.n == 1824
+
+    def test_model_means_match_paper(self, bench):
+        means = bench.test.rewards.mean(axis=0)
+        np.testing.assert_allclose(means, [0.793, 0.923, 0.932], atol=0.01)
+
+    def test_oracle_matches_paper(self, bench):
+        assert abs(simulator.oracle_reward(bench.test) - 0.963) < 0.01
+
+    def test_per_request_costs_match_table1(self, bench):
+        costs = bench.test.costs.mean(axis=0)
+        np.testing.assert_allclose(
+            costs, [2.9e-5, 5.3e-4, 1.5e-2], rtol=0.08
+        )
+
+    def test_cost_spread_530x(self, bench):
+        p = bench.test.prices_per_req
+        assert 400 < p[2] / p[0] < 700
+
+    def test_rewards_bounded(self, bench):
+        for env in (bench.train, bench.val, bench.test):
+            assert env.rewards.min() >= 0.0
+            assert env.rewards.max() <= 1.0
+
+
+class TestCostStructure:
+    """Appendix B structural properties."""
+
+    def test_cross_model_rank_correlation(self, bench):
+        # shared output-length factor -> Spearman rho ~0.5-0.7
+        c = bench.test.costs
+        def spearman(a, b):
+            ra = np.argsort(np.argsort(a)).astype(float)
+            rb = np.argsort(np.argsort(b)).astype(float)
+            return np.corrcoef(ra, rb)[0, 1]
+        rho01 = spearman(c[:, 0], c[:, 1])
+        rho12 = spearman(c[:, 1], c[:, 2])
+        assert 0.35 < rho01 < 0.85
+        assert 0.35 < rho12 < 0.85
+
+    def test_within_model_cv(self, bench):
+        c = bench.test.costs
+        cv = c.std(axis=0) / c.mean(axis=0)
+        assert np.all(cv > 0.4) and np.all(cv < 1.2)
+
+    def test_cost_ranking_preserved(self, bench):
+        # K=3: heuristic ordering holds on ~100% of prompts (530x spread)
+        c = bench.test.costs
+        frac = np.mean((c[:, 0] < c[:, 1]) & (c[:, 1] < c[:, 2]))
+        assert frac > 0.97
+
+
+class TestTransforms:
+    def test_price_multiplier(self, bench):
+        env = simulator.with_price_multiplier(bench.test, 2, 0.0067)
+        np.testing.assert_allclose(
+            env.costs[:, 2], bench.test.costs[:, 2] * 0.0067, rtol=1e-5
+        )
+        # other arms untouched
+        np.testing.assert_array_equal(env.costs[:, 0], bench.test.costs[:, 0])
+
+    def test_quality_shift_hits_target_mean(self, bench):
+        env = simulator.with_quality_shift(bench.test, 1, 0.75)
+        assert abs(env.rewards[:, 1].mean() - 0.75) < 0.01
+        np.testing.assert_array_equal(env.costs, bench.test.costs)
+
+    def test_three_phase_stream_structure(self, bench):
+        rng = np.random.default_rng(0)
+        stream = simulator.three_phase_stream(
+            bench.test,
+            lambda e: simulator.with_quality_shift(e, 1, 0.75),
+            rng,
+            phase_len=100,
+        )
+        assert stream.n == 300
+        # phase 3 reuses phase 1 prompts
+        np.testing.assert_array_equal(
+            stream.contexts[:100], stream.contexts[200:]
+        )
+        # phase 2 has the degraded arm
+        assert stream.rewards[100:200, 1].mean() < 0.8
+
+
+class TestFlashOnboarding:
+    def test_good_cheap_adds_arm(self, bench):
+        env = simulator.extend_with_flash(bench.test, "good_cheap")
+        assert env.k == 4
+        assert env.rewards[:, 3].mean() > 0.85
+        assert env.prices_per_req[3] < env.prices_per_req[1]
+
+    def test_bad_cheap_quality(self, bench):
+        env = simulator.extend_with_flash(bench.test, "bad_cheap")
+        assert env.rewards[:, 3].mean() < 0.72
+
+    def test_good_expensive_price(self, bench):
+        env = simulator.extend_with_flash(bench.test, "good_expensive")
+        assert env.prices_per_req[3] > 5e-3
+
+
+class TestDeterminism:
+    def test_same_seed_same_benchmark(self):
+        a = simulator.make_benchmark(seed=3, splits={"train": 200, "val": 50, "test": 50})
+        b = simulator.make_benchmark(seed=3, splits={"train": 200, "val": 50, "test": 50})
+        np.testing.assert_array_equal(a.test.rewards, b.test.rewards)
+        np.testing.assert_array_equal(a.test.contexts, b.test.contexts)

@@ -1,0 +1,147 @@
+"""Substrate tests: optimizer, schedules, data pipeline, checkpointing,
+and the serving engine's closed loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLMDataset, make_request_stream
+from repro.models import ModelConfig, init_model
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.training import (
+    load_checkpoint, make_train_step, save_checkpoint, train_state_init,
+)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        opt = adamw_init(params)
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, opt, _ = adamw_update(params, g, opt,
+                                          jnp.float32(0.05),
+                                          weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_grad_clipping(self):
+        params = {"w": jnp.zeros(3)}
+        opt = adamw_init(params)
+        g = {"w": jnp.asarray([1e6, 1e6, 1e6])}
+        _, _, m = adamw_update(params, g, opt, jnp.float32(0.1),
+                               clip_norm=1.0)
+        assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+    def test_moments_fp32(self):
+        params = {"w": jnp.zeros(3, jnp.bfloat16)}
+        opt = adamw_init(params)
+        assert opt.mu["w"].dtype == jnp.float32
+
+    def test_schedule_shape(self):
+        lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup_steps=10,
+                                   total_steps=100)) for s in range(100)]
+        assert lrs[0] < lrs[5] < lrs[10]          # warmup rises
+        assert abs(lrs[10] - 1.0) < 0.01          # hits peak
+        assert lrs[50] > lrs[99]                  # cosine decays
+        assert lrs[99] >= 0.1 - 1e-6              # min ratio
+
+
+class TestData:
+    def test_lm_batches_deterministic(self):
+        a = iter(SyntheticLMDataset(vocab_size=64, seq_len=16, batch_size=2))
+        b = iter(SyntheticLMDataset(vocab_size=64, seq_len=16, batch_size=2))
+        ba, bb = next(a), next(b)
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+        # labels are next tokens
+        np.testing.assert_array_equal(ba["tokens"][:, 1:], ba["labels"][:, :-1])
+
+    def test_lm_learnable(self):
+        """A tiny model's loss should drop markedly on the Markov stream."""
+        cfg = ModelConfig(name="t", arch_type="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                          vocab_size=128, dtype="float32")
+        ds = iter(SyntheticLMDataset(vocab_size=128, seq_len=32,
+                                     batch_size=8))
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        state = train_state_init(params)
+        step = jax.jit(make_train_step(cfg, remat=False, peak_lr=1e-2,
+                                       warmup_steps=5, total_steps=60))
+        losses = []
+        for i, batch in zip(range(60), ds):
+            state, m = step(state, {k: jnp.asarray(v) for k, v in batch.items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 1.0, (losses[0], losses[-1])
+
+    def test_request_stream(self):
+        reqs = make_request_stream(50, seed=1)
+        assert len(reqs) == 50
+        assert all("prompt" in r and "family" in r for r in reqs)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = ModelConfig(name="t", arch_type="dense", num_layers=2,
+                          d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                          vocab_size=64, dtype="float32")
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        state = train_state_init(params)
+        path = os.path.join(tmp_path, "ckpt.npz")
+        save_checkpoint(path, state, step=7)
+        zeroed = jax.tree.map(jnp.zeros_like, state)
+        restored = load_checkpoint(path, zeroed)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestServingEngine:
+    @pytest.fixture(scope="class")
+    def server(self):
+        from repro.core.costs import ArmPricing
+        from repro.core.features import fit_pca_whitener, hash_encode_batch
+        from repro.core.types import RouterConfig
+        from repro.serving import PortfolioServer, ServedModel
+
+        def tiny(name, seed):
+            cfg = ModelConfig(name=name, arch_type="dense", num_layers=1,
+                              d_model=32, num_heads=2, num_kv_heads=2,
+                              d_ff=64, vocab_size=512, dtype="float32")
+            return cfg
+
+        corpus = [r["prompt"] for r in make_request_stream(300, seed=9)]
+        whitener = fit_pca_whitener(hash_encode_batch(corpus))
+        models = [
+            ServedModel.init(tiny("budget-1b", 0),
+                             ArmPricing("budget-1b", 1e-4, 300), "budget", 0),
+            ServedModel.init(tiny("mid-7b", 1),
+                             ArmPricing("mid-7b", 1e-3, 500), "mid", 1),
+            ServedModel.init(tiny("frontier-67b", 2),
+                             ArmPricing("frontier-67b", 5.6e-3, 2500),
+                             "frontier", 2),
+        ]
+        return PortfolioServer(
+            models, whitener, budget=6.6e-4,
+            router_cfg=RouterConfig(max_arms=4), max_new_tokens=2,
+        )
+
+    def test_serve_closed_loop(self, server):
+        results = [server.serve(r) for r in make_request_stream(30, seed=3)]
+        assert all(r.reward >= 0 and r.cost > 0 for r in results)
+        assert len({r.model for r in results}) >= 2  # explores
+
+    def test_hot_swap(self, server):
+        from repro.core.costs import ArmPricing
+        from repro.serving import ServedModel
+        cfg = ModelConfig(name="new-flash", arch_type="dense", num_layers=1,
+                          d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                          vocab_size=512, dtype="float32")
+        m = ServedModel.init(cfg, ArmPricing("new-flash", 1.4e-3, 300),
+                             "mid", 5)
+        slot = server.add_model(m, n_eff=5.0)
+        # forced exploration routes the next requests to the newcomer
+        res = [server.serve(r) for r in make_request_stream(5, seed=4)]
+        assert all(r.model == "new-flash" for r in res)
+        server.remove_model(slot)
+        res = server.serve(make_request_stream(1, seed=5)[0])
+        assert res.model != "new-flash"

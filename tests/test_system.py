@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests: the full serving system (real models +
+router + judge + pacer) exercised through its public API."""
+import numpy as np
+import pytest
+
+from repro.core.costs import ArmPricing
+from repro.core.features import fit_pca_whitener, hash_encode_batch
+from repro.core.types import RouterConfig
+from repro.data import make_request_stream
+from repro.models.config import ModelConfig
+from repro.serving import PortfolioServer, ServedModel
+
+
+def _tiny(name, arch="dense", d=32, seed=0):
+    kw = dict(name=name, arch_type=arch, num_layers=1, d_model=d,
+              num_heads=2, num_kv_heads=2, d_ff=2 * d, vocab_size=256,
+              dtype="float32")
+    if arch == "ssm":
+        kw.update(d_ff=0, ssm_state=8, ssm_head_dim=8, ssm_chunk=8)
+    return ModelConfig(**kw)
+
+
+@pytest.fixture(scope="module")
+def server():
+    corpus = [r["prompt"] for r in make_request_stream(200, seed=9)]
+    whitener = fit_pca_whitener(hash_encode_batch(corpus))
+    models = [
+        ServedModel.init(_tiny("budget"), ArmPricing("budget", 1e-4, 300),
+                         "budget", 0),
+        ServedModel.init(_tiny("mid", arch="ssm"),
+                         ArmPricing("mid", 1e-3, 500), "mid", 1),
+        ServedModel.init(_tiny("frontier", d=48),
+                         ArmPricing("frontier", 5.6e-3, 2500), "frontier", 2),
+    ]
+    return PortfolioServer(models, whitener, budget=6.6e-4,
+                           router_cfg=RouterConfig(max_arms=4),
+                           max_new_tokens=2)
+
+
+class TestServingSystem:
+    def test_mixed_architecture_portfolio_serves(self, server):
+        """Dense + SSM arms served through one router."""
+        results = [server.serve(r) for r in make_request_stream(25, seed=1)]
+        assert all(r.tokens_out == 2 for r in results)
+        assert all(np.isfinite(r.reward) for r in results)
+        assert float(server.state.pacer.lam) >= 0.0
+
+    def test_budget_pressure_prefers_cheap_arms(self, server):
+        """Under a tight ceiling the expensive arm is throttled."""
+        server.set_budget(1.5e-4)
+        results = [server.serve(r) for r in make_request_stream(40, seed=2)]
+        frontier_share = np.mean([r.model == "frontier" for r in results])
+        assert frontier_share < 0.3
+        server.set_budget(6.6e-4)
+
+    def test_degradation_shifts_traffic(self, server):
+        """Silent judge regression on one arm reduces its share."""
+        base = [server.serve(r) for r in make_request_stream(30, seed=3)]
+        server.judge.degrade("mid", 0.2)
+        deg = [server.serve(r) for r in make_request_stream(60, seed=4)]
+        server.judge.restore("mid")
+        share_before = np.mean([r.model == "mid" for r in base])
+        share_after = np.mean([r.model == "mid" for r in deg[30:]])
+        # after the ~0.65-drop regression the degraded arm must not gain
+        # share and must not dominate the tail
+        assert share_after <= max(share_before + 0.15, 0.55)
+
+    def test_async_feedback_uses_cached_context(self, server):
+        """serve() consumes its cached context via the feedback store."""
+        r = make_request_stream(1, seed=5)[0]
+        res = server.serve(r)
+        assert server._ctx_cache.pop(res.request_id) is None  # consumed
+
+    def test_sqlite_feedback_store_backend(self):
+        from repro.serving.feedback_store import SQLiteFeedbackStore
+        s = SQLiteFeedbackStore()
+        s.put(42, np.arange(26, dtype=np.float32), 1)
+        ctx, arm = s.pop(42)
+        assert arm == 1 and ctx.shape == (26,)
+        assert s.pop(42) is None
