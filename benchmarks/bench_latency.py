@@ -177,10 +177,68 @@ def time_pallas_batch(n_requests=4096):
     return n_requests / dt
 
 
-def main():
+# ---------------------------------------------------------------------------
+# batched data plane: full select_batch + update_batch cycle per backend
+# ---------------------------------------------------------------------------
+
+BATCH_SIZES = (1, 8, 64, 256)
+BACKENDS = ("jnp", "pallas")
+
+
+def time_batched_sweep(batch_sizes=BATCH_SIZES, backends=BACKENDS,
+                       reps=30, d=26, seed=0):
+    """Batched routing throughput: decisions/s and µs/decision for the
+    full route+update block cycle, per backend and block size.
+
+    Returns {(backend, B): (us_per_decision, decisions_per_s)}.
+    """
+    rng = np.random.default_rng(seed)
+    prices = jnp.asarray([1e-4, 1e-3, 5.6e-3], jnp.float32)
+    out = {}
+    for bk in backends:
+        cfg = RouterConfig(d=d, max_arms=3, alpha=0.05, backend=bk)
+
+        def cycle(s, X, R, C, cfg=cfg):
+            return router.step_batch(cfg, s, X, R, C)
+
+        cycle = jax.jit(cycle)
+        for B in batch_sizes:
+            state = init_state(cfg, prices, prices, budget=6.6e-4)
+            X = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+            R = jnp.asarray(rng.uniform(0.5, 1.0, (B, 3)), jnp.float32)
+            C = jnp.asarray(rng.uniform(1e-5, 1e-3, (B, 3)), jnp.float32)
+            state, _ = cycle(state, X, R, C)   # compile
+            jax.block_until_ready(state.A)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                state, trace = cycle(state, X, R, C)
+            jax.block_until_ready(state.A)
+            dt = (time.perf_counter() - t0) / reps
+            out[(bk, B)] = (dt / B * 1e6, B / dt)
+    return out
+
+
+def backend_score_divergence(B=256, d=26, K=3, seed=0):
+    """Max abs score diff jnp vs Pallas on one block (the ≤1e-4 contract)."""
+    from repro.core import backend as backend_lib
+    rng = np.random.default_rng(seed)
+    cfg = RouterConfig(d=d, max_arms=K, alpha=0.05)
+    theta = jnp.asarray(rng.standard_normal((K, d)) * 0.1, jnp.float32)
+    M = rng.standard_normal((K, d, d)) * 0.1
+    A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None]
+    ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+    c_tilde = jnp.asarray(np.linspace(0.0, 0.7, K), jnp.float32)
+    X = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    dt = jnp.asarray(rng.integers(0, 500, K), jnp.int32)
+    return backend_lib.score_divergence(
+        cfg, theta, ainv, c_tilde, X, dt, jnp.float32(0.7))
+
+
+def main(quick: bool = False):
     rows = []
+    n_prod = 200 if quick else 1000
     for d in (26, 385):
-        tr, tu = time_production(d, n=1000)
+        tr, tu = time_production(d, n=n_prod)
         p50r, p95r = _percentiles(tr)
         p50u, p95u = _percentiles(tu)
         thr = 1.0 / (np.mean(tr) + np.mean(tu))
@@ -189,24 +247,37 @@ def main():
                      f"update_p95={p95u:.1f};req_s={thr:.0f}"])
     for mode, label in (("sm", "bare_sm"), ("cached_inv", "cached_inv"),
                         ("per_route_inv", "per_route_inv")):
-        for d in (26, 385):
-            n = 500 if d == 385 else N_CYCLES
+        for d in (26,) if quick else (26, 385):
+            n = 200 if quick else (500 if d == 385 else N_CYCLES)
             tr, tu = time_numpy(mode, d, n=n)
             p50r, _ = _percentiles(tr)
             p50u, p95u = _percentiles(tu)
             thr = 1.0 / (np.mean(tr) + np.mean(tu))
             rows.append([f"{label}_d{d}", f"{p50r:.1f}",
                          f"update_p50={p50u:.1f};req_s={thr:.0f}"])
-    te, tp, trt, tt = time_e2e()
+    te, tp, trt, tt = time_e2e(n=50 if quick else 300)
     rows.append(["e2e_pipeline_ms", f"{np.percentile(tt, 50) * 1e3:.2f}",
                  f"embed_p50_ms={np.percentile(te, 50) * 1e3:.2f};"
                  f"pca_p50_ms={np.percentile(tp, 50) * 1e3:.2f};"
                  f"route_p50_us={np.percentile(trt, 50) * 1e6:.1f}"])
-    rows.append(["pallas_batch_scoring_req_s", f"{time_pallas_batch():.0f}",
+    rows.append(["pallas_batch_scoring_req_s",
+                 f"{time_pallas_batch(512 if quick else 4096):.0f}",
                  "interpret-mode CPU; TPU is the target"])
+
+    sweep = time_batched_sweep(reps=5 if quick else 30)
+    for (bk, B), (us, dps) in sweep.items():
+        rows.append([f"batched_{bk}_B{B}", f"{us:.2f}",
+                     f"decisions_per_s={dps:.0f};cycle=select_batch+update_batch"])
+    for bk in BACKENDS:
+        speedup = sweep[(bk, 1)][0] / sweep[(bk, 256)][0]
+        rows.append([f"batched_{bk}_B256_vs_B1_speedup", f"{speedup:.1f}",
+                     "per-decision latency ratio (acceptance: >=10x)"])
+    rows.append(["backend_score_maxdiff", f"{backend_score_divergence():.2e}",
+                 "jnp oracle vs pallas kernel; contract <=1e-4"])
     emit(rows, ["name", "p50_us", "derived"], "latency")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(quick="--quick" in sys.argv)

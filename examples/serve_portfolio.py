@@ -45,7 +45,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=120)
     ap.add_argument("--budget", type=float, default=6.6e-4)
+    ap.add_argument("--batch", type=int, default=16,
+                    help="block size for the batched serving phase")
     args = ap.parse_args()
+    if args.batch < 1:
+        ap.error("--batch must be >= 1")
     n = args.requests
 
     print("fitting the feature pipeline (hash-encoder + PCA whitening)...")
@@ -82,6 +86,13 @@ def main():
         ArmPricing("flash-cls", 1.4e-3, 300), "mid", 7)
     server.add_model(flash, n_eff=5.0)
     report([server.serve(r) for r in reqs[2 * n:3 * n]], "onboarded")
+
+    print(f"\nphase 4: batched gateway serving (blocks of {args.batch})")
+    batched = []
+    extra = make_request_stream(n, seed=2)
+    for i in range(0, n, args.batch):  # tail may be a partial block
+        batched.extend(server.serve_batch(extra[i:i + args.batch]))
+    report(batched, f"batched B={args.batch}")
 
     lam = float(server.state.pacer.lam)
     print(f"\nfinal dual variable lambda_t = {lam:.3f}; "

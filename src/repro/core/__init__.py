@@ -7,7 +7,19 @@ from repro.core.types import (  # noqa: F401
     init_state,
     log_normalized_cost,
 )
-from repro.core.router import Decision, select, update, step, run_stream  # noqa: F401
+from repro.core.router import (  # noqa: F401
+    BatchDecision,
+    Decision,
+    run_stream,
+    run_stream_batched,
+    select,
+    select_batch,
+    step,
+    step_batch,
+    update,
+    update_batch,
+)
+from repro.core.backend import RoutingBackend, get_backend  # noqa: F401
 from repro.core.registry import add_arm, delete_arm, set_price  # noqa: F401
 from repro.core.warmup import (  # noqa: F401
     apply_warmup,

@@ -1,0 +1,101 @@
+"""Pluggable batched scoring backends for the routing data plane.
+
+``select_batch`` scores a (B, d) block of request contexts against every
+arm through a ``RoutingBackend``. Two implementations ship (DESIGN.md §2):
+
+  * ``jnp``    — the einsum oracle (``linucb.ucb_scores_batch``), portable
+                 to any XLA device; the numerical reference.
+  * ``pallas`` — the TPU kernel (``kernels/linucb_score``): requests tiled
+                 in rows, all K arms' (d x d) inverses resident in VMEM.
+                 Runs in interpret mode off-TPU so CPU tests exercise the
+                 exact kernel code path that compiles on hardware.
+
+The backend is selected statically via ``RouterConfig.backend``, so the
+choice is resolved at trace time and never costs a runtime branch.
+
+Numerical-equivalence contract: both backends must agree on scores to
+``EQUIV_TOL`` max abs diff (enforced by tests/test_batched_routing.py and
+reported by benchmarks/bench_latency.py).
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linucb
+from repro.core.types import RouterConfig
+from repro.kernels.linucb_score.ops import linucb_score
+
+Array = jax.Array
+
+# Max abs score divergence the kernel is allowed vs the jnp oracle.
+EQUIV_TOL = 1e-4
+
+
+class RoutingBackend(Protocol):
+    """Batched Eq. 2 scoring: (B, d) contexts -> (B, K) arm scores."""
+
+    name: str
+
+    def score(
+        self,
+        cfg: RouterConfig,
+        theta: Array,     # (K, d)
+        A_inv: Array,     # (K, d, d)
+        c_tilde: Array,   # (K,)
+        X: Array,         # (B, d)
+        dt: Array,        # (K,) staleness per arm at block entry
+        lam: Array,       # scalar dual variable
+    ) -> Array: ...
+
+
+class JnpBackend:
+    name = "jnp"
+
+    def score(self, cfg, theta, A_inv, c_tilde, X, dt, lam) -> Array:
+        return linucb.ucb_scores_batch(cfg, theta, A_inv, c_tilde, X, dt, lam)
+
+
+class PallasBackend:
+    name = "pallas"
+
+    def __init__(self, interpret: bool | None = None):
+        # None = auto: compiled on TPU, interpret elsewhere.
+        self._interpret = interpret
+
+    def score(self, cfg, theta, A_inv, c_tilde, X, dt, lam) -> Array:
+        interpret = self._interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        pen = (cfg.lambda_c + lam) * c_tilde
+        infl = linucb.staleness_inflation(cfg, dt)
+        return linucb_score(
+            X, theta, A_inv, pen, infl, alpha=cfg.alpha, interpret=interpret
+        )
+
+
+_BACKENDS: dict[str, RoutingBackend] = {
+    "jnp": JnpBackend(),
+    "pallas": PallasBackend(),
+}
+
+
+def get_backend(name: str) -> RoutingBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown routing backend {name!r}; have {sorted(_BACKENDS)}"
+        ) from None
+
+
+def score_divergence(
+    cfg: RouterConfig, theta, A_inv, c_tilde, X, dt, lam
+) -> float:
+    """Max abs score diff between the two backends on one block (the
+    equivalence contract, for benchmarks and monitoring)."""
+    a = get_backend("jnp").score(cfg, theta, A_inv, c_tilde, X, dt, lam)
+    b = get_backend("pallas").score(cfg, theta, A_inv, c_tilde, X, dt, lam)
+    return float(jnp.max(jnp.abs(a - b)))

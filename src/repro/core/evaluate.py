@@ -119,6 +119,7 @@ def run(
     states: Optional[RouterState] = None,
     shuffle: bool = True,
     return_states: bool = False,
+    batch_size: Optional[int] = None,
 ):
     """Vectorised multi-seed run of Algorithm 1 over an environment stream.
 
@@ -126,6 +127,12 @@ def run(
     seed-specific permutation unless ``shuffle=False``) or a sequence of
     per-seed Environments of equal length (phase experiments build one
     ordered stream per seed and pass them here; no further shuffling).
+
+    ``batch_size`` > 1 consumes the stream through the batched data plane
+    (``router.run_stream_batched``) in blocks of that size — the same
+    select_batch/update_batch path the batch-serving gateway runs — so
+    scenario benchmarks can exercise production code. Default (None) is
+    the per-request closed loop.
     """
     if isinstance(env, (list, tuple)):
         assert len(env) == len(seeds), (len(env), len(seeds))
@@ -154,7 +161,7 @@ def run(
             priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
         )
 
-    run_fn = _cached_run_fn(cfg, stream_axes)
+    run_fn = _cached_run_fn(cfg, stream_axes, batch_size)
     finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
@@ -166,13 +173,18 @@ def run(
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_run_fn(cfg: RouterConfig, stream_axes):
+def _cached_run_fn(cfg: RouterConfig, stream_axes, batch_size=None):
     """One jitted sweep function per (RouterConfig, stream layout) — the
     hyper-parameter grids re-enter with identical signatures thousands of
     times, so caching the jit wrapper avoids retrace-per-call."""
 
     def one_seed(state, x, rm, cm):
-        final, trace = router.run_stream(cfg, state, x, rm, cm)
+        if batch_size:
+            final, trace = router.run_stream_batched(
+                cfg, state, x, rm, cm, batch_size
+            )
+        else:
+            final, trace = router.run_stream(cfg, state, x, rm, cm)
         return final, trace
 
     return jax.jit(

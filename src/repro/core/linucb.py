@@ -77,8 +77,7 @@ def ucb_variance(
     """
     q = x @ (A_inv @ x)
     q = jnp.maximum(q, 0.0)  # guard tiny negative from f32 round-off
-    infl = jnp.maximum(forgetting_factor(cfg, dt), 1.0 / cfg.v_max)
-    return q / infl
+    return q / staleness_inflation(cfg, dt)
 
 
 def ucb_scores(
@@ -97,3 +96,32 @@ def ucb_scores(
     explore = cfg.alpha * jnp.sqrt(v)
     penalty = (cfg.lambda_c + lam) * c_tilde
     return exploit + explore - penalty
+
+
+def staleness_inflation(cfg: RouterConfig, dt: Array) -> Array:
+    """Eq. 9 denominator, vectorised: max(gamma^dt, 1/V_max) per arm."""
+    return jnp.maximum(forgetting_factor(cfg, dt), 1.0 / cfg.v_max)
+
+
+def ucb_scores_batch(
+    cfg: RouterConfig,
+    theta: Array,     # (K, d)
+    A_inv: Array,     # (K, d, d)
+    c_tilde: Array,   # (K,)
+    X: Array,         # (B, d) block of request contexts
+    dt: Array,        # (K,) staleness per arm, shared by the block
+    lam: Array,       # scalar dual variable
+) -> Array:
+    """Eq. 2 scores for a block of B contexts against all arms: (B, K).
+
+    The batched jnp oracle of the routing data plane (DESIGN.md §2); the
+    Pallas ``linucb_score`` kernel computes the same quantity on TPU. Each
+    arm's quadratic form is one (B, d) x (d, d) matmul, so the whole block
+    is scored in O(K B d^2) with no per-request dispatch.
+    """
+    exploit = X @ theta.T                                   # (B, K)
+    t = jnp.einsum("bd,kde->bke", X, A_inv)
+    quad = jnp.maximum(jnp.einsum("bke,be->bk", t, X), 0.0)
+    v = quad / staleness_inflation(cfg, dt)[None, :]
+    penalty = (cfg.lambda_c + lam) * c_tilde
+    return exploit + cfg.alpha * jnp.sqrt(v) - penalty[None, :]

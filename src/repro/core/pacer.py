@@ -32,6 +32,23 @@ def pacer_update(cfg: RouterConfig, p: PacerState, cost: Array) -> PacerState:
     return PacerState(lam=lam, c_ema=c_ema, budget=p.budget, enabled=p.enabled)
 
 
+def pacer_update_batch(cfg: RouterConfig, p: PacerState, costs: Array) -> PacerState:
+    """One dual-ascent pass over a block of realised costs (DESIGN.md §2).
+
+    Folds Eqs. 3-4 over ``costs`` (B,) in arrival order inside a single
+    fused ``lax.scan`` — exactly the sequential ``pacer_update`` fold
+    (the per-step clip on lambda makes the recursion non-associative, so
+    a closed-form EMA shortcut would change pacing behaviour; the scan
+    carries two scalars and is free next to the O(B d^2) stats update).
+    """
+
+    def body(pp, c):
+        return pacer_update(cfg, pp, c), None
+
+    p2, _ = jax.lax.scan(body, p, costs)
+    return p2
+
+
 def hard_ceiling_mask(
     cfg: RouterConfig, p: PacerState, price: Array, active: Array
 ) -> Array:

@@ -7,14 +7,24 @@
 The synchronous inference path is ``select``; the asynchronous feedback
 path is ``update`` (context cached at route time by the caller, §3.1, so
 late rewards never re-encode the prompt).
+
+Batched data plane (DESIGN.md §2): ``select_batch`` scores a (B, d) block
+of contexts against all arms in one backend call (jnp oracle or the
+Pallas ``linucb_score`` kernel, chosen by ``RouterConfig.backend``);
+``update_batch`` applies a block of delayed feedback as one fused scan.
+At gateway QPS this amortises the per-call dispatch overhead that
+dominates scalar routing, which is what makes the paper's µs-scale
+per-decision latency hold under load.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as backend_lib
 from repro.core import linucb, pacer
 from repro.core.types import RouterConfig, RouterState
 
@@ -77,6 +87,25 @@ def select(cfg: RouterConfig, state: RouterState, x: Array):
     return dec, new_state
 
 
+def _apply_feedback(
+    cfg: RouterConfig, state: RouterState, arm: Array, x: Array, reward: Array
+) -> RouterState:
+    """Algorithm 1 lines 17-23: the played arm's sufficient-statistic
+    update (decay + rank-1), without the pacer step."""
+    dt = state.t - state.last_upd[arm]                            # line 18
+    A_a, Ainv_a, b_a, theta_a = linucb.rank1_update(
+        cfg, state.A[arm], state.A_inv[arm], state.b[arm], x, reward, dt
+    )
+    return dataclasses.replace(
+        state,
+        A=state.A.at[arm].set(A_a),
+        A_inv=state.A_inv.at[arm].set(Ainv_a),
+        b=state.b.at[arm].set(b_a),
+        theta=state.theta.at[arm].set(theta_a),
+        last_upd=state.last_upd.at[arm].set(state.t),             # line 23
+    )
+
+
 def update(
     cfg: RouterConfig,
     state: RouterState,
@@ -87,27 +116,9 @@ def update(
 ) -> RouterState:
     """Algorithm 1 lines 17-26: geometric-forgetting reward update for the
     played arm + budget-pacer dual ascent on the realised cost."""
-    dt = state.t - state.last_upd[arm]                            # line 18
-    A_a, Ainv_a, b_a, theta_a = linucb.rank1_update(
-        cfg, state.A[arm], state.A_inv[arm], state.b[arm], x, reward, dt
-    )
+    state = _apply_feedback(cfg, state, arm, x, reward)
     p = pacer.pacer_update(cfg, state.pacer, cost)                # lines 25-26
-    return RouterState(
-        A=state.A.at[arm].set(A_a),
-        A_inv=state.A_inv.at[arm].set(Ainv_a),
-        b=state.b.at[arm].set(b_a),
-        theta=state.theta.at[arm].set(theta_a),
-        last_upd=state.last_upd.at[arm].set(state.t),             # line 23
-        last_play=state.last_play,
-        active=state.active,
-        price=state.price,
-        c_tilde=state.c_tilde,
-        t=state.t,
-        pacer=p,
-        force_arm=state.force_arm,
-        force_left=state.force_left,
-        key=state.key,
-    )
+    return dataclasses.replace(state, pacer=p)
 
 
 def step(cfg: RouterConfig, state: RouterState, x: Array, rewards: Array,
@@ -140,3 +151,164 @@ def run_stream(cfg: RouterConfig, state: RouterState, xs: Array,
         return step(cfg, s, x, rv, cv)
 
     return jax.lax.scan(body, state, (xs, rewards, costs))
+
+
+# ---------------------------------------------------------------------------
+# Batched data plane (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+class BatchDecision(NamedTuple):
+    arms: Array        # (B,) i32   — chosen arm per request
+    scores: Array      # (B, K) f32 — Eq. 2 scores + tiebreak (NEG_INF masked)
+    candidates: Array  # (K,) bool  — post-hard-ceiling candidate set
+    lam: Array         # scalar f32 — dual variable at block-decision time
+    forced: Array      # (B,) bool  — forced-exploration override fired
+
+
+def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
+    """Algorithm 1 lines 3-15 for a (B, d) block of concurrent requests.
+
+    Returns (BatchDecision, new_state). All B requests are scored against
+    the same snapshot of sufficient statistics — a block models requests
+    that arrive within one gateway batching window, so their decisions are
+    concurrent and the per-arm staleness ``dt`` is taken at block entry.
+    Everything else replicates the sequential fold of ``select`` exactly:
+
+      * the tiebreak PRNG chain splits once per request, in order, so a
+        block of B draws the same noise as B scalar selects;
+      * forced-exploration burn-in diverts the first ``force_left``
+        requests of the block and decrements the counter accordingly;
+      * ``t`` advances by B and ``last_play`` lands on each arm's last
+        in-block dispatch step.
+
+    With B = 1 this *is* ``select`` (same scores, same noise, same
+    bookkeeping), which is how the scalar serving path is preserved.
+    ``jnp.argmax`` breaks exact ties on the lowest slot, matching
+    ``select``; under gamma = 1 (no staleness inflation) the block
+    decisions coincide with sequential no-feedback selects bit-for-bit
+    up to backend summation order.
+    """
+    B = X.shape[0]
+    cand = pacer.hard_ceiling_mask(cfg, state.pacer, state.price, state.active)
+    dt = state.t - jnp.maximum(state.last_upd, state.last_play)   # line 10
+    backend = backend_lib.get_backend(cfg.backend)
+    scores = backend.score(
+        cfg, state.theta, state.A_inv, state.c_tilde, X, dt, state.pacer.lam
+    )                                                             # (B, K)
+
+    # Sequentially-chained tiebreak keys: key_i+1, sub_i = split(key_i).
+    def split_body(k, _):
+        k2, sub = jax.random.split(k)
+        return k2, sub
+
+    key, subs = jax.lax.scan(split_body, state.key, None, length=B)
+    noise = cfg.tiebreak_scale * jax.vmap(
+        lambda s: jax.random.uniform(s, (cfg.max_arms,))
+    )(subs)                                                       # (B, K)
+    masked = jnp.where(cand[None, :], scores + noise, NEG_INF)    # line 13
+    arms = jnp.argmax(masked, axis=1).astype(jnp.int32)           # line 14
+
+    # Forced-exploration burn-in (§3.6/§4.5): the first ``force_left``
+    # requests of the block route unconditionally to the newcomer.
+    idx = jnp.arange(B, dtype=jnp.int32)
+    farm = jnp.clip(state.force_arm, 0)
+    forced = (idx < state.force_left) & (state.force_arm >= 0)
+    forced = forced & state.active[farm]
+    arms = jnp.where(forced, farm, arms)
+
+    played_at = state.t + 1 + idx                                 # line 15
+    new_state = dataclasses.replace(
+        state,
+        last_play=state.last_play.at[arms].max(played_at),
+        t=state.t + B,
+        force_left=state.force_left - jnp.sum(forced).astype(jnp.int32),
+        key=key,
+    )
+    dec = BatchDecision(
+        arms=arms, scores=masked, candidates=cand, lam=state.pacer.lam,
+        forced=forced,
+    )
+    return dec, new_state
+
+
+def update_batch(
+    cfg: RouterConfig,
+    state: RouterState,
+    arms: Array,     # (B,) i32
+    X: Array,        # (B, d) contexts cached at route time
+    rewards: Array,  # (B,) f32
+    costs: Array,    # (B,) f32
+) -> RouterState:
+    """Apply a block of delayed feedback: fused scan of the per-arm rank-1
+    updates + one pacer dual-ascent pass over the batch's costs.
+
+    Rank-1 updates to distinct arms touch disjoint state, so applying them
+    in arrival order inside one ``lax.scan`` equals the per-arm grouped
+    application while preserving each arm's within-block order (which
+    matters under geometric forgetting). The result is exactly the
+    sequential fold of ``update`` — one jitted call instead of B host
+    round-trips.
+    """
+
+    def body(s, inp):
+        arm, x, r = inp
+        return _apply_feedback(cfg, s, arm, x, r), None
+
+    state, _ = jax.lax.scan(body, state, (arms, X, rewards))
+    p = pacer.pacer_update_batch(cfg, state.pacer, costs)         # lines 25-26
+    return dataclasses.replace(state, pacer=p)
+
+
+def step_batch(cfg: RouterConfig, state: RouterState, X: Array,
+               rewards: Array, costs: Array):
+    """One closed-loop block step against a (B, K) matrix environment:
+    route the block, observe the chosen arms' (reward, cost), feed back.
+
+    Returns (new_state, (arms, r, c, lam)) with per-request traces (B,).
+    """
+    B = X.shape[0]
+    dec, state = select_batch(cfg, state, X)
+    rows = jnp.arange(B)
+    r = rewards[rows, dec.arms]
+    c = costs[rows, dec.arms]
+    state = update_batch(cfg, state, dec.arms, X, r, c)
+    lam = jnp.full((B,), dec.lam)
+    return state, (dec.arms, r, c, lam)
+
+
+def run_stream_batched(cfg: RouterConfig, state: RouterState, xs: Array,
+                       rewards: Array, costs: Array, batch_size: int):
+    """Scan Algorithm 1 over a request stream in blocks of ``batch_size``.
+
+    Same contract as ``run_stream`` (xs (T, d); rewards/costs (T, K);
+    returns (final_state, trace) with (T,) traces) but the stream is
+    consumed through the batched data plane — the exact code path the
+    batch-serving gateway runs — so scenario benchmarks and production
+    exercise the same kernels. A trailing partial block (T mod B requests)
+    is processed as one smaller block.
+    """
+    T = xs.shape[0]
+    nb, rem = divmod(T, batch_size)
+
+    def block(s, inp):
+        xb, rb, cb = inp
+        return step_batch(cfg, s, xb, rb, cb)
+
+    trace = None
+    if nb:
+        blocks = (
+            xs[: nb * batch_size].reshape(nb, batch_size, -1),
+            rewards[: nb * batch_size].reshape(nb, batch_size, -1),
+            costs[: nb * batch_size].reshape(nb, batch_size, -1),
+        )
+        state, trace = jax.lax.scan(block, state, blocks)
+        trace = jax.tree.map(lambda a: a.reshape(nb * batch_size), trace)
+    if rem:
+        state, tail = step_batch(
+            cfg, state, xs[T - rem:], rewards[T - rem:], costs[T - rem:]
+        )
+        trace = tail if trace is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b]), trace, tail
+        )
+    return state, trace

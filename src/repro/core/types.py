@@ -43,10 +43,13 @@ class RouterConfig:
     forced_pulls: int = 20       # burn-in pulls for a hot-swapped arm, §4.5
     dt_max: int = 4096           # numerical clamp on forgetting exponents
     tiebreak_scale: float = 1e-7  # random tiebreak noise amplitude
+    backend: str = "jnp"         # batched scoring backend (DESIGN.md §2):
+                                 # "jnp" oracle or "pallas" TPU kernel
 
     def __post_init__(self):
         assert 0.0 < self.gamma <= 1.0, "gamma must be in (0, 1]"
         assert self.d >= 2 and self.max_arms >= 1
+        assert self.backend in ("jnp", "pallas"), self.backend
 
 
 @jax.tree_util.register_dataclass

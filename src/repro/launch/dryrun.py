@@ -38,6 +38,17 @@ from repro.training import make_train_step, train_state_init
 from repro.training.train_step import TrainState
 
 
+def _normalize_cost_analysis(cost):
+    """``Compiled.cost_analysis()`` returns a dict on current jaxlib but a
+    list of per-computation dicts (or None) on older releases; normalize
+    to one flat dict so downstream ``cost.get(...)`` always works."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return cost
+
+
 def _state_shardings(mesh, param_sh):
     rep = NamedSharding(mesh, P())
     return TrainState(
@@ -210,7 +221,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
             colls, wire = {}, 0.0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _normalize_cost_analysis(compiled.cost_analysis())
     if verbose:
         print(f"== {arch} x {shape_name} "
               f"({'2x16x16' if multi_pod else '16x16'}) ==")

@@ -10,6 +10,12 @@ Rewards come from a pluggable judge. Offline we ship ``SimulatedJudge``
 (per-(family, tier) quality + noise — the stand-in for DeepSeek-R1);
 in production the same interface is an async LLM-judge callback, which is
 why the router caches context vectors at route time (§3.1/§3.6).
+
+``serve_batch`` is the gateway-QPS data plane (DESIGN.md §2): one
+``select_batch`` call routes the whole request block through the
+configured scoring backend (jnp oracle or the Pallas kernel), generation
+is grouped by chosen arm, and the block's feedback is one fused
+``update_batch``. ``serve`` is its B = 1 case.
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ import numpy as np
 from repro.core import registry as registry_lib
 from repro.core import router as router_lib
 from repro.core.costs import ArmPricing
-from repro.core.features import PCAWhitener, hash_encode
+from repro.core.features import PCAWhitener, hash_encode, hash_encode_batch
 from repro.core.types import RouterConfig, RouterState, init_state
 from repro.models import decode_step, init_model, prefill_forward
 from repro.models.config import ModelConfig
@@ -52,7 +58,9 @@ class ServedModel:
 
     PROMPT_BUCKET = 32  # pad prompts to a fixed bucket: one compile
 
-    def generate(self, tokens: np.ndarray, max_new: int = 16) -> np.ndarray:
+    def generate(self, tokens: np.ndarray, max_new: int = 16,
+                 key: Optional[jax.Array] = None,
+                 temperature: float = 0.0) -> np.ndarray:
         pad = (-len(tokens)) % self.PROMPT_BUCKET or (
             self.PROMPT_BUCKET if len(tokens) == 0 else 0)
         # left-pad with BOS so the causal suffix is the real prompt
@@ -63,10 +71,13 @@ class ServedModel:
         logits, caches = self._prefill(toks, cache_len)
         out = []
         cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        if key is None:
+            key = jax.random.PRNGKey(0)
         for _ in range(max_new):
             out.append(int(cur[0, 0]))
             logits, caches = self._decode(cur, caches)
-            cur = sample_token(logits, jax.random.PRNGKey(0))[:, None]
+            key, sub = jax.random.split(key)  # fresh key per sampled token
+            cur = sample_token(logits, sub, temperature=temperature)[:, None]
         return np.asarray(out, np.int32)
 
     def _prefill(self, toks, cache_len: int):
@@ -154,10 +165,16 @@ class PortfolioServer:
         self.judge = judge or SimulatedJudge(seed)
         self.max_new_tokens = max_new_tokens
         self.models: List[Optional[ServedModel]] = [None] * self.cfg.max_arms
-        self._select = jax.jit(
-            lambda s, x: router_lib.select(self.cfg, s, x))
-        self._update = jax.jit(
-            lambda s, a, x, r, c: router_lib.update(self.cfg, s, a, x, r, c))
+        # Batched data plane (DESIGN.md §2): the scalar path is the B=1
+        # case of the same jitted block functions (retraced per block
+        # shape; gateway batch sizes are few and stable).
+        self._select_batch = jax.jit(
+            lambda s, X: router_lib.select_batch(self.cfg, s, X))
+        self._update_batch = jax.jit(
+            lambda s, a, X, r, c: router_lib.update_batch(
+                self.cfg, s, a, X, r, c))
+        self._tokenizers: Dict[str, HashTokenizer] = {}  # per-model cache
+        self._gen_key = jax.random.PRNGKey(seed ^ 0x5EED)
         prices_req = np.full(self.cfg.max_arms, 1e9, np.float32)
         prices_1k = np.full(self.cfg.max_arms, 1e9, np.float32)
         active = np.zeros(self.cfg.max_arms, bool)
@@ -201,40 +218,93 @@ class PortfolioServer:
         raw = jnp.asarray(hash_encode(prompt))
         return self.whitener(raw)
 
-    def serve(self, request: Dict) -> ServeResult:
+    def featurize_batch(self, prompts: List[str]) -> jnp.ndarray:
+        raw = jnp.asarray(hash_encode_batch(prompts))
+        return self.whitener(raw)
+
+    def _tokenizer(self, model: ServedModel) -> HashTokenizer:
+        tok = self._tokenizers.get(model.name)
+        if tok is None or tok.vocab_size != model.cfg.vocab_size:
+            tok = HashTokenizer(model.cfg.vocab_size)
+            self._tokenizers[model.name] = tok
+        return tok
+
+    def serve(self, request: Dict, defer_feedback: bool = False) -> ServeResult:
+        """Scalar serving: the B = 1 case of ``serve_batch`` (same jitted
+        block functions, same semantics as the original per-request path)."""
+        return self.serve_batch([request], defer_feedback=defer_feedback)[0]
+
+    def serve_batch(self, requests: List[Dict],
+                    defer_feedback: bool = False) -> List[ServeResult]:
+        """Batched serving: featurize the block, route it through the
+        backend in one ``select_batch`` call, generate grouped by chosen
+        arm (each model stays hot for its share of the block), then feed
+        the block's (reward, cost) back through ``update_batch``.
+
+        With ``defer_feedback=True`` the bandit update is left to the
+        caller (``feedback``/``feedback_batch``) — the asynchronous
+        production path, §3.1: contexts stay cached in the feedback store.
+        """
+        if not requests:
+            return []
         t0 = time.perf_counter()
-        x = self.featurize(request["prompt"])
-        self._ctx_cache.put(request["id"], np.asarray(x), -1)
+        B = len(requests)
+        X = self.featurize_batch([r["prompt"] for r in requests])
+        X_np = np.asarray(X)
+        for r, x in zip(requests, X_np):
+            self._ctx_cache.put(r["id"], x, -1)
 
         r0 = time.perf_counter()
-        dec, self.state = self._select(self.state, x)
-        arm = int(dec.arm)
-        route_us = (time.perf_counter() - r0) * 1e6
+        dec, self.state = self._select_batch(self.state, X)
+        arms = np.asarray(dec.arms)
+        route_us = (time.perf_counter() - r0) * 1e6 / B  # per decision
 
-        model = self.models[arm]
-        tok = HashTokenizer(model.cfg.vocab_size)
-        prompt_ids = tok.encode(request["prompt"])
-        out = model.generate(prompt_ids, self.max_new_tokens)
+        lam = float(dec.lam)
+        rewards = np.zeros(B, np.float32)
+        costs = np.zeros(B, np.float32)
+        results: List[Optional[ServeResult]] = [None] * B
+        # Group generation by chosen arm (stable order within a group).
+        for i in np.argsort(arms, kind="stable"):
+            req, arm = requests[int(i)], int(arms[i])
+            model = self.models[arm]
+            prompt_ids = self._tokenizer(model).encode(req["prompt"])
+            self._gen_key, sub = jax.random.split(self._gen_key)
+            out = model.generate(prompt_ids, self.max_new_tokens, key=sub)
 
-        n_tokens = len(prompt_ids) + len(out)
-        cost = model.pricing.price_per_1k * n_tokens / 1e3
-        reward = self.judge.score(request.get("family", "reasoning"), model)
-
-        self.feedback(request["id"], arm, reward, cost)
-        return ServeResult(
-            request_id=request["id"], model=model.name, arm=arm,
-            reward=reward, cost=cost, tokens_out=len(out),
-            route_us=route_us, total_ms=(time.perf_counter() - t0) * 1e3,
-            lam=float(dec.lam),
-        )
+            n_tokens = len(prompt_ids) + len(out)
+            costs[i] = model.pricing.price_per_1k * n_tokens / 1e3
+            rewards[i] = self.judge.score(
+                req.get("family", "reasoning"), model)
+            results[int(i)] = ServeResult(
+                request_id=req["id"], model=model.name, arm=arm,
+                reward=float(rewards[i]), cost=float(costs[i]),
+                tokens_out=len(out), route_us=route_us, total_ms=0.0,
+                lam=lam,
+            )
+        if not defer_feedback:
+            self.feedback_batch(
+                [r["id"] for r in requests], arms, rewards, costs)
+        total_ms = (time.perf_counter() - t0) * 1e3
+        return [dataclasses.replace(r, total_ms=total_ms) for r in results]
 
     def feedback(self, request_id: int, arm: int, reward: float,
                  cost: float) -> None:
         """Asynchronous feedback path: uses the context cached at route
         time, so late rewards never re-encode the prompt (§3.1)."""
-        ctx, _ = self._ctx_cache.pop(request_id)
-        x = jnp.asarray(ctx)
-        self.state = self._update(
-            self.state, jnp.asarray(arm),
-            x, jnp.float32(reward), jnp.float32(cost),
+        self.feedback_batch([request_id], np.asarray([arm]),
+                            np.asarray([reward]), np.asarray([cost]))
+
+    def feedback_batch(self, request_ids: List[int], arms, rewards,
+                       costs) -> None:
+        """Apply a block of (possibly late) feedback in one fused
+        ``update_batch`` call, using the contexts cached at route time."""
+        if not len(request_ids):
+            return
+        X = np.stack([self._ctx_cache.pop(rid)[0] for rid in request_ids])
+        self.state = self._update_batch(
+            self.state,
+            jnp.asarray(arms, jnp.int32),
+            jnp.asarray(X, jnp.float32),
+            jnp.asarray(rewards, jnp.float32),
+            jnp.asarray(costs, jnp.float32),
         )

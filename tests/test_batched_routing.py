@@ -1,0 +1,376 @@
+"""Batched routing data plane: backend equivalence, select_batch /
+update_batch vs the sequential fold, batched pacer, forced exploration
+in a block, the batched stream runner, and batch serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_lib
+from repro.core import evaluate, linucb, pacer, registry, router, simulator
+from repro.core.types import PacerState, RouterConfig, init_state
+
+RNG = np.random.default_rng(7)
+
+
+def mk_state(cfg, prices=(0.1, 1.0, 10.0, 1e9), active=(1, 1, 1, 0),
+             budget=1.0, seed=0):
+    prices = jnp.asarray(prices[: cfg.max_arms], jnp.float32)
+    return init_state(
+        cfg, prices, prices, budget,
+        active=jnp.asarray(active[: cfg.max_arms], bool),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
+def warmed_state(cfg, n=12, seed=0):
+    """State with diverged per-arm statistics (n random updates)."""
+    st = mk_state(cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        x = jnp.asarray(rng.standard_normal(cfg.d), jnp.float32)
+        st = router.update(
+            cfg, st, jnp.int32(i % 3), x,
+            jnp.float32(rng.uniform(0.2, 0.9)),
+            jnp.float32(rng.uniform(1e-5, 1e-3)),
+        )
+        st = dataclasses.replace(st, t=st.t + 1)  # let staleness diverge
+    return st
+
+
+def rand_block(B, d, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((B, d)), jnp.float32
+    )
+
+
+class TestBackendEquivalence:
+    """The ≤1e-4 numerical contract between the jnp oracle and the
+    Pallas kernel (interpret mode on CPU, same code path as TPU)."""
+
+    @pytest.mark.parametrize("B,K,d", [
+        (1, 3, 26), (7, 4, 26), (64, 8, 26), (256, 3, 13),
+    ])
+    def test_scores_match(self, B, K, d):
+        cfg = RouterConfig(d=d, max_arms=K, alpha=0.05)
+        theta = jnp.asarray(RNG.standard_normal((K, d)) * 0.1, jnp.float32)
+        M = RNG.standard_normal((K, d, d)) * 0.1
+        A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None]
+        ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+        c_tilde = jnp.asarray(np.linspace(0, 0.9, K), jnp.float32)
+        X = rand_block(B, d, seed=B + K)
+        dt = jnp.asarray(RNG.integers(0, 2000, K), jnp.int32)
+        lam = jnp.float32(0.7)
+        div = backend_lib.score_divergence(cfg, theta, ainv, c_tilde, X, dt, lam)
+        assert div <= backend_lib.EQUIV_TOL, div
+
+    def test_batch_oracle_matches_per_request_scores(self):
+        """ucb_scores_batch row i == the scalar Eq. 2 path on x_i."""
+        cfg = RouterConfig(d=8, max_arms=3, alpha=0.05)
+        st = warmed_state(cfg)
+        X = rand_block(16, cfg.d, seed=3)
+        dt = st.t - jnp.maximum(st.last_upd, st.last_play)
+        got = linucb.ucb_scores_batch(
+            cfg, st.theta, st.A_inv, st.c_tilde, X, dt, st.pacer.lam)
+        for i in range(16):
+            want = linucb.ucb_scores(
+                cfg, st.theta, st.A_inv, st.c_tilde, X[i], dt, st.pacer.lam)
+            np.testing.assert_allclose(got[i], want, rtol=2e-5, atol=2e-5)
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(AssertionError):
+            RouterConfig(backend="cuda")
+        with pytest.raises(KeyError):
+            backend_lib.get_backend("cuda")
+
+
+@pytest.mark.parametrize("bk", ["jnp", "pallas"])
+class TestSelectBatch:
+    def test_b1_matches_scalar_select(self, bk):
+        cfg = RouterConfig(d=8, max_arms=4, backend=bk)
+        st = warmed_state(cfg)
+        x = rand_block(1, cfg.d, seed=1)
+        dec1, st1 = router.select(cfg, st, x[0])
+        decb, stb = router.select_batch(cfg, st, x)
+        assert int(decb.arms[0]) == int(dec1.arm)
+        np.testing.assert_allclose(decb.scores[0], dec1.scores,
+                                   rtol=1e-5, atol=1e-6)
+        assert int(stb.t) == int(st1.t)
+        assert jnp.array_equal(stb.key, st1.key)
+        assert jnp.array_equal(stb.last_play, st1.last_play)
+        assert int(stb.force_left) == int(st1.force_left)
+
+    def test_matches_sequential_selects(self, bk):
+        """gamma=1 removes staleness inflation, so the frozen-dt block
+        decision is exactly the sequential no-feedback fold."""
+        cfg = RouterConfig(d=8, max_arms=4, gamma=1.0, backend=bk)
+        st = warmed_state(cfg)
+        B = 16
+        X = rand_block(B, cfg.d, seed=2)
+        seq_arms, s = [], st
+        for i in range(B):
+            dec, s = router.select(cfg, s, X[i])
+            seq_arms.append(int(dec.arm))
+        decb, stb = router.select_batch(cfg, st, X)
+        assert list(np.asarray(decb.arms)) == seq_arms
+        assert int(stb.t) == int(s.t)
+        assert jnp.array_equal(stb.key, s.key)
+        assert jnp.array_equal(stb.last_play, s.last_play)
+
+    def test_candidate_mask_respected(self, bk):
+        """Arms excluded by the hard ceiling never receive traffic."""
+        cfg = RouterConfig(d=8, max_arms=4, backend=bk)
+        st = mk_state(cfg)
+        st = dataclasses.replace(
+            st, pacer=PacerState(
+                lam=jnp.float32(4.0), c_ema=st.pacer.c_ema,
+                budget=st.pacer.budget, enabled=st.pacer.enabled))
+        dec, _ = router.select_batch(cfg, st, rand_block(32, cfg.d))
+        cand = np.asarray(dec.candidates)
+        assert not cand[2]  # priced 10.0 >> ceiling 10/(1+4)=2
+        assert not np.any(np.asarray(dec.arms) == 2)
+
+    def test_forced_exploration_prefix(self, bk):
+        """A hot-swapped arm takes exactly the first force_left requests
+        of the block; the counter drains across blocks."""
+        cfg = RouterConfig(d=8, max_arms=4, forced_pulls=5, backend=bk)
+        st = mk_state(cfg)
+        st = registry.add_arm(cfg, st, 3, 0.5, 0.5)  # forced_exploration=True
+        dec, st = router.select_batch(cfg, st, rand_block(3, cfg.d, seed=4))
+        assert list(np.asarray(dec.arms)) == [3, 3, 3]
+        assert np.all(np.asarray(dec.forced))
+        assert int(st.force_left) == 2
+        dec2, st2 = router.select_batch(cfg, st, rand_block(8, cfg.d, seed=5))
+        arms2 = np.asarray(dec2.arms)
+        assert list(arms2[:2]) == [3, 3]
+        assert np.all(~np.asarray(dec2.forced[2:]))
+        assert int(st2.force_left) == 0
+
+    def test_forced_inactive_arm_ignored(self, bk):
+        cfg = RouterConfig(d=8, max_arms=4, backend=bk)
+        st = mk_state(cfg)
+        st = dataclasses.replace(
+            st, force_arm=jnp.int32(3), force_left=jnp.int32(4))  # inactive
+        dec, _ = router.select_batch(cfg, st, rand_block(6, cfg.d))
+        assert not np.any(np.asarray(dec.forced))
+        assert not np.any(np.asarray(dec.arms) == 3)
+
+
+class TestUpdateBatch:
+    def test_matches_sequential_fold(self):
+        cfg = RouterConfig(d=8, max_arms=4)
+        st = warmed_state(cfg)
+        B = 24
+        rng = np.random.default_rng(11)
+        arms = jnp.asarray(rng.integers(0, 3, B), jnp.int32)
+        X = rand_block(B, cfg.d, seed=6)
+        rs = jnp.asarray(rng.uniform(0, 1, B), jnp.float32)
+        cs = jnp.asarray(rng.uniform(1e-5, 1e-3, B), jnp.float32)
+        s = st
+        for i in range(B):
+            s = router.update(cfg, s, arms[i], X[i], rs[i], cs[i])
+        sb = router.update_batch(cfg, st, arms, X, rs, cs)
+        np.testing.assert_allclose(sb.A, s.A, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(sb.A_inv, s.A_inv, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(sb.b, s.b, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(sb.theta, s.theta, rtol=1e-5, atol=1e-6)
+        assert jnp.array_equal(sb.last_upd, s.last_upd)
+        np.testing.assert_allclose(sb.pacer.lam, s.pacer.lam, atol=1e-7)
+        np.testing.assert_allclose(sb.pacer.c_ema, s.pacer.c_ema, rtol=1e-5)
+
+    def test_pacer_batch_ema_matches_fold(self):
+        cfg = RouterConfig()
+        p = PacerState(lam=jnp.float32(0.2), c_ema=jnp.float32(8e-4),
+                       budget=jnp.float32(6.6e-4),
+                       enabled=jnp.asarray(True))
+        costs = jnp.asarray(
+            np.random.default_rng(0).uniform(1e-5, 2e-3, 64), jnp.float32)
+        q = p
+        for c in costs:
+            q = pacer.pacer_update(cfg, q, c)
+        qb = pacer.pacer_update_batch(cfg, p, costs)
+        np.testing.assert_allclose(qb.lam, q.lam, atol=2e-6)
+        np.testing.assert_allclose(qb.c_ema, q.c_ema, rtol=1e-5)
+
+    def test_pacer_batch_disabled_frozen(self):
+        cfg = RouterConfig()
+        p = PacerState(lam=jnp.float32(0.3), c_ema=jnp.float32(1e-3),
+                       budget=jnp.float32(6.6e-4),
+                       enabled=jnp.asarray(False))
+        qb = pacer.pacer_update_batch(cfg, p, jnp.full((32,), 5e-2))
+        assert float(qb.lam) == pytest.approx(0.3)
+        assert float(qb.c_ema) == pytest.approx(1e-3)
+
+
+class TestRunStreamBatched:
+    def _env(self, n=128, seed=0):
+        bench = simulator.make_benchmark(
+            seed=seed, splits={"train": 256, "val": 32, "test": n})
+        return bench.test
+
+    def test_block_size_one_matches_run_stream(self):
+        """B=1 blocks are the per-request closed loop (same interleave of
+        select and update), so traces must coincide."""
+        cfg = RouterConfig(max_arms=4)
+        env = self._env()
+        xs = jnp.asarray(env.contexts)
+        rmat = jnp.asarray(np.concatenate(
+            [env.rewards, np.zeros((env.n, 1), np.float32)], axis=1))
+        cmat = jnp.asarray(np.concatenate(
+            [env.costs, np.full((env.n, 1), 1e9, np.float32)], axis=1))
+        preq = np.concatenate([env.prices_per_req, [1e9]]).astype(np.float32)
+        st = init_state(cfg, preq, preq, 6.6e-4,
+                        active=jnp.asarray([1, 1, 1, 0], bool))
+        _, (arms_a, r_a, c_a, lam_a) = router.run_stream(
+            cfg, st, xs, rmat, cmat)
+        _, (arms_b, r_b, c_b, lam_b) = router.run_stream_batched(
+            cfg, st, xs, rmat, cmat, batch_size=1)
+        np.testing.assert_array_equal(np.asarray(arms_a), np.asarray(arms_b))
+        np.testing.assert_allclose(np.asarray(lam_a), np.asarray(lam_b),
+                                   atol=1e-7)
+
+    @pytest.mark.parametrize("batch_size", [8, 50])  # 50: remainder block
+    def test_batched_stream_sane(self, batch_size):
+        cfg = RouterConfig(max_arms=4)
+        env = self._env()
+        res = evaluate.run(cfg, env, budget=6.6e-4, seeds=(0, 1),
+                           batch_size=batch_size)
+        assert res.arms.shape == (2, env.n)
+        assert 0.0 <= res.mean_reward <= 1.0
+        assert np.isfinite(res.mean_cost)
+        assert np.all(res.arms < 3)  # padded arm never chosen
+
+    def test_batched_pacing_tracks_sequential(self):
+        """Blocked feedback coarsens pacing but must land near the same
+        realised cost as the per-request loop."""
+        cfg = RouterConfig(max_arms=4)
+        env = self._env(n=1024, seed=1)
+        budget = 6.6e-4
+        seq = evaluate.run(cfg, env, budget=budget, seeds=(0, 1, 2))
+        blk = evaluate.run(cfg, env, budget=budget, seeds=(0, 1, 2),
+                           batch_size=64)
+        assert abs(seq.compliance(budget) - blk.compliance(budget)) < 0.5
+        assert abs(seq.mean_reward - blk.mean_reward) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# batch serving through real (tiny) models
+# ---------------------------------------------------------------------------
+
+def _mk_server(backend="jnp", seed=0, judge_noise=0.0):
+    from repro.core.costs import ArmPricing
+    from repro.core.features import fit_pca_whitener, hash_encode_batch
+    from repro.data import make_request_stream
+    from repro.models.config import ModelConfig
+    from repro.serving import PortfolioServer, ServedModel, SimulatedJudge
+
+    def tiny(name, d=32, seed=0):
+        return ModelConfig(
+            name=name, arch_type="dense", num_layers=1, d_model=d,
+            num_heads=2, num_kv_heads=2, d_ff=2 * d, vocab_size=256,
+            dtype="float32")
+
+    corpus = [r["prompt"] for r in make_request_stream(120, seed=9)]
+    whitener = fit_pca_whitener(hash_encode_batch(corpus))
+    models = [
+        ServedModel.init(tiny("budget"), ArmPricing("budget", 1e-4, 300),
+                         "budget", 0),
+        ServedModel.init(tiny("mid"), ArmPricing("mid", 1e-3, 500), "mid", 1),
+        ServedModel.init(tiny("frontier"),
+                         ArmPricing("frontier", 5.6e-3, 2500), "frontier", 2),
+    ]
+    # gamma=1.0: no staleness inflation, so block and sequential decisions
+    # coincide exactly; noise-free judge keeps rewards order-independent.
+    return PortfolioServer(
+        models, whitener, budget=6.6e-4,
+        router_cfg=RouterConfig(max_arms=4, gamma=1.0, backend=backend),
+        judge=SimulatedJudge(seed, noise=judge_noise),
+        max_new_tokens=2, seed=seed,
+    )
+
+
+@pytest.fixture(scope="module")
+def requests12():
+    from repro.data import make_request_stream
+    return make_request_stream(12, seed=21)
+
+
+class TestBatchServing:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_serve_batch_matches_sequential_serves(self, requests12, backend):
+        """serve_batch == B sequential serves with deferred feedback,
+        under a fixed key: same routing decisions, same final state."""
+        a = _mk_server(backend)
+        b = _mk_server(backend)
+        res_a = a.serve_batch(requests12)
+        res_b = [b.serve(r, defer_feedback=True) for r in requests12]
+        b.feedback_batch([r.request_id for r in res_b],
+                         [r.arm for r in res_b],
+                         [r.reward for r in res_b],
+                         [r.cost for r in res_b])
+        assert [r.arm for r in res_a] == [r.arm for r in res_b]
+        assert [r.reward for r in res_a] == pytest.approx(
+            [r.reward for r in res_b])
+        assert [r.cost for r in res_a] == pytest.approx(
+            [r.cost for r in res_b])
+        np.testing.assert_allclose(a.state.theta, b.state.theta,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(a.state.pacer.lam, b.state.pacer.lam,
+                                   atol=2e-6)
+        assert jnp.array_equal(a.state.key, b.state.key)
+        assert int(a.state.t) == int(b.state.t) == 12
+
+    def test_serve_batch_consumes_context_cache(self, requests12):
+        srv = _mk_server()
+        srv.serve_batch(requests12)
+        assert len(srv._ctx_cache) == 0  # feedback applied for whole block
+
+    def test_deferred_feedback_keeps_context_cached(self, requests12):
+        srv = _mk_server()
+        srv.serve_batch(requests12[:4], defer_feedback=True)
+        assert len(srv._ctx_cache) == 4
+        assert int(srv.state.t) == 4  # routed, not yet updated
+
+    def test_forced_exploration_spans_batch(self, requests12):
+        """A hot-swapped model takes the head of the next block."""
+        from repro.core.costs import ArmPricing
+        from repro.models.config import ModelConfig
+        from repro.serving import ServedModel
+        srv = _mk_server()
+        srv.serve_batch(requests12[:4])
+        cfgm = ModelConfig(name="flash", arch_type="dense", num_layers=1,
+                           d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                           vocab_size=256, dtype="float32")
+        slot = srv.add_model(ServedModel.init(
+            cfgm, ArmPricing("flash", 1.4e-3, 300), "mid"))
+        n_forced = int(srv.state.force_left)
+        assert n_forced == srv.cfg.forced_pulls
+        res = srv.serve_batch(requests12[4:10])
+        assert all(r.arm == slot for r in res)  # 6 < forced_pulls
+        assert int(srv.state.force_left) == n_forced - 6
+
+    def test_tokenizer_cached_per_model(self, requests12):
+        srv = _mk_server()
+        srv.serve_batch(requests12[:6])
+        toks = dict(srv._tokenizers)
+        srv.serve_batch(requests12[6:])
+        for name, tok in srv._tokenizers.items():
+            assert toks.get(name) is tok  # same instance reused
+
+    def test_generate_threads_prng_keys(self):
+        """Sampled decoding draws a fresh key per token: different keys
+        give different continuations, same key is reproducible."""
+        srv = _mk_server()
+        model = srv.models[0]
+        ids = srv._tokenizer(model).encode("the quick brown fox")
+        k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+        out1 = model.generate(ids, 8, key=k1, temperature=2.0)
+        out1b = model.generate(ids, 8, key=k1, temperature=2.0)
+        out2 = model.generate(ids, 8, key=k2, temperature=2.0)
+        np.testing.assert_array_equal(out1, out1b)
+        assert not np.array_equal(out1, out2)
+        # per-token keys differ within one generation: a sampled stream of
+        # 8 tokens from near-uniform logits should not be constant
+        assert len(set(out1.tolist())) > 1

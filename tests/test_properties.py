@@ -4,7 +4,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis installed"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import linucb, pacer, router
 from repro.core.types import RouterConfig, init_state, log_normalized_cost
