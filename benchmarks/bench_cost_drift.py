@@ -4,105 +4,74 @@ Three-phase protocol: normal pricing -> Gemini-2.5-Pro cut to $0.10/M
 tokens (multiplier 1/56 on its $5.6/M rate card) -> restored. Four
 conditions x three budgets; report per-phase compliance and the Phase-2
 reward lift.
+
+The protocol is a ``ScenarioSpec``: two timed ``PriceChange`` events
+(with ``recalibrate=True`` for the oracle-recalibration baseline) and a
+phase-3 prompt replay — the whole three-phase run is one jitted call
+through ``evaluate.run_scenario`` per condition.
 """
 from __future__ import annotations
-
-import dataclasses
-
-import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, NAIVE_CFG, PARETO_CFG, SEEDS, benchmark, bootstrap_ci,
     emit, warmup_priors,
 )
-from repro.core import evaluate, registry, simulator
+from repro.core import evaluate
+from repro.core.scenario import PriceChange, ScenarioSpec
 
 PHASE = 608
 GEMINI = 2
 PRICE_MULT = (0.10 / 1e3) / 5.6e-3  # -> $0.10 per 1M tokens
 
 
-def phase_envs(env, seeds):
-    """One ordered 3-phase stream per seed."""
-    out = []
-    for s in seeds:
-        rng = np.random.default_rng(1000 + s)
-        out.append(simulator.three_phase_stream(
-            env, lambda e: simulator.with_price_multiplier(e, GEMINI,
-                                                           PRICE_MULT),
-            rng, phase_len=PHASE))
-    return out
+def drift_spec(recalibrate: bool = False) -> ScenarioSpec:
+    """Normal -> drifted -> restored, phase 3 replaying phase 1's prompts.
 
-
-def run_simple(cfg, envs, budget, *, pacer, seeds):
-    priors = list(warmup_priors())
-    return evaluate.run(cfg, envs, budget, seeds=seeds, priors=priors,
-                        n_eff=N_EFF, pacer_enabled=pacer, shuffle=False)
-
-
-def run_recalibrated(envs, budget, seeds):
-    """Naive bandit with ORACLE price recalibration at phase boundaries:
-    c_tilde updated to the drifted rate card (no pacer)."""
-    import jax
-
-    priors = list(warmup_priors())
-    normal_1k = float(envs[0].prices_per_1k[GEMINI])
-    normal_req = float(envs[0].prices_per_req[GEMINI])
-    phase_price = {
-        1: (normal_req * PRICE_MULT, normal_1k * PRICE_MULT),  # drifted
-        2: (normal_req, normal_1k),                             # restored
-    }
-    segs = []
-    states = None
-    for ph in range(3):
-        sub = [e.subset(np.arange(ph * PHASE, (ph + 1) * PHASE))
-               for e in envs]
-        if states is None:
-            states = evaluate.make_states(NAIVE_CFG, sub[0], budget, seeds,
-                                          priors=priors, n_eff=N_EFF,
-                                          pacer_enabled=False)
-        if ph in phase_price:  # oracle recalibration at the boundary
-            preq, p1k = phase_price[ph]
-            states = jax.vmap(
-                lambda st: registry.set_price(NAIVE_CFG, st, GEMINI,
-                                              preq, p1k))(states)
-        res, states = evaluate.run(
-            NAIVE_CFG, sub, budget, seeds=seeds, states=states,
-            shuffle=False, return_states=True)
-        segs.append(res)
-    return evaluate.RunResult(
-        arms=np.concatenate([s.arms for s in segs], axis=1),
-        rewards=np.concatenate([s.rewards for s in segs], axis=1),
-        costs=np.concatenate([s.costs for s in segs], axis=1),
-        lams=np.concatenate([s.lams for s in segs], axis=1),
+    ``recalibrate=True`` is the oracle baseline: the router's rate card
+    (price / c_tilde) is updated at each boundary; otherwise the drift is
+    silent and only realised costs change.
+    """
+    return ScenarioSpec(
+        horizon=3 * PHASE,
+        events=(
+            PriceChange(PHASE, GEMINI, PRICE_MULT, recalibrate=recalibrate),
+            PriceChange(2 * PHASE, GEMINI, 1.0, recalibrate=recalibrate),
+        ),
+        stream_seed_base=1000,
+        replay=((2, 0),),
     )
 
 
-def main(seeds=SEEDS):
-    b = benchmark()
-    rows = []
-    envs = phase_envs(b.test, seeds)
+def run_condition(cfg, budget, seeds, *, pacer, recalibrate=False):
+    return evaluate.run_scenario(
+        cfg, drift_spec(recalibrate), benchmark().test, budget, seeds=seeds,
+        priors=list(warmup_priors()), n_eff=N_EFF, pacer_enabled=pacer)
 
+
+def main(seeds=SEEDS):
+    rows = []
     conditions = {
-        "naive": lambda bud: run_simple(NAIVE_CFG, envs, bud, pacer=False,
-                                        seeds=seeds),
-        "recalibrated": lambda bud: run_recalibrated(envs, bud, seeds),
-        "forgetting": lambda bud: run_simple(PARETO_CFG, envs, bud,
-                                             pacer=False, seeds=seeds),
-        "paretobandit": lambda bud: run_simple(PARETO_CFG, envs, bud,
-                                               pacer=True, seeds=seeds),
+        "naive": lambda bud: run_condition(NAIVE_CFG, bud, seeds,
+                                           pacer=False),
+        "recalibrated": lambda bud: run_condition(NAIVE_CFG, bud, seeds,
+                                                  pacer=False,
+                                                  recalibrate=True),
+        "forgetting": lambda bud: run_condition(PARETO_CFG, bud, seeds,
+                                                pacer=False),
+        "paretobandit": lambda bud: run_condition(PARETO_CFG, bud, seeds,
+                                                  pacer=True),
     }
 
     for bname, budget in BUDGETS.items():
         for cname, fn in conditions.items():
             res = fn(budget)
             per_phase = []
-            for ph in range(3):
-                seg = res.phase(ph * PHASE, (ph + 1) * PHASE)
+            for ph in range(res.n_segments):
+                seg = res.segment(ph)
                 m, lo, hi = bootstrap_ci(seg.costs.mean(axis=1) / budget)
                 per_phase.append(f"P{ph+1}={m:.2f}[{lo:.2f},{hi:.2f}]")
-            p1 = res.phase(0, PHASE).mean_reward
-            p2 = res.phase(PHASE, 2 * PHASE).mean_reward
+            p1 = res.segment(0).mean_reward
+            p2 = res.segment(1).mean_reward
             rows.append([
                 f"cost_drift_{bname}_{cname}", f"{budget:.2e}",
                 ";".join(per_phase) + f";p2_lift={p2 - p1:+.4f}",

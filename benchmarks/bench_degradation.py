@@ -4,47 +4,48 @@ Mistral-Large's reward drops to 0.75 in Phase 2 (cost unchanged — only
 the reward signal reveals it), restored in Phase 3. Reports reallocation,
 recovery ratio, compliance, the unconstrained baseline's cost blow-up,
 and the no-pacer bandit's overshoot (the paper's 6.9x headline).
+
+The protocol is a ``ScenarioSpec``: a timed ``QualityShift`` and its
+restore, phase 3 replaying phase 1's prompts.
 """
 from __future__ import annotations
-
-import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, NAIVE_CFG, PARETO_CFG, SEEDS, benchmark, bootstrap_ci,
     emit, warmup_priors,
 )
-from repro.core import evaluate, simulator
+from repro.core import evaluate
+from repro.core.scenario import QualityShift, ScenarioSpec
 
 PHASE = 608
 MISTRAL = 1
 
 
-def phase_envs(env, seeds, target=0.75):
-    out = []
-    for s in seeds:
-        rng = np.random.default_rng(2000 + s)
-        out.append(simulator.three_phase_stream(
-            env, lambda e: simulator.with_quality_shift(e, MISTRAL, target),
-            rng, phase_len=PHASE))
-    return out
+def degradation_spec(target: float = 0.75) -> ScenarioSpec:
+    return ScenarioSpec(
+        horizon=3 * PHASE,
+        events=(
+            QualityShift(PHASE, MISTRAL, target),
+            QualityShift(2 * PHASE, MISTRAL, None),   # silent restore
+        ),
+        stream_seed_base=2000,
+        replay=((2, 0),),
+    )
 
 
 def main(seeds=SEEDS):
     b = benchmark()
     rows = []
-    envs = phase_envs(b.test, seeds)
+    spec = degradation_spec()
     priors = list(warmup_priors())
 
     for bname, budget in BUDGETS.items():
-        res = evaluate.run(PARETO_CFG, envs, budget, seeds=seeds,
-                           priors=priors, n_eff=N_EFF, shuffle=False)
-        a1 = res.phase(0, PHASE).allocation(3)[MISTRAL]
-        a2 = res.phase(PHASE, 2 * PHASE).allocation(3)[MISTRAL]
-        a3 = res.phase(2 * PHASE, 3 * PHASE).allocation(3)[MISTRAL]
-        r1 = res.phase(0, PHASE).mean_reward
-        r3 = res.phase(2 * PHASE, 3 * PHASE).mean_reward
-        comp = [bootstrap_ci(res.phase(p * PHASE, (p + 1) * PHASE)
-                             .costs.mean(axis=1) / budget)[0]
+        res = evaluate.run_scenario(PARETO_CFG, spec, b.test, budget,
+                                    seeds=seeds, priors=priors, n_eff=N_EFF)
+        a1, a2, a3 = (res.segment(p).allocation(3)[MISTRAL] for p in range(3))
+        r1 = res.segment(0).mean_reward
+        r3 = res.segment(2).mean_reward
+        comp = [bootstrap_ci(res.segment(p).costs.mean(axis=1) / budget)[0]
                 for p in range(3)]
         rows.append([
             f"degradation_{bname}", f"{budget:.2e}",
@@ -58,12 +59,13 @@ def main(seeds=SEEDS):
     # Gemini when Mistral degrades.
     from repro.core.types import RouterConfig
     uncon_cfg = RouterConfig(alpha=0.01, gamma=0.997, lambda_c=0.0)
-    res_u = evaluate.run(uncon_cfg, envs, 1.0, seeds=seeds, priors=priors,
-                         n_eff=N_EFF, pacer_enabled=False, shuffle=False)
-    c1 = res_u.phase(0, PHASE).mean_cost
-    c2 = res_u.phase(PHASE, 2 * PHASE).mean_cost
-    r1u = res_u.phase(0, PHASE).mean_reward
-    r2u = res_u.phase(PHASE, 2 * PHASE).mean_reward
+    res_u = evaluate.run_scenario(uncon_cfg, spec, b.test, 1.0, seeds=seeds,
+                                  priors=priors, n_eff=N_EFF,
+                                  pacer_enabled=False)
+    c1 = res_u.segment(0).mean_cost
+    c2 = res_u.segment(1).mean_cost
+    r1u = res_u.segment(0).mean_reward
+    r2u = res_u.segment(1).mean_reward
     rows.append([
         "degradation_unconstrained", "1.0",
         f"cost_increase={(c2 - c1) / c1 * 100:.1f}%;"
@@ -71,12 +73,11 @@ def main(seeds=SEEDS):
     ])
 
     # No-pacer ablation overshoot (paper: up to 6.9x at the tight ceiling).
-    res_n = evaluate.run(NAIVE_CFG, envs, BUDGETS["tight"], seeds=seeds,
-                         priors=priors, n_eff=N_EFF, pacer_enabled=False,
-                         shuffle=False)
-    overshoot = max(
-        res_n.phase(p * PHASE, (p + 1) * PHASE).compliance(BUDGETS["tight"])
-        for p in range(3))
+    res_n = evaluate.run_scenario(NAIVE_CFG, spec, b.test, BUDGETS["tight"],
+                                  seeds=seeds, priors=priors, n_eff=N_EFF,
+                                  pacer_enabled=False)
+    overshoot = max(res_n.segment(p).compliance(BUDGETS["tight"])
+                    for p in range(3))
     rows.append(["degradation_nopacer_overshoot", f"{overshoot:.2f}",
                  "tight ceiling, max over phases"])
     emit(rows, ["name", "value", "derived"], "degradation")

@@ -5,55 +5,41 @@ Gemini-2.5-Flash is hot-swapped in with no priors and a 20-pull forced
 exploration. Three scenarios x four budgets; reports adoption share,
 steps-to-adoption, rejection of the bad arm, and compliance through the
 transition.
+
+The hot swap is a ``ScenarioSpec``: one timed ``AddArm`` event on a
+4-column environment whose 4th slot starts inactive — the full K=3 -> K=4
+run is one jitted call, with ``registry.add_arm`` applied between scan
+segments inside the compiled program.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
 )
-from repro.core import evaluate, registry, simulator
+from repro.core import evaluate, simulator
+from repro.core.scenario import AddArm, ScenarioSpec
 
 PHASE1 = 608
 PHASE2 = 1216
 FLASH = 3
 
+ONBOARDING_SPEC = ScenarioSpec(
+    horizon=PHASE1 + PHASE2,
+    events=(AddArm(PHASE1, FLASH, n_eff=None, forced_exploration=True),),
+    segment_seeds=(3000, 4000),   # fresh per-segment draws (legacy layout)
+    init_active=3,                # Flash's slot starts inactive
+)
+
 
 def run_scenario(scenario: str, budget: float, seeds):
-    b = benchmark()
-    env4 = simulator.extend_with_flash(b.test, scenario)
+    env4 = simulator.extend_with_flash(benchmark().test, scenario)
     priors = list(warmup_priors()) + [None]
-    rng = np.random.default_rng(7)
-    stream1 = [env4.repeat_to(PHASE1, np.random.default_rng(3000 + s))
-               for s in seeds]
-    stream2 = [env4.repeat_to(PHASE2, np.random.default_rng(4000 + s))
-               for s in seeds]
-
-    # Phase 1: only the 3 original arms active.
-    states = evaluate.make_states(
-        PARETO_CFG, env4, budget, seeds, priors=priors, n_eff=N_EFF,
-        active_arms=3)
-    res1, states = evaluate.run(
-        PARETO_CFG, stream1, budget, seeds=seeds, states=states,
-        shuffle=False, return_states=True)
-
-    # Hot swap: register Flash (uninformative, forced exploration).
-    add = functools.partial(
-        registry.add_arm, PARETO_CFG,
-        slot=FLASH,
-        price_per_req=float(env4.prices_per_req[FLASH]),
-        price_per_1k=float(env4.prices_per_1k[FLASH]),
-        n_eff=None, forced_exploration=True)
-    states = jax.vmap(lambda st: add(st))(states)
-
-    res2, _ = evaluate.run(
-        PARETO_CFG, stream2, budget, seeds=seeds, states=states,
-        shuffle=False, return_states=True)
-    return res1, res2
+    res = evaluate.run_scenario(
+        PARETO_CFG, ONBOARDING_SPEC, env4, budget, seeds=seeds,
+        priors=priors, n_eff=N_EFF)
+    return res.segment(0), res.segment(1)
 
 
 def adoption_step(res2, window=50, threshold=0.02, burn_in=20):

@@ -3,17 +3,27 @@
 Five prior-quality levels (well-calibrated, random-1680, MMLU-only,
 GSM8K-only, inverted) x n_eff in {10, 100, 1000}, unconstrained regime,
 vs the independently optimised Tabula Rasa baseline.
+
+The stationary protocol is the event-free ``ScenarioSpec``: one segment
+covering the test split as a seed-specific permutation (the engine's
+"permutation" mode reproduces ``evaluate.run``'s shuffle convention).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (
-    SEEDS, TABULA_CFG, PARETO_CFG, benchmark, bootstrap_ci, emit,
+    SEEDS, TABULA_CFG, PARETO_CFG, benchmark, emit,
 )
-from repro.core import evaluate, simulator
+from repro.core import evaluate
+from repro.core.scenario import ScenarioSpec
 
 LLAMA, MISTRAL, GEMINI = 0, 1, 2
+
+
+def stationary_spec(horizon: int) -> ScenarioSpec:
+    return ScenarioSpec(horizon=horizon, events=(),
+                        stream_seed_base=0, mode="permutation")
 
 
 def _priors_from(env_subset):
@@ -52,16 +62,18 @@ def regrets(res, env, seeds):
 def main(seeds=SEEDS):
     b = benchmark()
     env = b.test
+    spec = stationary_spec(env.n)
     rows = []
-    res_t = evaluate.run(TABULA_CFG, env, 1.0, seeds=seeds)
+    res_t = evaluate.run_scenario(TABULA_CFG, spec, env, 1.0, seeds=seeds)
     reg_t = regrets(res_t, env, seeds)
     med_t = float(np.median(reg_t))
     rows.append(["tabula_rasa", f"{med_t:.1f}",
                  f"std={reg_t.std():.1f}"])
     for name, priors in prior_variants(b).items():
         for n_eff in (10.0, 100.0, 1000.0):
-            res = evaluate.run(PARETO_CFG, env, 1.0, seeds=seeds,
-                               priors=priors, n_eff=n_eff)
+            res = evaluate.run_scenario(PARETO_CFG, spec, env, 1.0,
+                                        seeds=seeds, priors=priors,
+                                        n_eff=n_eff)
             reg = regrets(res, env, seeds)
             med = float(np.median(reg))
             cat = int((reg > 2 * med_t).sum())

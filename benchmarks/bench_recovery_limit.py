@@ -2,39 +2,39 @@
 
 Sweeps Mistral's degraded reward from 0.05 to 0.85 (moderate budget),
 measuring the Phase-3/Phase-1 reward ratio at the base (608) and extended
-(1216) horizons.
+(1216) horizons. Each (severity, horizon) cell is a two-event
+``ScenarioSpec`` (degrade, restore) with fresh i.i.d. phase-3 prompts.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import (
-    BUDGETS, N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
+    BUDGETS, N_EFF, PARETO_CFG, benchmark, emit, warmup_priors,
 )
-from repro.core import evaluate, simulator
+from repro.core import evaluate
+from repro.core.scenario import QualityShift, ScenarioSpec
 
 MISTRAL = 1
 PHASE = 608
 SEVERITIES = (0.05, 0.25, 0.45, 0.65, 0.75, 0.85)
 
 
+def recovery_spec(target: float, horizon: int) -> ScenarioSpec:
+    return ScenarioSpec(
+        horizon=2 * PHASE + horizon,
+        events=(
+            QualityShift(PHASE, MISTRAL, target),
+            QualityShift(2 * PHASE, MISTRAL, None),
+        ),
+        stream_seed_base=6000,    # phase 3 draws fresh prompts (no replay)
+    )
+
+
 def run(target, horizon, seeds):
-    b = benchmark()
-    env = b.test
-    priors = list(warmup_priors())
-    envs = []
-    for s in seeds:
-        rng = np.random.default_rng(6000 + s)
-        idx1 = rng.integers(0, env.n, PHASE)
-        idx2 = rng.integers(0, env.n, PHASE)
-        idx3 = rng.integers(0, env.n, horizon)
-        p1 = env.subset(idx1)
-        p2 = simulator.with_quality_shift(env, MISTRAL, target).subset(idx2)
-        p3 = env.subset(idx3)  # fresh prompts, i.i.d. preserved
-        envs.append(simulator.concat_environments((p1, p2, p3)))
-    res = evaluate.run(PARETO_CFG, envs, BUDGETS["moderate"], seeds=seeds,
-                       priors=priors, n_eff=N_EFF, shuffle=False)
-    r1 = res.phase(0, PHASE).mean_reward
+    res = evaluate.run_scenario(
+        PARETO_CFG, recovery_spec(target, horizon), benchmark().test,
+        BUDGETS["moderate"], seeds=seeds,
+        priors=list(warmup_priors()), n_eff=N_EFF)
+    r1 = res.segment(0).mean_reward
     # recovery measured on the TAIL of phase 3 (converged region)
     r3 = res.phase(PHASE + PHASE + horizon // 2, 2 * PHASE + horizon).mean_reward
     return r3 / r1

@@ -1,0 +1,180 @@
+"""Scenario-engine generality: three new multi-event scenarios, each run
+through BOTH the scalar and the batched (B=64) data plane.
+
+Scenarios beyond the paper's protocols, authored as ``ScenarioSpec`` data
+(no bespoke phase loops):
+
+  * price_war        — two providers reprice simultaneously (Gemini to
+                       $0.10/M, Mistral to 0.2x) and restore together;
+  * add_then_regress — a good-cheap newcomer is hot-swapped in, adopted,
+                       then silently regresses to 0.60 mean reward;
+  * budget_tighten   — the operator cuts the ceiling from loose to tight
+                       mid-stream (a pure control-plane event: same
+                       prompts, same arms, new pacer target);
+  * mix_shift        — traffic tilts to math/code families (Gemini's
+                       niche) and back, stressing contextual routing.
+
+``--smoke`` runs a tiny spec exercising EVERY event type on a reduced
+environment (CI's scenario-engine smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import (
+    N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
+)
+from repro.core import evaluate, simulator
+from repro.core.costs import BUDGET_LOOSE, BUDGET_TIGHT
+from repro.core.scenario import (
+    AddArm, BudgetChange, DeleteArm, PriceChange, QualityShift, ScenarioSpec,
+    TrafficMixShift,
+)
+
+PHASE = 608
+LLAMA, MISTRAL, GEMINI, FLASH = 0, 1, 2, 3
+BATCH = 64
+
+PRICE_WAR = ScenarioSpec(
+    horizon=3 * PHASE,
+    events=(
+        PriceChange(PHASE, GEMINI, (0.10 / 1e3) / 5.6e-3),
+        PriceChange(PHASE, MISTRAL, 0.2),
+        PriceChange(2 * PHASE, GEMINI, 1.0),
+        PriceChange(2 * PHASE, MISTRAL, 1.0),
+    ),
+    stream_seed_base=5000,
+    replay=((2, 0),),
+)
+
+ADD_THEN_REGRESS = ScenarioSpec(
+    horizon=3 * PHASE,
+    events=(
+        AddArm(PHASE, FLASH, n_eff=None, forced_exploration=True),
+        QualityShift(2 * PHASE, FLASH, 0.60),
+    ),
+    stream_seed_base=5100,
+    init_active=3,
+)
+
+BUDGET_TIGHTEN = ScenarioSpec(
+    horizon=3 * PHASE,
+    events=(BudgetChange(PHASE + PHASE // 2, BUDGET_TIGHT),),
+    stream_seed_base=5200,
+)
+
+# Families: mmlu, gsm8k, hellaswag, bbh, arc, obqa, winogrande, tqa, mbpp.
+_MATH_CODE_MIX = (0.5, 3.0, 0.5, 2.0, 0.5, 0.5, 0.5, 0.5, 3.0)
+
+MIX_SHIFT = ScenarioSpec(
+    horizon=3 * PHASE,
+    events=(
+        TrafficMixShift(PHASE, _MATH_CODE_MIX),
+        TrafficMixShift(2 * PHASE, None),
+    ),
+    stream_seed_base=5300,
+)
+
+
+def _run_both_planes(spec, env, budget, seeds, priors):
+    """Scalar + batched runs of one spec; identical trace shapes."""
+    kw = dict(seeds=seeds, priors=priors, n_eff=N_EFF)
+    scalar = evaluate.run_scenario(PARETO_CFG, spec, env, budget, **kw)
+    batched = evaluate.run_scenario(PARETO_CFG, spec, env, budget,
+                                    batch_size=BATCH, **kw)
+    assert scalar.arms.shape == batched.arms.shape, (
+        scalar.arms.shape, batched.arms.shape)
+    assert scalar.bounds == batched.bounds
+    return scalar, batched
+
+
+def _seg_summary(res, budget, arm):
+    segs = []
+    for j in range(res.n_segments):
+        s = res.segment(j)
+        segs.append(f"P{j+1}:r={s.mean_reward:.3f}"
+                    f"|x={s.compliance(budget):.2f}"
+                    f"|arm{arm}={s.allocation(arm + 1)[arm]:.2f}")
+    return ";".join(segs)
+
+
+def main(seeds=SEEDS):
+    b = benchmark()
+    rows = []
+    pri3 = list(warmup_priors())
+
+    cases = [
+        ("price_war", PRICE_WAR, b.test, BUDGET_LOOSE, pri3, GEMINI),
+        ("add_then_regress", ADD_THEN_REGRESS,
+         simulator.extend_with_flash(b.test, "good_cheap"), 6.6e-4,
+         pri3 + [None], FLASH),
+        ("budget_tighten", BUDGET_TIGHTEN, b.test, BUDGET_LOOSE, pri3,
+         GEMINI),
+        ("mix_shift", MIX_SHIFT, b.test, 6.6e-4, pri3, GEMINI),
+    ]
+    scalar_results = {}
+    for name, spec, env, budget, priors, arm in cases:
+        scalar, batched = _run_both_planes(spec, env, budget, seeds, priors)
+        scalar_results[name] = scalar
+        rows.append([f"scenario_{name}_scalar", f"{budget:.2e}",
+                     _seg_summary(scalar, budget, arm)])
+        rows.append([f"scenario_{name}_b{BATCH}", f"{budget:.2e}",
+                     _seg_summary(batched, budget, arm)])
+
+    # budget_tighten: compliance vs the ceiling in force per side.
+    res = scalar_results["budget_tighten"]
+    cut = BUDGET_TIGHTEN.events[0].t
+    before = res.phase(0, cut).compliance(BUDGET_LOOSE)
+    # judge the tightened regime on its converged tail
+    after = res.phase((cut + 3 * PHASE) // 2, 3 * PHASE).compliance(
+        BUDGET_TIGHT)
+    rows.append(["scenario_budget_tighten_compliance",
+                 f"{before:.2f}->{after:.2f}",
+                 f"ceiling {BUDGET_LOOSE:.1e}->{BUDGET_TIGHT:.1e} at "
+                 f"t={cut}"])
+    emit(rows, ["name", "value", "derived"], "scenarios")
+    return rows
+
+
+def smoke():
+    """CI smoke: every event type in one tiny spec, both data planes."""
+    bench = simulator.make_benchmark(
+        seed=0, splits={"train": 256, "val": 32, "test": 200})
+    env4 = simulator.extend_with_flash(bench.test, "good_cheap")
+    spec = ScenarioSpec(
+        horizon=120,
+        events=(
+            PriceChange(20, GEMINI, 0.1, recalibrate=True),
+            QualityShift(40, MISTRAL, 0.7),
+            AddArm(60, FLASH),
+            BudgetChange(80, BUDGET_TIGHT),
+            TrafficMixShift(90, _MATH_CODE_MIX),
+            DeleteArm(100, FLASH),
+        ),
+        init_active=3,
+    )
+    rows = []
+    for bs in (None, 16):
+        res = evaluate.run_scenario(
+            PARETO_CFG, spec, env4, BUDGET_LOOSE, seeds=(0, 1),
+            batch_size=bs)
+        assert res.arms.shape == (2, 120)
+        assert res.n_segments == 7   # 6 event times + the opening segment
+        assert np.isfinite(res.mean_cost)
+        # deleted newcomer never routed after retirement
+        assert not np.any(res.segment(6).arms == FLASH)
+        rows.append([f"scenario_smoke_b{bs or 1}",
+                     f"{res.mean_reward:.3f}",
+                     f"segments={res.n_segments};cost={res.mean_cost:.2e}"])
+    emit(rows, ["name", "reward", "derived"], "scenario_smoke")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny every-event-type spec (CI)")
+    args = ap.parse_args()
+    smoke() if args.smoke else main()

@@ -22,6 +22,7 @@ BENCHES = [
     ("judges", "App. E: reward-signal robustness across judges"),
     ("cost_heuristic", "App. B: cost heuristic validation"),
     ("recovery_limit", "App. G: recovery limit"),
+    ("scenarios", "Scenario engine: new multi-event scenarios, both planes"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
 ]
@@ -45,7 +46,8 @@ def main(argv=None) -> None:
         try:
             if args.quick and name in ("pareto", "cost_drift", "degradation",
                                        "onboarding", "warmup",
-                                       "prior_mismatch", "judges"):
+                                       "prior_mismatch", "judges",
+                                       "scenarios"):
                 mod.main(seeds=tuple(range(5)))
             elif args.quick and name in ("knee", "recovery_limit"):
                 mod.main(seeds=tuple(range(3)))

@@ -4,6 +4,10 @@ Runs the three-phase cost-drift protocol (normal -> Gemini price cut ->
 restored) and prints windowed reward / cost / lambda_t / allocation, the
 paper's Figure 2 as a terminal table.
 
+The protocol is a declarative ``ScenarioSpec`` — two timed
+``PriceChange`` events with a phase-3 prompt replay — executed as one
+jitted call by ``evaluate.run_scenario`` (DESIGN.md §6).
+
     PYTHONPATH=src python examples/nonstationary_demo.py [--budget 3e-4]
 """
 import argparse
@@ -11,12 +15,12 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
-
 from repro.core import evaluate, simulator  # noqa: E402
+from repro.core.scenario import PriceChange, ScenarioSpec  # noqa: E402
 from repro.core.types import RouterConfig  # noqa: E402
 
 PHASE = 608
+GEMINI = 2
 
 
 def main():
@@ -26,20 +30,21 @@ def main():
     args = ap.parse_args()
 
     bench = simulator.make_benchmark(seed=0)
-    env = bench.test
     cfg = RouterConfig()
     priors = evaluate.fit_warmup_priors(cfg, bench.train)
 
-    envs = []
-    for s in range(args.seeds):
-        rng = np.random.default_rng(100 + s)
-        envs.append(simulator.three_phase_stream(
-            env,
-            lambda e: simulator.with_price_multiplier(e, 2, 1.0 / 56.0),
-            rng, phase_len=PHASE))
-
-    res = evaluate.run(cfg, envs, args.budget, seeds=range(args.seeds),
-                       priors=priors, n_eff=1164.0, shuffle=False)
+    spec = ScenarioSpec(
+        horizon=3 * PHASE,
+        events=(
+            PriceChange(PHASE, GEMINI, 1.0 / 56.0),   # $5.6/M -> $0.10/M
+            PriceChange(2 * PHASE, GEMINI, 1.0),      # restored
+        ),
+        stream_seed_base=100,
+        replay=((2, 0),),      # phase 3 reuses phase 1 prompts
+    )
+    res = evaluate.run_scenario(cfg, spec, bench.test, args.budget,
+                                seeds=range(args.seeds), priors=priors,
+                                n_eff=1164.0)
 
     print(f"budget B=${args.budget:.1e}/req | phases: normal | gemini "
           f"price/56 | restored")

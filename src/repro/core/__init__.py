@@ -21,6 +21,15 @@ from repro.core.router import (  # noqa: F401
 )
 from repro.core.backend import RoutingBackend, get_backend  # noqa: F401
 from repro.core.registry import add_arm, delete_arm, set_price  # noqa: F401
+from repro.core.scenario import (  # noqa: F401
+    AddArm,
+    BudgetChange,
+    DeleteArm,
+    PriceChange,
+    QualityShift,
+    ScenarioSpec,
+    TrafficMixShift,
+)
 from repro.core.warmup import (  # noqa: F401
     apply_warmup,
     fit_offline_prior,

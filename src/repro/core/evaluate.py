@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import router, warmup
+from repro.core import router, scenario as scenario_lib, warmup
 from repro.core.simulator import Environment
 from repro.core.types import ArmPrior, RouterConfig, RouterState, init_state
 
@@ -27,6 +27,9 @@ class RunResult:
     rewards: np.ndarray  # (S, T)
     costs: np.ndarray    # (S, T)
     lams: np.ndarray     # (S, T) dual variable trace
+    # Segment boundaries (0, ..., T) when the run came from a scenario
+    # spec or a concat; None for a plain single-segment run.
+    bounds: Optional[tuple] = None
 
     @property
     def mean_reward(self) -> float:
@@ -54,6 +57,33 @@ class RunResult:
             lams=self.lams[:, start:stop],
         )
 
+    @property
+    def n_segments(self) -> int:
+        return 1 if self.bounds is None else len(self.bounds) - 1
+
+    def segment(self, j: int) -> "RunResult":
+        """Slice to scenario segment ``j`` (between event boundaries)."""
+        assert self.bounds is not None, "run has no segment boundaries"
+        return self.phase(self.bounds[j], self.bounds[j + 1])
+
+    @classmethod
+    def concat(cls, parts: Sequence["RunResult"]) -> "RunResult":
+        """Stitch per-segment results along the time axis; the joins (and
+        any internal boundaries of the parts) become segment bounds."""
+        parts = list(parts)
+        bounds, off = [0], 0
+        for p in parts:
+            inner = p.bounds if p.bounds is not None else (0, p.arms.shape[1])
+            bounds.extend(off + b for b in inner[1:])
+            off += p.arms.shape[1]
+        return cls(
+            arms=np.concatenate([p.arms for p in parts], axis=1),
+            rewards=np.concatenate([p.rewards for p in parts], axis=1),
+            costs=np.concatenate([p.costs for p in parts], axis=1),
+            lams=np.concatenate([p.lams for p in parts], axis=1),
+            bounds=tuple(bounds),
+        )
+
     def regret_vs_oracle(self, env_rewards: np.ndarray) -> np.ndarray:
         """(S,) cumulative regret vs the per-prompt oracle."""
         oracle = env_rewards.max(axis=1)  # (T,)
@@ -71,7 +101,9 @@ def make_states(
     pacer_enabled: bool = True,
     active_arms: Optional[int] = None,
 ) -> RouterState:
-    """Stacked (vmapped) initial states, one per seed."""
+    """Stacked initial states, one per seed: a single ``jax.vmap`` over
+    PRNG keys (the key is the only per-seed leaf; everything else
+    broadcasts), not a Python loop + ``jnp.stack``."""
     k = env.k
     assert k <= cfg.max_arms, (k, cfg.max_arms)
     pad = cfg.max_arms - k
@@ -81,18 +113,19 @@ def make_states(
     active = np.zeros(cfg.max_arms, bool)
     active[:n_active] = True
 
-    def one(seed):
+    def one(key):
         st = init_state(
             cfg, preq, p1k, budget,
-            key=jax.random.PRNGKey(seed), active=jnp.asarray(active),
+            key=key, active=jnp.asarray(active),
             pacer_enabled=pacer_enabled,
         )
         if priors is not None and n_eff > 0:
             st = warmup.apply_warmup(cfg, st, list(priors) + [None] * pad, n_eff)
         return st
 
-    states = [one(int(s)) for s in seeds]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    keys = jax.vmap(jax.random.PRNGKey)(
+        jnp.asarray([int(s) for s in seeds], jnp.uint32))
+    return jax.vmap(one)(keys)
 
 
 def _pad_env_arrays(cfg: RouterConfig, env: Environment):
@@ -190,6 +223,47 @@ def _cached_run_fn(cfg: RouterConfig, stream_axes, batch_size=None):
     return jax.jit(
         jax.vmap(one_seed, in_axes=(0, stream_axes, stream_axes, stream_axes))
     )
+
+
+def run_scenario(
+    cfg: RouterConfig,
+    spec: "scenario_lib.ScenarioSpec",
+    env: Environment,
+    budget: float,
+    seeds: Sequence[int] = tuple(range(20)),
+    *,
+    priors: Optional[Sequence[ArmPrior | None]] = None,
+    n_eff: float = 0.0,
+    pacer_enabled: bool = True,
+    batch_size: Optional[int] = None,
+    return_states: bool = False,
+):
+    """Run a declarative ``ScenarioSpec`` over ``env`` as ONE jitted,
+    seed-vmapped segmented-scan call (scenario.py).
+
+    The spec's event timeline is compiled to a per-seed stream tensor
+    stack plus pure state edits applied between ``lax.scan`` segments;
+    ``batch_size`` > 1 consumes every segment through the batched data
+    plane instead of the per-request loop. The returned ``RunResult``
+    carries the spec's segment ``bounds`` so metrics reduce per segment
+    via ``res.segment(j)``.
+    """
+    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds)
+    states = make_states(
+        cfg, env, budget, seeds,
+        priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+        active_arms=spec.init_active,
+    )
+    run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size)
+    finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
+    res = RunResult(
+        arms=np.asarray(arms), rewards=np.asarray(r),
+        costs=np.asarray(c), lams=np.asarray(lam),
+        bounds=spec.bounds,
+    )
+    if return_states:
+        return res, finals
+    return res
 
 
 def fit_warmup_priors(

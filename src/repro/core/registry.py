@@ -12,6 +12,13 @@ so the jitted routing step never recompiles across portfolio changes.
 
 A newly added arm can be given a forced-exploration burn-in
 (cfg.forced_pulls unconditional routes, §4.5), after which UCB takes over.
+
+``add_arm`` / ``delete_arm`` / ``set_price`` are pure, jnp-only and
+vmap-safe (``slot`` and the prior/price parameters are trace constants;
+only ``state`` leaves are batched), so control-plane events compose under
+``jax.vmap`` over seeds and can be baked into a jitted program — the
+scenario engine (scenario.py) applies them between ``lax.scan`` segments
+inside one compiled simulation.
 """
 from __future__ import annotations
 
@@ -53,8 +60,9 @@ def add_arm(
     bias_reward: float = 0.5,
     forced_exploration: bool = True,
 ) -> RouterState:
-    """Register a model into ``slot`` at runtime. Host-side (not jitted):
-    portfolio changes are rare control-plane events."""
+    """Register a model into ``slot`` at runtime. Pure and trace-safe:
+    callable from the host (serving gateway), under ``jax.vmap`` over a
+    stacked state, or inside a jitted scenario program."""
     d = cfg.d
     if prior is not None:
         A, b = warmup_lib.scale_prior(cfg, prior, n_eff or 1.0)

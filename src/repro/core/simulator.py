@@ -244,13 +244,48 @@ def three_phase_stream(
     p1 = env.subset(idx1)
     p2 = perturb(env).subset(idx2)
     p3 = env.subset(idx1)  # Phase 3 reuses Phase 1 prompts
-    return concat_environments((p1, p2, p3))
+    # Label the stitched stream with the BASE rate card: phases 1/3 are
+    # the base environment and a phase-2 drift is a transient of the
+    # realised costs, not a new nominal price.
+    return concat_environments((p1, p2, p3), prices="first")
 
 
-def concat_environments(envs) -> Environment:
-    last = envs[-1]
+def concat_environments(envs, *, prices: str = "strict") -> Environment:
+    """Stitch per-phase environments into one ordered stream.
+
+    ``prices`` controls the stitched stream's (K,) rate-card label, which
+    downstream code uses to initialise the router (hard ceiling, Eq. 6):
+
+      * "strict" (default) — require every phase to share the rate card
+        and raise otherwise, so a drifted phase can never silently
+        mislabel the stream (this function used to take the *last*
+        phase's card, which mislabels any stream ending in a drifted
+        phase);
+      * "first" / "last" — explicitly pick that phase's card when phases
+        legitimately differ (the caller owns the semantics).
+
+    Realised per-request ``costs`` are always the per-phase truth; only
+    the nominal rate-card label is at stake here.
+    """
+    envs = tuple(envs)
+    if prices == "strict":
+        for e in envs[1:]:
+            if not (np.array_equal(e.prices_per_1k, envs[0].prices_per_1k)
+                    and np.array_equal(e.prices_per_req,
+                                       envs[0].prices_per_req)):
+                raise ValueError(
+                    "concat_environments: phases disagree on the rate card "
+                    f"({envs[0].prices_per_1k} vs {e.prices_per_1k}); pass "
+                    "prices='first' or prices='last' to pick one explicitly")
+        base = envs[0]
+    elif prices == "first":
+        base = envs[0]
+    elif prices == "last":
+        base = envs[-1]
+    else:
+        raise ValueError(f"prices must be strict|first|last, got {prices!r}")
     return dataclasses.replace(
-        last,
+        base,
         contexts=np.concatenate([e.contexts for e in envs]),
         rewards=np.concatenate([e.rewards for e in envs]),
         costs=np.concatenate([e.costs for e in envs]),

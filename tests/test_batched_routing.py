@@ -255,6 +255,92 @@ class TestRunStreamBatched:
         assert abs(seq.mean_reward - blk.mean_reward) < 0.1
 
 
+class TestHotSwapBatched:
+    """Registry control-plane events applied between ``step_batch`` blocks
+    — the gateway's hot-swap path under the batched data plane."""
+
+    def _block(self, cfg, B, seed=0):
+        rng = np.random.default_rng(seed)
+        X = jnp.asarray(rng.standard_normal((B, cfg.d)), jnp.float32)
+        r = jnp.asarray(rng.uniform(0.2, 0.9, (B, cfg.max_arms)), jnp.float32)
+        c = jnp.asarray(rng.uniform(1e-5, 1e-3, (B, cfg.max_arms)),
+                        jnp.float32)
+        return X, r, c
+
+    def test_add_arm_between_blocks(self):
+        cfg = RouterConfig(d=8, max_arms=4, forced_pulls=6)
+        st = mk_state(cfg)
+        st, (arms1, *_rest) = router.step_batch(cfg, st, *self._block(cfg, 8))
+        assert not np.any(np.asarray(arms1) == 3)   # slot 3 inactive
+        st = registry.add_arm(cfg, st, 3, 0.5, 0.5)
+        st, (arms2, *_rest) = router.step_batch(
+            cfg, st, *self._block(cfg, 8, seed=1))
+        assert list(np.asarray(arms2[:6])) == [3] * 6  # burn-in head
+        assert int(st.force_left) == 0
+
+    def test_delete_forced_arm_cancels_mid_burnin(self):
+        """Deleting the newcomer mid-burn-in cancels the remaining forced
+        pulls; later blocks never route to the retired slot."""
+        cfg = RouterConfig(d=8, max_arms=4, forced_pulls=10)
+        st = mk_state(cfg)
+        st = registry.add_arm(cfg, st, 3, 0.5, 0.5)
+        st, (arms1, *_rest) = router.step_batch(cfg, st, *self._block(cfg, 4))
+        assert list(np.asarray(arms1)) == [3] * 4
+        assert int(st.force_left) == 6               # mid-burn-in
+        st = registry.delete_arm(cfg, st, 3)
+        assert int(st.force_left) == 0               # cancelled
+        assert int(st.force_arm) == -1
+        st, (arms2, *_rest) = router.step_batch(
+            cfg, st, *self._block(cfg, 16, seed=2))
+        assert not np.any(np.asarray(arms2) == 3)
+
+    def test_delete_other_arm_keeps_burnin(self):
+        cfg = RouterConfig(d=8, max_arms=4, forced_pulls=10)
+        st = mk_state(cfg)
+        st = registry.add_arm(cfg, st, 3, 0.5, 0.5)
+        st = registry.delete_arm(cfg, st, 1)         # unrelated retirement
+        assert int(st.force_left) == 10
+        _, (arms, *_rest) = router.step_batch(cfg, st, *self._block(cfg, 4))
+        assert list(np.asarray(arms)) == [3] * 4
+
+    def test_set_price_between_blocks_moves_ceiling(self):
+        """Repricing between blocks changes the next block's candidate
+        set under a binding dual variable."""
+        cfg = RouterConfig(d=8, max_arms=4)
+        st = mk_state(cfg)   # prices 0.1 / 1.0 / 10.0, ceiling 10/(1+lam)
+        st = dataclasses.replace(st, pacer=PacerState(
+            lam=jnp.float32(4.0), c_ema=st.pacer.c_ema,
+            budget=st.pacer.budget, enabled=st.pacer.enabled))
+        dec1, st = router.select_batch(cfg, st, rand_block(8, cfg.d))
+        assert not bool(dec1.candidates[2])          # 10.0 > ceiling 2.0
+        # after repricing, c_max over active arms is 1.0 -> ceiling 0.2
+        st = registry.set_price(cfg, st, 2, 0.15, 0.15)
+        dec2, _ = router.select_batch(cfg, st, rand_block(8, cfg.d, seed=1))
+        assert bool(dec2.candidates[2])              # repriced under ceiling
+
+    def test_registry_edits_vmap_over_seed_states(self):
+        """add/delete/set_price are vmap-safe over a stacked state — the
+        scenario engine's per-boundary edit path."""
+        cfg = RouterConfig(d=8, max_arms=4)
+        states = jax.vmap(lambda k: init_state(
+            cfg, jnp.asarray([0.1, 1.0, 10.0, 1e9], jnp.float32),
+            jnp.asarray([0.1, 1.0, 10.0, 1e9], jnp.float32), 1.0,
+            key=k, active=jnp.asarray([1, 1, 1, 0], bool)))(
+            jax.vmap(jax.random.PRNGKey)(jnp.arange(3, dtype=jnp.uint32)))
+        states = jax.vmap(
+            lambda st: registry.add_arm(cfg, st, 3, 0.5, 0.5))(states)
+        assert states.active.shape == (3, 4)
+        assert bool(states.active[:, 3].all())
+        assert list(np.asarray(states.force_left)) == [cfg.forced_pulls] * 3
+        states = jax.vmap(
+            lambda st: registry.set_price(cfg, st, 3, 0.7, 0.7))(states)
+        np.testing.assert_allclose(states.price[:, 3], 0.7)
+        states = jax.vmap(
+            lambda st: registry.delete_arm(cfg, st, 3))(states)
+        assert not bool(states.active[:, 3].any())
+        assert list(np.asarray(states.force_left)) == [0] * 3
+
+
 # ---------------------------------------------------------------------------
 # batch serving through real (tiny) models
 # ---------------------------------------------------------------------------
