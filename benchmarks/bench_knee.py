@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import N_EFF, SEEDS, benchmark, emit, warmup_priors
-from repro.core import evaluate, knee, simulator, warmup
+from repro.core import evaluate, knee, simulator, sweep, warmup
 from repro.core.types import RouterConfig
 
 ALPHAS = (0.005, 0.01, 0.05, 0.1)
@@ -24,10 +24,13 @@ GRID_SEEDS = tuple(range(10))
 
 
 def _auc(cfg, env, priors, n_eff, seeds):
+    # The whole budget x seed frontier for this (alpha, gamma) cell is one
+    # fabric call — alpha/gamma are trace constants (one compile per cell)
+    # but the budget axis is a state leaf, so the five ceilings fuse.
+    grid = sweep.run_grid(cfg, env, AUC_BUDGETS, seeds=seeds,
+                          priors=priors, n_eff=n_eff)
     qualities, costs = [], []
-    for b in AUC_BUDGETS:
-        res = evaluate.run(cfg, env, b, seeds=seeds, priors=priors,
-                           n_eff=n_eff)
+    for _, res in grid.conditions():
         qualities.append(res.mean_reward)
         costs.append(max(res.mean_cost, 1e-7))
     return knee.auc_of_frontier(np.asarray(costs), np.asarray(qualities))

@@ -1,15 +1,17 @@
 """Figure 1: stationary budget pacing — the quality-cost Pareto frontier.
 
-Sweeps seven budget ceilings (plus unconstrained), reporting realised
-cost, compliance, quality and per-arm allocation; prints the fixed-model
-anchor points and the oracle for comparison.
+Sweeps seven budget ceilings (plus unconstrained) as ONE compiled,
+device-sharded grid call (the sweep fabric — the budget is a
+``PacerState`` leaf, so the whole grid shares one trace), reporting
+realised cost, compliance, quality and per-arm allocation; prints the
+fixed-model anchor points and the oracle for comparison.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (
-    BUDGETS, SEEDS, benchmark, bootstrap_ci, emit, run_condition,
+    BUDGETS, SEEDS, benchmark, bootstrap_ci, emit, run_condition_grid,
 )
 from repro.core import simulator
 
@@ -29,8 +31,11 @@ def main(seeds=SEEDS):
     oracle = simulator.oracle_reward(env)
     rows.append(["oracle_reward", f"{oracle:.4f}", ""])
 
-    for budget in BUDGET_SWEEP:
-        res = run_condition("pareto", env, budget, seeds=seeds)
+    # Seven ceilings + unconstrained: one fabric call, one compile.
+    grid = run_condition_grid(
+        "pareto", env, list(BUDGET_SWEEP) + [1.0], seeds=seeds)
+    for i, budget in enumerate(BUDGET_SWEEP):
+        res = grid.condition(i)
         per_seed = res.costs.mean(axis=1) / budget
         m, lo, hi = bootstrap_ci(per_seed)
         alloc = [round(float(a), 3) for a in res.allocation(env.k)]
@@ -40,7 +45,7 @@ def main(seeds=SEEDS):
             f"[{lo:.3f},{hi:.3f}];alloc={list(alloc)}",
         ])
 
-    res = run_condition("pareto", env, 1.0, seeds=seeds)  # unconstrained
+    res = grid.condition(len(BUDGET_SWEEP))  # unconstrained (B = $1/req)
     frac = res.mean_reward / oracle
     rows.append(["unconstrained_oracle_frac", f"{frac:.4f}",
                  f"reward={res.mean_reward:.4f}"])

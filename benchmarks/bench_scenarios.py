@@ -15,7 +15,10 @@ Scenarios beyond the paper's protocols, authored as ``ScenarioSpec`` data
                        niche) and back, stressing contextual routing.
 
 ``--smoke`` runs a tiny spec exercising EVERY event type on a reduced
-environment (CI's scenario-engine smoke job).
+environment (CI's scenario-engine smoke job). ``--budget-grid`` runs
+scenario x budget matrices through the sweep fabric: each spec's whole
+(budget x seed) grid is ONE compiled, device-sharded call
+(``sweep.run_scenario_grid``).
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ import numpy as np
 from benchmarks.common import (
     N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
 )
-from repro.core import evaluate, simulator
+from repro.core import evaluate, simulator, sweep
 from repro.core.costs import BUDGET_LOOSE, BUDGET_TIGHT
 from repro.core.scenario import (
     AddArm, BudgetChange, DeleteArm, PriceChange, QualityShift, ScenarioSpec,
@@ -138,6 +141,38 @@ def main(seeds=SEEDS):
     return rows
 
 
+# Scenario x budget matrices (§4 tables): initial ceilings for the grid
+# mode; each scenario's whole matrix is ONE sharded fabric call.
+GRID_BUDGETS = (1.0e-4, BUDGET_TIGHT, 6.6e-4, BUDGET_LOOSE, 4.0e-3)
+
+
+def budget_grid(seeds=SEEDS, budgets=GRID_BUDGETS):
+    """Scenario x budget matrices: for each scenario spec, run the whole
+    (budget x seed) grid through ``sweep.run_scenario_grid`` — the
+    segmented scan is vmapped over the flattened grid and sharded across
+    devices, so a five-ceiling matrix costs one compile and one dispatch
+    instead of five."""
+    b = benchmark()
+    pri3 = list(warmup_priors())
+    rows = []
+    cases = [
+        ("price_war", PRICE_WAR, b.test, pri3, GEMINI),
+        ("add_then_regress", ADD_THEN_REGRESS,
+         simulator.extend_with_flash(b.test, "good_cheap"), pri3 + [None],
+         FLASH),
+        ("mix_shift", MIX_SHIFT, b.test, pri3, GEMINI),
+    ]
+    for name, spec, env, priors, arm in cases:
+        grid = sweep.run_scenario_grid(
+            PARETO_CFG, spec, env, budgets, seeds=seeds,
+            priors=priors, n_eff=N_EFF)
+        for budget, res in grid.conditions():
+            segs = _seg_summary(res, budget, arm)
+            rows.append([f"scenario_grid_{name}", f"{budget:.2e}", segs])
+    emit(rows, ["name", "budget", "derived"], "scenario_budget_grid")
+    return rows
+
+
 def smoke():
     """CI smoke: every event type in one tiny spec, both data planes."""
     bench = simulator.make_benchmark(
@@ -176,5 +211,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny every-event-type spec (CI)")
+    ap.add_argument("--budget-grid", action="store_true",
+                    help="scenario x budget matrices via the sweep fabric")
     args = ap.parse_args()
-    smoke() if args.smoke else main()
+    if args.smoke:
+        smoke()
+    elif args.budget_grid:
+        budget_grid()
+    else:
+        main()

@@ -1,0 +1,131 @@
+"""Looped-vs-fabric wall clock for the paper's headline grids.
+
+Times the Fig. 1 Pareto grid (7 budget ceilings x 20 seeds) two ways:
+
+  * looped — the pre-fabric protocol: one ``evaluate.run`` call per
+    ceiling (per-condition jitted dispatch, host loop over conditions);
+  * fabric — ``sweep.run_grid``: the flattened (condition x seed) grid as
+    ONE compiled call, sharded across available devices.
+
+Both paths are timed cold (first call, includes compile) and warm
+(steady-state dispatch), and the fabric's per-condition results are
+asserted bit-identical to the looped baseline before any timing is
+reported. Results land in ``benchmarks/results/sweep.json``.
+
+``--devices N`` forces N CPU placeholder devices (dryrun.py's
+``xla_force_host_platform_device_count`` convention) so the sharded path
+is exercised on machines without accelerators; it must be parsed before
+jax is imported, hence the top-of-module argv peek. ``--smoke`` shrinks
+the environment and grid for CI.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+def _peek_devices(argv):
+    """--devices N or --devices=N, read before jax initialises."""
+    for i, a in enumerate(argv):
+        if a == "--devices":
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+if _peek_devices(sys.argv):  # must precede any jax import
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + str(_peek_devices(sys.argv)))
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_pareto import BUDGET_SWEEP
+from benchmarks.common import (
+    SEEDS, benchmark, emit, run_condition, run_condition_grid,
+)
+from repro.core import simulator, sweep
+
+
+def _time(fn, repeats: int):
+    """(cold_s, warm_s): first call includes compile; warm is best-of."""
+    t0 = time.perf_counter()
+    fn()
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        warm = min(warm, time.perf_counter() - t0)
+    return cold, warm
+
+
+def run(env, budgets, seeds, repeats: int):
+    rows = []
+
+    def looped():
+        return [run_condition("pareto", env, b, seeds=seeds)
+                for b in budgets]
+
+    def fabric():
+        return run_condition_grid("pareto", env, budgets, seeds=seeds)
+
+    # Equivalence gate before timing: fabric grid == looped, bit-for-bit.
+    base = looped()
+    grid = fabric()
+    for i, res in enumerate(base):
+        np.testing.assert_array_equal(grid.condition(i).arms, res.arms)
+        np.testing.assert_array_equal(grid.condition(i).rewards, res.rewards)
+        np.testing.assert_array_equal(grid.condition(i).costs, res.costs)
+        np.testing.assert_array_equal(grid.condition(i).lams, res.lams)
+    rows.append(["sweep_equivalence", "bit_identical",
+                 f"{len(budgets)}x{len(seeds)} grid"])
+
+    # Cold timings need fresh programs: drop both caches.
+    sweep._cached_grid_fn.cache_clear()
+    from repro.core import evaluate
+    evaluate._cached_run_fn.cache_clear()
+
+    looped_cold, looped_warm = _time(looped, repeats)
+    fabric_cold, fabric_warm = _time(fabric, repeats)
+    n_dev = len(jax.devices())
+    grid_sz = f"{len(budgets)}x{len(seeds)}x{env.n}"
+    rows.append(["sweep_looped_s", f"{looped_warm:.3f}",
+                 f"cold={looped_cold:.3f};grid={grid_sz}"])
+    rows.append(["sweep_fabric_s", f"{fabric_warm:.3f}",
+                 f"cold={fabric_cold:.3f};devices={n_dev}"])
+    rows.append(["sweep_speedup", f"{looped_warm / fabric_warm:.2f}x",
+                 f"cold {looped_cold / fabric_cold:.2f}x"])
+    emit(rows, ["name", "value", "derived"], "sweep")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced environment + grid (CI)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N CPU placeholder devices (before jax init)")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        b = simulator.make_benchmark(
+            seed=0, splits={"train": 256, "val": 32, "test": 200})
+        rows = run(b.test, budgets=list(BUDGET_SWEEP[:3]),
+                   seeds=tuple(range(4)), repeats=max(1, args.repeats - 2))
+    else:
+        rows = run(benchmark().test, budgets=list(BUDGET_SWEEP),
+                   seeds=SEEDS, repeats=args.repeats)
+    for r in rows:
+        assert r, r
+    return rows
+
+
+if __name__ == "__main__":
+    main()

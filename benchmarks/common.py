@@ -10,7 +10,7 @@ from typing import Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core import evaluate, simulator
+from repro.core import evaluate, simulator, sweep
 from repro.core.costs import BUDGET_LOOSE, BUDGET_MODERATE, BUDGET_TIGHT
 from repro.core.types import RouterConfig
 
@@ -63,27 +63,44 @@ def run_condition(
     envs: Optional[Sequence] = None,
 ):
     """Run one named condition from the paper's baseline set."""
-    priors = list(warmup_priors())
-    k = env.k if envs is None else envs[0].k
-    priors = priors[:k] + [None] * max(0, k - len(priors))
-    kw = dict(seeds=seeds, priors=priors, n_eff=N_EFF)
+    cfg, kw = _condition_kwargs(name, envs[0] if envs is not None else env)
     target = envs if envs is not None else env
-    if envs is not None:
-        kw["shuffle"] = False
-    else:
-        kw["shuffle"] = shuffle
+    kw = dict(kw, seeds=seeds,
+              shuffle=False if envs is not None else shuffle)
+    return evaluate.run(cfg, target, budget, **kw)
+
+
+def _condition_kwargs(name: str, env):
+    """(cfg, evaluate-kwargs) for one named baseline condition."""
+    priors = list(warmup_priors())
+    k = env.k
+    priors = priors[:k] + [None] * max(0, k - len(priors))
+    kw: Dict = dict(priors=priors, n_eff=N_EFF)
     if name == "pareto":
-        return evaluate.run(PARETO_CFG, target, budget, **kw)
+        return PARETO_CFG, kw
     if name == "naive":
-        return evaluate.run(NAIVE_CFG, target, budget,
-                            pacer_enabled=False, **kw)
+        return NAIVE_CFG, dict(kw, pacer_enabled=False)
     if name == "forgetting":
-        return evaluate.run(PARETO_CFG, target, budget,
-                            pacer_enabled=False, **kw)
+        return PARETO_CFG, dict(kw, pacer_enabled=False)
     if name == "tabula_rasa":
-        kw.pop("priors"), kw.pop("n_eff")
-        return evaluate.run(TABULA_CFG, target, budget, **kw)
+        return TABULA_CFG, {}
     raise ValueError(name)
+
+
+def run_condition_grid(
+    name: str,
+    env,
+    budgets: Sequence[float],
+    *,
+    seeds: Sequence[int] = SEEDS,
+    shuffle: bool = True,
+) -> "sweep.GridResult":
+    """A whole budget grid of one named condition as ONE compiled,
+    device-sharded call (sweep fabric) — per budget bit-identical to the
+    looped ``run_condition`` it replaces."""
+    cfg, kw = _condition_kwargs(name, env)
+    return sweep.run_grid(cfg, env, budgets, seeds=seeds, shuffle=shuffle,
+                          **kw)
 
 
 def emit(rows, header, path_stub, derived=""):

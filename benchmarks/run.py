@@ -23,6 +23,8 @@ BENCHES = [
     ("cost_heuristic", "App. B: cost heuristic validation"),
     ("recovery_limit", "App. G: recovery limit"),
     ("scenarios", "Scenario engine: new multi-event scenarios, both planes"),
+    ("scenario_grid", "Scenario x budget matrices via the sweep fabric"),
+    ("sweep", "Sweep fabric: looped-vs-fabric grid wall clock"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
 ]
@@ -36,18 +38,26 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     import importlib
+    # Entries whose module or entrypoint differs from bench_{name}.main().
+    MODULES = {"scenario_grid": "scenarios"}
     failures = []
     for name, desc in BENCHES:
         if args.only and name not in args.only:
             continue
-        mod = importlib.import_module(f"benchmarks.bench_{name}")
+        mod = importlib.import_module(
+            f"benchmarks.bench_{MODULES.get(name, name)}")
         print(f"# === {name}: {desc} ===", flush=True)
         t0 = time.time()
         try:
-            if args.quick and name in ("pareto", "cost_drift", "degradation",
-                                       "onboarding", "warmup",
-                                       "prior_mismatch", "judges",
-                                       "scenarios"):
+            if name == "sweep":
+                mod.main(argv=["--smoke"] if args.quick else [])
+            elif name == "scenario_grid":
+                mod.budget_grid(seeds=tuple(range(5)) if args.quick
+                                else tuple(range(20)))
+            elif args.quick and name in ("pareto", "cost_drift",
+                                         "degradation", "onboarding",
+                                         "warmup", "prior_mismatch",
+                                         "judges", "scenarios"):
                 mod.main(seeds=tuple(range(5)))
             elif args.quick and name in ("knee", "recovery_limit"):
                 mod.main(seeds=tuple(range(3)))

@@ -30,6 +30,11 @@ from repro.core.scenario import (  # noqa: F401
     ScenarioSpec,
     TrafficMixShift,
 )
+from repro.core.sweep import (  # noqa: F401
+    GridResult,
+    run_grid,
+    run_scenario_grid,
+)
 from repro.core.warmup import (  # noqa: F401
     apply_warmup,
     fit_offline_prior,

@@ -50,11 +50,21 @@ class RunResult:
         )
 
     def phase(self, start: int, stop: int) -> "RunResult":
+        arms = self.arms[:, start:stop]
+        bounds = None
+        if self.bounds is not None:
+            # Preserve the segment structure of the slice: boundaries that
+            # fall strictly inside [start, stop) survive, re-based to 0.
+            L = arms.shape[1]
+            inner = sorted({b - start for b in self.bounds
+                            if start < b < start + L})
+            bounds = (0, *inner, L)
         return RunResult(
-            arms=self.arms[:, start:stop],
+            arms=arms,
             rewards=self.rewards[:, start:stop],
             costs=self.costs[:, start:stop],
             lams=self.lams[:, start:stop],
+            bounds=bounds,
         )
 
     @property
@@ -93,7 +103,7 @@ class RunResult:
 def make_states(
     cfg: RouterConfig,
     env: Environment,
-    budget: float,
+    budget: float | Sequence[float],
     seeds: Sequence[int],
     *,
     priors: Optional[Sequence[ArmPrior | None]] = None,
@@ -102,8 +112,14 @@ def make_states(
     active_arms: Optional[int] = None,
 ) -> RouterState:
     """Stacked initial states, one per seed: a single ``jax.vmap`` over
-    PRNG keys (the key is the only per-seed leaf; everything else
-    broadcasts), not a Python loop + ``jnp.stack``."""
+    (PRNG key, budget) pairs — everything else broadcasts — not a Python
+    loop + ``jnp.stack``.
+
+    ``budget`` is either one ceiling shared by every state or a sequence
+    aligned with ``seeds``: the ceiling lives in ``PacerState.budget``, a
+    *state leaf*, so a grid sweep stacks one budget per (condition, seed)
+    element and the whole grid runs through one compiled program
+    (sweep.py) instead of re-entering per ceiling."""
     k = env.k
     assert k <= cfg.max_arms, (k, cfg.max_arms)
     pad = cfg.max_arms - k
@@ -113,9 +129,9 @@ def make_states(
     active = np.zeros(cfg.max_arms, bool)
     active[:n_active] = True
 
-    def one(key):
+    def one(key, b):
         st = init_state(
-            cfg, preq, p1k, budget,
+            cfg, preq, p1k, b,
             key=key, active=jnp.asarray(active),
             pacer_enabled=pacer_enabled,
         )
@@ -125,7 +141,9 @@ def make_states(
 
     keys = jax.vmap(jax.random.PRNGKey)(
         jnp.asarray([int(s) for s in seeds], jnp.uint32))
-    return jax.vmap(one)(keys)
+    budgets = jnp.broadcast_to(
+        jnp.asarray(budget, jnp.float32), (len(seeds),))
+    return jax.vmap(one)(keys, budgets)
 
 
 def _pad_env_arrays(cfg: RouterConfig, env: Environment):
@@ -138,6 +156,37 @@ def _pad_env_arrays(cfg: RouterConfig, env: Environment):
         [env.costs, np.full((env.n, pad), 1e9, np.float32)], axis=1
     )
     return jnp.asarray(env.contexts), jnp.asarray(rewards), jnp.asarray(costs)
+
+
+def build_run_streams(
+    cfg: RouterConfig,
+    env: Environment | Sequence[Environment],
+    seeds: Sequence[int],
+    shuffle: bool = True,
+):
+    """Padded per-seed stream tensors for ``run`` and the sweep fabric.
+
+    Returns ``(xs, rmat, cmat, stream_axes, env0)`` where ``stream_axes``
+    is 0 for per-seed stacked streams (a sequence of environments, or one
+    environment with per-seed shuffles) and None for one shared stream.
+    """
+    if isinstance(env, (list, tuple)):
+        assert len(env) == len(seeds), (len(env), len(seeds))
+        padded = [_pad_env_arrays(cfg, e) for e in env]
+        xs = jnp.stack([p[0] for p in padded])
+        rmat = jnp.stack([p[1] for p in padded])
+        cmat = jnp.stack([p[2] for p in padded])
+        return xs, rmat, cmat, 0, env[0]
+    xs, rmat, cmat = _pad_env_arrays(cfg, env)
+    if shuffle:
+        perms = np.stack([
+            np.random.default_rng(int(s)).permutation(env.n) for s in seeds
+        ])
+        xs = xs[jnp.asarray(perms)]
+        rmat = rmat[jnp.asarray(perms)]
+        cmat = cmat[jnp.asarray(perms)]
+        return xs, rmat, cmat, 0, env
+    return xs, rmat, cmat, None, env
 
 
 def run(
@@ -167,27 +216,8 @@ def run(
     scenario benchmarks can exercise production code. Default (None) is
     the per-request closed loop.
     """
-    if isinstance(env, (list, tuple)):
-        assert len(env) == len(seeds), (len(env), len(seeds))
-        padded = [_pad_env_arrays(cfg, e) for e in env]
-        xs = jnp.stack([p[0] for p in padded])
-        rmat = jnp.stack([p[1] for p in padded])
-        cmat = jnp.stack([p[2] for p in padded])
-        env0 = env[0]
-        stream_axes = 0
-    else:
-        xs, rmat, cmat = _pad_env_arrays(cfg, env)
-        env0 = env
-        if shuffle:
-            perms = np.stack([
-                np.random.default_rng(int(s)).permutation(env.n) for s in seeds
-            ])
-            xs = xs[jnp.asarray(perms)]
-            rmat = rmat[jnp.asarray(perms)]
-            cmat = cmat[jnp.asarray(perms)]
-            stream_axes = 0
-        else:
-            stream_axes = None
+    xs, rmat, cmat, stream_axes, env0 = build_run_streams(
+        cfg, env, seeds, shuffle)
     if states is None:
         states = make_states(
             cfg, env0, budget, seeds,
@@ -205,21 +235,27 @@ def run(
     return res
 
 
+def stream_body(cfg: RouterConfig, batch_size=None):
+    """The per-seed scan program: one stream through the scalar or
+    batched data plane. Shared by the jitted runner below and the
+    grid-sweep fabric (sweep.py), which vmaps it over a flattened
+    (condition x seed) axis with buffer donation."""
+
+    def one_seed(state, x, rm, cm):
+        if batch_size:
+            return router.run_stream_batched(cfg, state, x, rm, cm,
+                                             batch_size)
+        return router.run_stream(cfg, state, x, rm, cm)
+
+    return one_seed
+
+
 @functools.lru_cache(maxsize=64)
 def _cached_run_fn(cfg: RouterConfig, stream_axes, batch_size=None):
     """One jitted sweep function per (RouterConfig, stream layout) — the
     hyper-parameter grids re-enter with identical signatures thousands of
     times, so caching the jit wrapper avoids retrace-per-call."""
-
-    def one_seed(state, x, rm, cm):
-        if batch_size:
-            final, trace = router.run_stream_batched(
-                cfg, state, x, rm, cm, batch_size
-            )
-        else:
-            final, trace = router.run_stream(cfg, state, x, rm, cm)
-        return final, trace
-
+    one_seed = stream_body(cfg, batch_size)
     return jax.jit(
         jax.vmap(one_seed, in_axes=(0, stream_axes, stream_axes, stream_axes))
     )

@@ -60,6 +60,13 @@ def hard_ceiling_mask(
     <= c_max/(1+lambda_bar); we additionally fall back to the cheapest
     active arm if the mask empties (cannot happen with lambda_bar=5 and a
     530x spread, but keeps the kernel total).
+
+    With ZERO active arms the fallback cannot help: the ``& active`` keeps
+    the mask all-False (there is no candidate to route to), and a
+    downstream ``argmax`` over an all-NEG_INF score row would silently
+    land on slot 0. Callers that can face an empty portfolio must check
+    ``registry.num_active`` first — the serving gateway raises before
+    routing (engine.py); simulation specs are validated at compile time.
     """
     c_max = jnp.max(jnp.where(active, price, -jnp.inf))
     ceiling = c_max / (1.0 + p.lam)

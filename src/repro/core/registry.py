@@ -127,5 +127,11 @@ def set_price(
     )
 
 
-def num_active(state: RouterState) -> int:
-    return int(jnp.sum(state.active))
+def num_active(state: RouterState):
+    """Number of active arms. Host callers get a Python int; under
+    ``jit``/``vmap`` tracing the traced i32 scalar is returned instead
+    (``int()`` on a tracer would raise ``TracerIntegerConversionError``)."""
+    n = jnp.sum(state.active.astype(jnp.int32))
+    if isinstance(n, jax.core.Tracer):
+        return n
+    return int(n)

@@ -391,36 +391,37 @@ def build_streams(
     _validate_state_events(spec, env.k)
     cache_key = (spec_key(spec), cfg.max_arms,
                  tuple(int(s) for s in seeds), _env_content_sig(env))
-    hit = _STREAM_CACHE.get(cache_key)
-    if hit is not None:
-        _STREAM_CACHE.move_to_end(cache_key)
-        return hit
-    mods = _segment_mods(spec)
-    envs, cache = [], {}
-    for m in mods:
-        if m not in cache:
-            cache[m] = _transformed_env(env, m)
-        envs.append(cache[m])
-    pad = cfg.max_arms - env.k
-    xs, rs, cs = [], [], []
-    for s in seeds:
-        idxs = compile_indices(spec, env, int(s))
-        x = np.concatenate([envs[j].contexts[i] for j, i in enumerate(idxs)])
-        r = np.concatenate([envs[j].rewards[i] for j, i in enumerate(idxs)])
-        c = np.concatenate([envs[j].costs[i] for j, i in enumerate(idxs)])
-        if pad:
-            r = np.concatenate([r, np.zeros((len(r), pad), np.float32)], 1)
-            c = np.concatenate([c, np.full((len(c), pad), 1e9, np.float32)], 1)
-        xs.append(x), rs.append(r), cs.append(c)
-    out = (
-        jnp.asarray(np.stack(xs)),
-        jnp.asarray(np.stack(rs), jnp.float32),
-        jnp.asarray(np.stack(cs), jnp.float32),
-    )
-    _STREAM_CACHE[cache_key] = out
-    if len(_STREAM_CACHE) > _STREAM_CACHE_MAX:
-        _STREAM_CACHE.popitem(last=False)
-    return out
+
+    def make():
+        mods = _segment_mods(spec)
+        envs, cache = [], {}
+        for m in mods:
+            if m not in cache:
+                cache[m] = _transformed_env(env, m)
+            envs.append(cache[m])
+        pad = cfg.max_arms - env.k
+        xs, rs, cs = [], [], []
+        for s in seeds:
+            idxs = compile_indices(spec, env, int(s))
+            x = np.concatenate(
+                [envs[j].contexts[i] for j, i in enumerate(idxs)])
+            r = np.concatenate(
+                [envs[j].rewards[i] for j, i in enumerate(idxs)])
+            c = np.concatenate(
+                [envs[j].costs[i] for j, i in enumerate(idxs)])
+            if pad:
+                r = np.concatenate(
+                    [r, np.zeros((len(r), pad), np.float32)], 1)
+                c = np.concatenate(
+                    [c, np.full((len(c), pad), 1e9, np.float32)], 1)
+            xs.append(x), rs.append(r), cs.append(c)
+        return (
+            jnp.asarray(np.stack(xs)),
+            jnp.asarray(np.stack(rs), jnp.float32),
+            jnp.asarray(np.stack(cs), jnp.float32),
+        )
+
+    return lru_get(_STREAM_CACHE, cache_key, make, _STREAM_CACHE_MAX)
 
 
 # ---------------------------------------------------------------------------
@@ -486,17 +487,33 @@ def _edit_fns(cfg: RouterConfig, spec: ScenarioSpec,
 # The jitted segmented-scan runner
 # ---------------------------------------------------------------------------
 
+def lru_get(cache: collections.OrderedDict, key, make, maxsize: int):
+    """Bounded-LRU lookup shared by the unhashable-key runner caches here
+    and in sweep.py (functools.lru_cache needs hashable call args; spec
+    and env signatures are precomputed keys instead)."""
+    hit = cache.get(key)
+    if hit is not None:
+        cache.move_to_end(key)
+        return hit
+    hit = cache[key] = make()
+    if len(cache) > maxsize:
+        cache.popitem(last=False)
+    return hit
+
+
 _RUNNER_CACHE: collections.OrderedDict = collections.OrderedDict()
 _RUNNER_CACHE_MAX = 64   # mirrors evaluate._cached_run_fn's lru bound
 
 
-def _make_runner(cfg: RouterConfig, seg_lens, edits, batch_size):
-    """One jitted, seed-vmapped program: segments unrolled at trace time,
-    each a ``lax.scan`` through the scalar or batched data plane, with
-    the pure state edits applied in between — no host round-trips."""
+def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size):
+    """The pure per-seed segmented-scan program: segments unrolled at
+    trace time, each a ``lax.scan`` through the scalar or batched data
+    plane, with the pure state edits applied in between — no host
+    round-trips. Shared by the seed-vmapped runner below and the
+    grid-sweep fabric (sweep.py), which vmaps it over a flattened
+    (condition x seed) axis instead."""
 
     def one_seed(state: RouterState, xs, rmat, cmat):
-        TRACE_COUNT[0] += 1       # moves only while tracing
         traces, off = [], 0
         for L, edit in zip(seg_lens, edits):
             if edit is not None:
@@ -511,6 +528,24 @@ def _make_runner(cfg: RouterConfig, seg_lens, edits, batch_size):
             off += L
         trace = jax.tree.map(lambda *ts: jnp.concatenate(ts), *traces)
         return state, trace
+
+    return one_seed
+
+
+def spec_body(cfg: RouterConfig, spec: ScenarioSpec,
+              env: simulator.Environment, batch_size=None):
+    """``segment_body`` compiled from a spec (edits + segment lengths)."""
+    seg_lens = tuple(b - a for a, b in spec.segments)
+    return segment_body(cfg, seg_lens, _edit_fns(cfg, spec, env), batch_size)
+
+
+def _make_runner(cfg: RouterConfig, seg_lens, edits, batch_size):
+    """One jitted, seed-vmapped program around ``segment_body``."""
+    body = segment_body(cfg, seg_lens, edits, batch_size)
+
+    def one_seed(state: RouterState, xs, rmat, cmat):
+        TRACE_COUNT[0] += 1       # moves only while tracing
+        return body(state, xs, rmat, cmat)
 
     return jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0)))
 
@@ -534,14 +569,10 @@ def compiled_runner(
     program — the retrace-per-phase of the hand-rolled benchmarks is gone.
     """
     key = (cfg, spec_key(spec), _env_sig(env), batch_size)
-    fn = _RUNNER_CACHE.get(key)
-    if fn is None:
+
+    def make():
         seg_lens = tuple(b - a for a, b in spec.segments)
-        edits = _edit_fns(cfg, spec, env)
-        fn = _make_runner(cfg, seg_lens, edits, batch_size)
-        _RUNNER_CACHE[key] = fn
-        if len(_RUNNER_CACHE) > _RUNNER_CACHE_MAX:
-            _RUNNER_CACHE.popitem(last=False)
-    else:
-        _RUNNER_CACHE.move_to_end(key)
-    return fn
+        return _make_runner(cfg, seg_lens, _edit_fns(cfg, spec, env),
+                            batch_size)
+
+    return lru_get(_RUNNER_CACHE, key, make, _RUNNER_CACHE_MAX)

@@ -1,0 +1,300 @@
+"""Device-sharded grid-sweep fabric: a whole condition grid as ONE
+compiled program.
+
+The paper's headline results are *grids* — seven budget ceilings x 20
+seeds (Fig. 1), scenario x budget matrices, hyper-parameter AUC sweeps —
+yet the benchmarks historically looped over grid conditions in host
+Python around a per-condition jitted call, paying a dispatch (and, across
+configs, a retrace) per cell. This module evaluates the entire grid in
+one jitted, device-sharded call:
+
+  * the condition axis is stacked into *state leaves* — the budget
+    ceiling lives in ``PacerState.budget`` (evaluate.make_states accepts
+    one budget per stacked state), and any other state-leaf knob can be
+    stacked via ``condition_edits`` (pure ``RouterState -> RouterState``
+    functions, e.g. ``pacer.set_budget`` or a pacer-disable flip, applied
+    per condition before the run);
+
+  * the (condition, seed) grid is flattened to one leading axis of size
+    N = C x S, ``jax.vmap``-ed over the existing per-seed program —
+    ``router.run_stream`` / ``run_stream_batched`` or the scenario
+    engine's segmented scan (``scenario.segment_body``) — and sharded
+    across available devices with ``jax.sharding`` via the
+    ``launch/mesh.py`` grid-mesh helpers (the N axis is embarrassingly
+    parallel). On a CPU host, placeholder devices forced with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` shard exactly
+    as real accelerators do (dryrun.py's convention);
+
+  * the state stack is donated to the compiled call, so the grid's
+    initial states never double-buffer.
+
+Knobs that are *trace constants* — anything in ``RouterConfig``
+(``alpha``, ``gamma``, ``eta``, the backend) or the stream tensors'
+shapes — still cost one compile per value; sweep those by calling the
+fabric once per config cell (bench_knee.py), which fuses the inner
+budget x seed grid per cell. DESIGN.md §7 tabulates which knobs stack.
+
+Per-condition results are bit-identical to the looped
+``evaluate.run``-per-condition baseline (pinned in tests/test_sweep.py):
+the fabric reuses the same stream builder, the same state constructor and
+the same scan bodies — only the batching axis is wider.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import evaluate, router
+from repro.core import scenario as scenario_lib
+from repro.core.simulator import Environment
+from repro.core.types import ArmPrior, RouterConfig, RouterState
+from repro.launch import mesh as mesh_lib
+
+Array = jax.Array
+
+# Incremented inside the traced grid body: moves only when XLA (re)traces
+# a fabric program, so tests can assert the whole-grid-compiles-once
+# contract (one trace for 7 budgets x 20 seeds, not one per budget).
+TRACE_COUNT = [0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridResult:
+    """Traces for a (condition x seed) grid, shaped (C, S, T)."""
+
+    budgets: tuple       # (C,) condition axis (the stacked ceilings)
+    seeds: tuple         # (S,)
+    arms: np.ndarray     # (C, S, T)
+    rewards: np.ndarray  # (C, S, T)
+    costs: np.ndarray    # (C, S, T)
+    lams: np.ndarray     # (C, S, T)
+    # Segment boundaries shared by every condition (scenario grids).
+    bounds: Optional[tuple] = None
+
+    def __len__(self) -> int:
+        return len(self.budgets)
+
+    def condition(self, i: int) -> evaluate.RunResult:
+        """Slice one condition to the standard multi-seed ``RunResult``."""
+        return evaluate.RunResult(
+            arms=self.arms[i], rewards=self.rewards[i],
+            costs=self.costs[i], lams=self.lams[i], bounds=self.bounds,
+        )
+
+    def conditions(self):
+        for i, b in enumerate(self.budgets):
+            yield b, self.condition(i)
+
+
+def _flatten_grid(budgets, seeds):
+    """(C,) x (S,) -> aligned flat (C*S,) budget / seed vectors, ordered
+    condition-major so element c*S + s is (budgets[c], seeds[s])."""
+    budgets = tuple(float(b) for b in budgets)
+    seeds = tuple(int(s) for s in seeds)
+    flat_b = np.repeat(np.asarray(budgets, np.float32), len(seeds))
+    flat_s = seeds * len(budgets)
+    return budgets, seeds, flat_b, flat_s
+
+
+def _tile_conditions(arr: Array, C: int, sh) -> Array:
+    """Stack per-seed stream tensors along a leading condition axis,
+    (S, ...) -> (C*S, ...), placed directly under the grid sharding:
+    the tile happens in host memory and ``device_put`` transfers each
+    device only its shard, so no single device ever holds the C-times
+    tensor (device 0 would OOM first on large accelerator grids)."""
+    a = np.asarray(arr)
+    tiled = np.broadcast_to(a[None], (C,) + a.shape).reshape(
+        (C * a.shape[0],) + a.shape[1:])
+    return jax.device_put(tiled, sh)
+
+
+def _shard_grid(states: RouterState, streams, stream_axes, C, devices):
+    """Place the flattened grid on a 1-D device mesh: state leaves and
+    condition-tiled streams split along the grid axis, shared streams
+    replicated."""
+    n = int(states.t.shape[0])
+    mesh = mesh_lib.make_grid_mesh(n, devices)
+    sh = mesh_lib.grid_sharding(mesh)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    states = jax.device_put(states, sh)
+    # The state stack is donated to the fabric call; donation requires
+    # one buffer per leaf, but identical constant-initialised leaves
+    # (zeroed last_upd/last_play, A == A_inv at lambda0 = 1) can share
+    # one. Copy to uniquify — a few MB next to the grid compute.
+    states = jax.tree.map(lambda l: jnp.array(l, copy=True), states)
+    if stream_axes == 0:
+        streams = tuple(_tile_conditions(a, C, sh) for a in streams)
+    else:
+        streams = tuple(jax.device_put(a, rep) for a in streams)
+    return states, streams
+
+
+def _apply_condition_edits(
+    states: RouterState,
+    condition_edits: Sequence[Optional[Callable[[RouterState], RouterState]]],
+    S: int,
+) -> RouterState:
+    """Apply per-condition pure state edits to the flattened stack (one
+    vmapped call per condition; host-side, once per grid)."""
+    parts = []
+    for c, edit in enumerate(condition_edits):
+        block = jax.tree.map(lambda l: l[c * S:(c + 1) * S], states)
+        parts.append(block if edit is None else jax.vmap(edit)(block))
+    return jax.tree.map(lambda *ls: jnp.concatenate(ls), *parts)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_grid_fn(cfg: RouterConfig, stream_axes, batch_size):
+    """One jitted fabric program per (config, stream layout, data plane);
+    budgets, seeds and priors are data, so every grid with the same
+    shapes re-enters the same executable. The state stack is donated."""
+    body = evaluate.stream_body(cfg, batch_size)
+
+    def one(state, x, rm, cm):
+        TRACE_COUNT[0] += 1       # moves only while tracing
+        return body(state, x, rm, cm)
+
+    return jax.jit(
+        jax.vmap(one, in_axes=(0, stream_axes, stream_axes, stream_axes)),
+        donate_argnums=0,
+    )
+
+
+def run_grid(
+    cfg: RouterConfig,
+    env: Environment | Sequence[Environment],
+    budgets: Sequence[float],
+    seeds: Sequence[int] = tuple(range(20)),
+    *,
+    priors: Optional[Sequence[ArmPrior | None]] = None,
+    n_eff: float = 0.0,
+    pacer_enabled: bool = True,
+    shuffle: bool = True,
+    batch_size: Optional[int] = None,
+    condition_edits: Optional[Sequence[Optional[Callable]]] = None,
+    devices=None,
+    return_states: bool = False,
+):
+    """Evaluate a (budget x seed) grid as one compiled, sharded call.
+
+    Semantics per condition match ``evaluate.run(cfg, env, budgets[c],
+    seeds=seeds, ...)`` bit-for-bit: same per-seed shuffles, same initial
+    states, same scan bodies. ``condition_edits`` optionally applies one
+    extra pure state edit per condition (aligned with ``budgets``) for
+    state-leaf axes beyond the ceiling.
+
+    ``devices`` defaults to ``jax.devices()``; the flattened C*S axis is
+    sharded over the largest device count dividing it.
+    """
+    budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
+    C, S = len(budgets), len(seeds)
+    xs, rmat, cmat, stream_axes, env0 = evaluate.build_run_streams(
+        cfg, env, seeds, shuffle)
+    states = evaluate.make_states(
+        cfg, env0, flat_b, flat_s,
+        priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+    )
+    if condition_edits is not None:
+        assert len(condition_edits) == C, (len(condition_edits), C)
+        states = _apply_condition_edits(states, condition_edits, S)
+    states, streams = _shard_grid(
+        states, (xs, rmat, cmat), stream_axes, C, devices)
+
+    fn = _cached_grid_fn(cfg, stream_axes, batch_size)
+    finals, (arms, r, c, lam) = fn(states, *streams)
+    res = GridResult(
+        budgets=budgets, seeds=seeds,
+        arms=np.asarray(arms).reshape(C, S, -1),
+        rewards=np.asarray(r).reshape(C, S, -1),
+        costs=np.asarray(c).reshape(C, S, -1),
+        lams=np.asarray(lam).reshape(C, S, -1),
+    )
+    if return_states:
+        return res, finals
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Scenario grids: (budget x seed) over one ScenarioSpec
+# ---------------------------------------------------------------------------
+
+_SCEN_CACHE: collections.OrderedDict = collections.OrderedDict()
+_SCEN_CACHE_MAX = 64
+
+
+def _cached_scenario_grid_fn(
+    cfg: RouterConfig,
+    spec: "scenario_lib.ScenarioSpec",
+    env: Environment,
+    batch_size,
+):
+    """Fabric program around the scenario engine's segmented-scan body,
+    cached like ``scenario.compiled_runner`` (config, spec, rate card,
+    batch size) — budgets and seeds stay data."""
+    key = (cfg, scenario_lib.spec_key(spec), scenario_lib._env_sig(env),
+           batch_size)
+
+    def make():
+        body = scenario_lib.spec_body(cfg, spec, env, batch_size)
+
+        def one(state, x, rm, cm):
+            TRACE_COUNT[0] += 1       # moves only while tracing
+            return body(state, x, rm, cm)
+
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0)),
+                       donate_argnums=0)
+
+    return scenario_lib.lru_get(_SCEN_CACHE, key, make, _SCEN_CACHE_MAX)
+
+
+def run_scenario_grid(
+    cfg: RouterConfig,
+    spec: "scenario_lib.ScenarioSpec",
+    env: Environment,
+    budgets: Sequence[float],
+    seeds: Sequence[int] = tuple(range(20)),
+    *,
+    priors: Optional[Sequence[ArmPrior | None]] = None,
+    n_eff: float = 0.0,
+    pacer_enabled: bool = True,
+    batch_size: Optional[int] = None,
+    devices=None,
+    return_states: bool = False,
+):
+    """One multi-event scenario across a budget grid as one compiled,
+    sharded call — per condition equivalent to ``evaluate.run_scenario``
+    at that budget (same streams, same edits, same segment bounds).
+
+    A ``BudgetChange`` event in the spec overrides the stacked initial
+    ceiling from its boundary onward, in every condition — the grid axis
+    is the *initial* operating point.
+    """
+    budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
+    C, S = len(budgets), len(seeds)
+    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds)
+    states = evaluate.make_states(
+        cfg, env, flat_b, flat_s,
+        priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+        active_arms=spec.init_active,
+    )
+    states, streams = _shard_grid(states, (xs, rmat, cmat), 0, C, devices)
+
+    fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size)
+    finals, (arms, r, c, lam) = fn(states, *streams)
+    res = GridResult(
+        budgets=budgets, seeds=seeds,
+        arms=np.asarray(arms).reshape(C, S, -1),
+        rewards=np.asarray(r).reshape(C, S, -1),
+        costs=np.asarray(c).reshape(C, S, -1),
+        lams=np.asarray(lam).reshape(C, S, -1),
+        bounds=spec.bounds,
+    )
+    if return_states:
+        return res, finals
+    return res

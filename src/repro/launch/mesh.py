@@ -24,3 +24,26 @@ def data_axis_names(mesh) -> tuple:
 def data_parallel_size(mesh) -> int:
     import math
     return math.prod(mesh.shape[n] for n in data_axis_names(mesh))
+
+
+def make_grid_mesh(n: int, devices=None):
+    """1-D ``grid`` mesh for an embarrassingly-parallel sweep of ``n``
+    independent elements (sweep.py's flattened condition x seed axis).
+
+    Uses the largest device count that divides ``n`` so the leading axis
+    shards evenly (XLA would otherwise pad). Works identically on real
+    accelerators and on CPU placeholder devices forced via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (dryrun.py's
+    convention), which is how the fabric is exercised in CI.
+    """
+    import numpy as np
+
+    devices = list(jax.devices() if devices is None else devices)
+    use = max(d for d in range(1, min(n, len(devices)) + 1) if n % d == 0)
+    return jax.sharding.Mesh(np.asarray(devices[:use]), ("grid",))
+
+
+def grid_sharding(mesh) -> jax.sharding.NamedSharding:
+    """Shard the leading (flattened grid) axis; replicate the rest."""
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("grid"))

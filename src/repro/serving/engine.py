@@ -185,6 +185,9 @@ class PortfolioServer:
         # context cache for async feedback (§3.6): in-memory default,
         # SQLiteFeedbackStore for durable multi-worker deployments
         self._ctx_cache = feedback_store or InMemoryFeedbackStore()
+        # Late/duplicate/unknown rewards are skipped, not raised on — the
+        # async path faces redelivery and replay; operators watch this.
+        self.dropped_feedback = 0
         for i, m in enumerate(models):
             self.add_model(m, slot=i, forced_exploration=False)
 
@@ -247,17 +250,28 @@ class PortfolioServer:
         """
         if not requests:
             return []
+        if all(m is None for m in self.models):
+            # An all-False candidate mask would argmax into slot 0 — an
+            # inactive slot with no model behind it (pacer.py); fail loudly
+            # instead of routing into the void. The models list tracks
+            # state.active in lockstep (add_model/remove_model), so this
+            # guard costs no device round-trip on the hot path.
+            raise RuntimeError(
+                "empty portfolio: no active arms to route to "
+                "(add_model before serving)")
         t0 = time.perf_counter()
         B = len(requests)
         X = self.featurize_batch([r["prompt"] for r in requests])
         X_np = np.asarray(X)
-        for r, x in zip(requests, X_np):
-            self._ctx_cache.put(r["id"], x, -1)
 
         r0 = time.perf_counter()
         dec, self.state = self._select_batch(self.state, X)
         arms = np.asarray(dec.arms)
         route_us = (time.perf_counter() - r0) * 1e6 / B  # per decision
+        # Cache (context, routed arm) at route time: the store is the
+        # async source of truth, so late feedback can omit the arm (§3.1).
+        for r, x, a in zip(requests, X_np, arms):
+            self._ctx_cache.put(r["id"], x, int(a))
 
         lam = float(dec.lam)
         rewards = np.zeros(B, np.float32)
@@ -287,24 +301,67 @@ class PortfolioServer:
         total_ms = (time.perf_counter() - t0) * 1e3
         return [dataclasses.replace(r, total_ms=total_ms) for r in results]
 
-    def feedback(self, request_id: int, arm: int, reward: float,
-                 cost: float) -> None:
-        """Asynchronous feedback path: uses the context cached at route
-        time, so late rewards never re-encode the prompt (§3.1)."""
-        self.feedback_batch([request_id], np.asarray([arm]),
+    def feedback(self, request_id: int, *, reward: float, cost: float,
+                 arm: Optional[int] = None) -> None:
+        """Asynchronous feedback path: uses the (context, arm) cached at
+        route time, so late rewards never re-encode the prompt and the
+        caller may omit the arm entirely — the store resolves it (§3.1).
+
+        ``reward``/``cost``/``arm`` are keyword-only: the pre-hardening
+        signature was positional ``(request_id, arm, reward, cost)``, and
+        an old-style positional call must fail loudly rather than bind an
+        arm index as the reward."""
+        arms = None if arm is None else np.asarray([arm])
+        self.feedback_batch([request_id], arms,
                             np.asarray([reward]), np.asarray([cost]))
 
     def feedback_batch(self, request_ids: List[int], arms, rewards,
                        costs) -> None:
         """Apply a block of (possibly late) feedback in one fused
-        ``update_batch`` call, using the contexts cached at route time."""
+        ``update_batch`` call, using the contexts cached at route time.
+
+        Never raises on bad ids: unknown, already-consumed (duplicate or
+        replayed) and arm-unresolvable entries are skipped and counted in
+        ``dropped_feedback`` — at-least-once reward delivery must not
+        crash the gateway. ``arms`` may be None (or carry -1 entries): the
+        arm is then resolved from the feedback store's route-time record.
+        """
         if not len(request_ids):
             return
-        X = np.stack([self._ctx_cache.pop(rid)[0] for rid in request_ids])
+        if arms is None:
+            arms = np.full(len(request_ids), -1, np.int64)
+        arms = np.asarray(arms, np.int64)
+        rewards = np.asarray(rewards, np.float32)
+        costs = np.asarray(costs, np.float32)
+        # Length mismatch is a programmer error, not bad-id noise: zip
+        # would silently drop the tail without counting it. (ValueError,
+        # not assert — the gateway may run under python -O.)
+        if not (len(arms) == len(rewards) == len(costs)
+                == len(request_ids)):
+            raise ValueError(
+                "feedback_batch length mismatch: "
+                f"{len(request_ids)} ids, {len(arms)} arms, "
+                f"{len(rewards)} rewards, {len(costs)} costs")
+        active = np.asarray(self.state.active)  # one host sync, not B
+        kept_X, kept_a, kept_r, kept_c = [], [], [], []
+        for rid, a, rw, co in zip(request_ids, arms, rewards, costs):
+            hit = self._ctx_cache.pop(rid)
+            if hit is None:          # unknown, duplicate, or replayed id
+                self.dropped_feedback += 1
+                continue
+            x, cached_arm = hit
+            arm = int(a) if a >= 0 else cached_arm
+            if not (0 <= arm < self.cfg.max_arms and bool(active[arm])):
+                self.dropped_feedback += 1   # e.g. arm retired in flight
+                continue
+            kept_X.append(x), kept_a.append(arm)
+            kept_r.append(rw), kept_c.append(co)
+        if not kept_a:
+            return
         self.state = self._update_batch(
             self.state,
-            jnp.asarray(arms, jnp.int32),
-            jnp.asarray(X, jnp.float32),
-            jnp.asarray(rewards, jnp.float32),
-            jnp.asarray(costs, jnp.float32),
+            jnp.asarray(kept_a, jnp.int32),
+            jnp.asarray(np.stack(kept_X), jnp.float32),
+            jnp.asarray(kept_r, jnp.float32),
+            jnp.asarray(kept_c, jnp.float32),
         )

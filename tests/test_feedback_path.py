@@ -1,0 +1,213 @@
+"""Async feedback-path hardening (§3.1/§3.6): late, duplicate, unknown
+and arm-less feedback must update-or-skip, never crash the gateway;
+the feedback store is the async source of truth (routed arm backfilled
+at route time); empty portfolios fail loudly at the serving layer; and
+``registry.num_active`` works under tracing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pacer, registry
+from repro.core.types import RouterConfig, init_state
+from repro.serving.feedback_store import (
+    InMemoryFeedbackStore, SQLiteFeedbackStore,
+)
+
+STORES = {
+    "memory": InMemoryFeedbackStore,
+    "sqlite": lambda: SQLiteFeedbackStore(":memory:"),
+}
+
+
+def _mk_server(store=None, seed=0):
+    from repro.core.costs import ArmPricing
+    from repro.core.features import fit_pca_whitener, hash_encode_batch
+    from repro.data import make_request_stream
+    from repro.models.config import ModelConfig
+    from repro.serving import PortfolioServer, ServedModel, SimulatedJudge
+
+    def tiny(name, d=32, s=0):
+        return ModelConfig(
+            name=name, arch_type="dense", num_layers=1, d_model=d,
+            num_heads=2, num_kv_heads=2, d_ff=2 * d, vocab_size=256,
+            dtype="float32")
+
+    corpus = [r["prompt"] for r in make_request_stream(120, seed=9)]
+    whitener = fit_pca_whitener(hash_encode_batch(corpus))
+    models = [
+        ServedModel.init(tiny("budget"), ArmPricing("budget", 1e-4, 300),
+                         "budget", 0),
+        ServedModel.init(tiny("mid"), ArmPricing("mid", 1e-3, 500),
+                         "mid", 1),
+    ]
+    return PortfolioServer(
+        models, whitener, budget=6.6e-4,
+        router_cfg=RouterConfig(max_arms=4, gamma=1.0),
+        judge=SimulatedJudge(seed, noise=0.0),
+        max_new_tokens=2, seed=seed,
+        feedback_store=None if store is None else store(),
+    )
+
+
+@pytest.fixture(scope="module")
+def requests8():
+    from repro.data import make_request_stream
+    return make_request_stream(8, seed=21)
+
+
+@pytest.mark.parametrize("store", list(STORES), ids=list(STORES))
+class TestFeedbackNeverRaises:
+    def test_unknown_request_id_skipped(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        srv.feedback(request_id=987654, reward=0.9, cost=1e-4)
+        assert srv.dropped_feedback == 1
+
+    def test_duplicate_feedback_skipped(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        res = srv.serve_batch(requests8[:4], defer_feedback=True)
+        ids = [r.request_id for r in res]
+        arms = [r.arm for r in res]
+        rws = [r.reward for r in res]
+        cts = [r.cost for r in res]
+        srv.feedback_batch(ids, arms, rws, cts)
+        t_after = int(srv.state.t)
+        theta_after = np.asarray(srv.state.theta)
+        # replayed block: consumed ids must be skipped, state untouched
+        srv.feedback_batch(ids, arms, rws, cts)
+        assert srv.dropped_feedback == 4
+        assert int(srv.state.t) == t_after
+        np.testing.assert_array_equal(np.asarray(srv.state.theta),
+                                      theta_after)
+
+    def test_non_deferred_serve_then_replay(self, store, requests8):
+        """serve() applies feedback inline; an operator replaying the
+        reward later (at-least-once delivery) must not crash."""
+        srv = _mk_server(STORES[store])
+        res = srv.serve(requests8[0])
+        srv.feedback(res.request_id, reward=res.reward, cost=res.cost,
+                     arm=res.arm)
+        assert srv.dropped_feedback == 1
+
+    def test_out_of_order_feedback_applies(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        res = srv.serve_batch(requests8[:4], defer_feedback=True)
+        for r in reversed(res):   # rewards arrive in reverse order
+            srv.feedback(r.request_id, reward=r.reward, cost=r.cost,
+                         arm=r.arm)
+        assert srv.dropped_feedback == 0
+        assert len(srv._ctx_cache) == 0
+
+    def test_partial_batch_applies_known_ids(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        res = srv.serve_batch(requests8[:2], defer_feedback=True)
+        theta0 = np.asarray(srv.state.theta).copy()
+        ids = [res[0].request_id, 424242, res[1].request_id]
+        srv.feedback_batch(ids, [res[0].arm, 0, res[1].arm],
+                           [res[0].reward, 0.5, res[1].reward],
+                           [res[0].cost, 1e-4, res[1].cost])
+        assert srv.dropped_feedback == 1
+        assert not np.array_equal(np.asarray(srv.state.theta), theta0)
+        assert len(srv._ctx_cache) == 0
+
+
+@pytest.mark.parametrize("store", list(STORES), ids=list(STORES))
+class TestStoreIsSourceOfTruth:
+    def test_routed_arm_backfilled(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        res = srv.serve_batch(requests8[:3], defer_feedback=True)
+        for r, req in zip(res, requests8[:3]):
+            ctx, arm = srv._ctx_cache.pop(req["id"])
+            assert arm == r.arm          # not the route-time placeholder
+            assert ctx.shape == (srv.cfg.d,)
+
+    def test_feedback_resolves_arm_from_store(self, store, requests8):
+        """Two identical servers: explicit-arm feedback vs arm omitted
+        (resolved from the route-time record) — same final state."""
+        a = _mk_server(STORES[store])
+        b = _mk_server(STORES[store])
+        res_a = a.serve_batch(requests8[:4], defer_feedback=True)
+        res_b = b.serve_batch(requests8[:4], defer_feedback=True)
+        a.feedback_batch([r.request_id for r in res_a],
+                         [r.arm for r in res_a],
+                         [r.reward for r in res_a],
+                         [r.cost for r in res_a])
+        b.feedback_batch([r.request_id for r in res_b], None,
+                         [r.reward for r in res_b],
+                         [r.cost for r in res_b])
+        np.testing.assert_array_equal(np.asarray(a.state.theta),
+                                      np.asarray(b.state.theta))
+        assert b.dropped_feedback == 0
+
+    def test_scalar_feedback_without_arm(self, store, requests8):
+        srv = _mk_server(STORES[store])
+        res = srv.serve(requests8[0], defer_feedback=True)
+        theta0 = np.asarray(srv.state.theta).copy()
+        srv.feedback(res.request_id, reward=res.reward,
+                     cost=res.cost)   # arm omitted
+        assert srv.dropped_feedback == 0
+        assert not np.array_equal(np.asarray(srv.state.theta), theta0)
+
+
+def test_length_mismatch_raises(requests8):
+    """Misaligned parallel lists are a programmer error, not bad-id
+    noise: zip would silently drop the tail without counting it."""
+    srv = _mk_server()
+    res = srv.serve_batch(requests8[:2], defer_feedback=True)
+    with pytest.raises(ValueError, match="length mismatch"):
+        srv.feedback_batch([r.request_id for r in res], [res[0].arm],
+                           [0.5, 0.5], [1e-4, 1e-4])
+
+
+class TestEmptyPortfolio:
+    def test_serve_raises_explicitly(self, requests8):
+        srv = _mk_server()
+        srv.remove_model(0)
+        srv.remove_model(1)
+        with pytest.raises(RuntimeError, match="empty portfolio"):
+            srv.serve(requests8[0])
+
+    def test_hard_ceiling_mask_all_false_without_active_arms(self):
+        cfg = RouterConfig(max_arms=4)
+        st = init_state(cfg, np.full(4, 1e-3, np.float32),
+                        np.full(4, 1e-3, np.float32), 6.6e-4,
+                        active=jnp.zeros(4, bool))
+        mask = pacer.hard_ceiling_mask(cfg, st.pacer, st.price, st.active)
+        assert not bool(np.asarray(mask).any())
+        # ... which is why the serving layer must gate on num_active:
+        # argmax over the all-NEG_INF row would silently pick slot 0.
+
+    def test_feedback_for_retired_arm_dropped(self, requests8):
+        srv = _mk_server()
+        res = srv.serve_batch(requests8[:2], defer_feedback=True)
+        srv.remove_model(res[0].arm)
+        srv.feedback(res[0].request_id, reward=res[0].reward,
+                     cost=res[0].cost)
+        assert srv.dropped_feedback == 1
+
+
+class TestNumActiveUnderTracing:
+    def test_host_call_returns_int(self):
+        cfg = RouterConfig(max_arms=4)
+        st = init_state(cfg, np.full(4, 1e-3, np.float32),
+                        np.full(4, 1e-3, np.float32), 6.6e-4,
+                        active=jnp.asarray([True, True, False, False]))
+        n = registry.num_active(st)
+        assert isinstance(n, int) and n == 2
+
+    def test_jit_and_vmap_safe(self):
+        """int(jnp.sum(...)) used to throw TracerIntegerConversionError
+        inside jit/vmap; the traced array must flow instead."""
+        cfg = RouterConfig(max_arms=4)
+        st = init_state(cfg, np.full(4, 1e-3, np.float32),
+                        np.full(4, 1e-3, np.float32), 6.6e-4,
+                        active=jnp.asarray([True, True, True, False]))
+
+        @jax.jit
+        def count(s):
+            return registry.num_active(s)
+
+        assert int(count(st)) == 3
+        stacked = jax.tree.map(lambda l: jnp.stack([l, l]), st)
+        counts = jax.jit(jax.vmap(registry.num_active))(stacked)
+        np.testing.assert_array_equal(np.asarray(counts), [3, 3])

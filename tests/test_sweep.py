@@ -1,0 +1,238 @@
+"""Grid-sweep fabric: bit-for-bit equivalence with the looped
+per-condition baseline, the whole-grid-compiles-once contract, budget
+stacking in make_states, scenario grids, device sharding, and the
+RunResult.phase segment-structure fix that rides along."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import evaluate, simulator, sweep
+from repro.core.scenario import PriceChange, QualityShift, ScenarioSpec
+from repro.core.types import RouterConfig
+from repro.launch import mesh as mesh_lib
+
+CFG = RouterConfig()
+SEEDS = (0, 1, 2)
+BUDGETS = (1.0e-4, 6.6e-4, 1.9e-3)
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return simulator.make_benchmark(
+        seed=0, splits={"train": 256, "val": 32, "test": 200})
+
+
+@pytest.fixture(scope="module")
+def env(bench):
+    return bench.test
+
+
+@pytest.fixture(scope="module")
+def priors(bench):
+    return evaluate.fit_warmup_priors(CFG, bench.train)
+
+
+def _assert_bitwise(grid_res, run_res):
+    np.testing.assert_array_equal(grid_res.arms, run_res.arms)
+    np.testing.assert_array_equal(grid_res.rewards, run_res.rewards)
+    np.testing.assert_array_equal(grid_res.costs, run_res.costs)
+    np.testing.assert_array_equal(grid_res.lams, run_res.lams)
+
+
+class TestGridEquivalence:
+    def test_grid_matches_looped_run_bitwise(self, env, priors):
+        grid = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS,
+                              priors=priors, n_eff=1164.0)
+        for i, b in enumerate(BUDGETS):
+            res = evaluate.run(CFG, env, b, seeds=SEEDS,
+                               priors=priors, n_eff=1164.0)
+            _assert_bitwise(grid.condition(i), res)
+
+    def test_grid_without_priors(self, env):
+        grid = sweep.run_grid(CFG, env, BUDGETS[:2], seeds=SEEDS)
+        for i, b in enumerate(BUDGETS[:2]):
+            _assert_bitwise(grid.condition(i),
+                            evaluate.run(CFG, env, b, seeds=SEEDS))
+
+    def test_batched_data_plane_grid(self, env):
+        grid = sweep.run_grid(CFG, env, BUDGETS[:2], seeds=SEEDS,
+                              batch_size=16)
+        for i, b in enumerate(BUDGETS[:2]):
+            res = evaluate.run(CFG, env, b, seeds=SEEDS, batch_size=16)
+            _assert_bitwise(grid.condition(i), res)
+
+    def test_condition_edits_stack_state_leaves(self, env):
+        """A non-budget state-leaf axis: pacer enabled vs disabled as a
+        two-condition grid via per-condition pure edits."""
+        import dataclasses
+
+        def disable(st):
+            return dataclasses.replace(
+                st, pacer=dataclasses.replace(
+                    st.pacer, enabled=st.pacer.enabled & False))
+
+        grid = sweep.run_grid(
+            CFG, env, (6.6e-4, 6.6e-4), seeds=SEEDS,
+            condition_edits=(None, disable))
+        on = evaluate.run(CFG, env, 6.6e-4, seeds=SEEDS)
+        off = evaluate.run(CFG, env, 6.6e-4, seeds=SEEDS,
+                           pacer_enabled=False)
+        _assert_bitwise(grid.condition(0), on)
+        _assert_bitwise(grid.condition(1), off)
+
+
+class TestOneCompiledProgram:
+    def test_full_pareto_grid_single_trace(self, env, priors):
+        """The paper's 7-budget x 20-seed Fig. 1 grid is ONE trace."""
+        # bench_pareto.BUDGET_SWEEP (kept inline: tests don't import the
+        # benchmarks namespace package)
+        BUDGET_SWEEP = (1.0e-4, 2.3e-4, 3.0e-4, 6.6e-4, 1.0e-3, 1.9e-3,
+                        4.0e-3)
+        seeds = tuple(range(20))
+        before = sweep.TRACE_COUNT[0]
+        grid = sweep.run_grid(CFG, env, BUDGET_SWEEP, seeds=seeds,
+                              priors=priors, n_eff=1164.0)
+        assert sweep.TRACE_COUNT[0] == before + 1, (
+            "7x20 grid must compile as one program")
+        assert grid.arms.shape == (7, 20, env.n)
+        # New budget values, same shapes: the program is reused as-is.
+        sweep.run_grid(CFG, env, [2 * b for b in BUDGET_SWEEP], seeds=seeds,
+                       priors=priors, n_eff=1164.0)
+        assert sweep.TRACE_COUNT[0] == before + 1, "fabric retraced"
+
+    def test_grid_result_accessors(self, env):
+        grid = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS)
+        assert len(grid) == 3
+        pairs = list(grid.conditions())
+        assert [b for b, _ in pairs] == list(BUDGETS)
+        assert pairs[0][1].arms.shape == (len(SEEDS), env.n)
+
+
+class TestBudgetStacking:
+    def test_make_states_budget_vector(self, env):
+        states = evaluate.make_states(
+            CFG, env, (1e-4, 1e-3, 1e-2), (0, 1, 2))
+        np.testing.assert_allclose(
+            np.asarray(states.pacer.budget), [1e-4, 1e-3, 1e-2])
+        np.testing.assert_allclose(
+            np.asarray(states.pacer.c_ema), [1e-4, 1e-3, 1e-2])
+
+    def test_make_states_scalar_budget_unchanged(self, env):
+        a = evaluate.make_states(CFG, env, 6.6e-4, SEEDS)
+        b = evaluate.make_states(CFG, env, (6.6e-4,) * len(SEEDS), SEEDS)
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+class TestScenarioGrid:
+    SPEC = ScenarioSpec(
+        horizon=90,
+        events=(PriceChange(30, 2, 0.1, recalibrate=True),
+                QualityShift(60, 1, 0.7)),
+        stream_seed_base=42)
+
+    def test_matches_run_scenario_per_budget(self, env):
+        grid = sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS,
+                                       seeds=SEEDS)
+        assert grid.bounds == self.SPEC.bounds
+        for i, b in enumerate(BUDGETS):
+            res = evaluate.run_scenario(CFG, self.SPEC, env, b, seeds=SEEDS)
+            _assert_bitwise(grid.condition(i), res)
+            assert grid.condition(i).bounds == res.bounds
+
+    def test_single_trace_and_budget_reuse(self, env):
+        sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS, seeds=SEEDS)
+        before = sweep.TRACE_COUNT[0]
+        sweep.run_scenario_grid(CFG, self.SPEC, env, (2e-4, 5e-4, 2e-3),
+                                seeds=SEEDS)
+        assert sweep.TRACE_COUNT[0] == before, "scenario fabric retraced"
+
+    def test_batched_plane(self, env):
+        grid = sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS[:2],
+                                       seeds=SEEDS, batch_size=16)
+        res = evaluate.run_scenario(CFG, self.SPEC, env, BUDGETS[1],
+                                    seeds=SEEDS, batch_size=16)
+        _assert_bitwise(grid.condition(1), res)
+
+
+class TestDeviceSharding:
+    def test_grid_mesh_divisor_selection(self):
+        devs = jax.devices()
+        mesh = mesh_lib.make_grid_mesh(6, devs)
+        assert 6 % mesh.devices.size == 0
+        mesh = mesh_lib.make_grid_mesh(1, devs)
+        assert mesh.devices.size == 1
+
+    def test_sharded_run_matches_single_device(self):
+        """The fabric must produce identical bits when the grid axis is
+        split across many (placeholder host) devices; exercised in a
+        subprocess because device count is fixed at jax init."""
+        code = (
+            "import numpy as np\n"
+            "import jax\n"
+            "assert len(jax.devices()) == 6, jax.devices()\n"
+            "from repro.core import evaluate, simulator, sweep\n"
+            "b = simulator.make_benchmark(seed=0, splits={'train': 64, "
+            "'val': 16, 'test': 80})\n"
+            "from repro.core.types import RouterConfig\n"
+            "cfg = RouterConfig()\n"
+            "grid = sweep.run_grid(cfg, b.test, (1e-4, 6.6e-4, 1.9e-3), "
+            "seeds=(0, 1))\n"
+            "for i, bud in enumerate((1e-4, 6.6e-4, 1.9e-3)):\n"
+            "    res = evaluate.run(cfg, b.test, bud, seeds=(0, 1))\n"
+            "    np.testing.assert_array_equal(grid.condition(i).arms, "
+            "res.arms)\n"
+            "    np.testing.assert_array_equal(grid.condition(i).lams, "
+            "res.lams)\n"
+            "print('SHARDED_OK')\n"
+        )
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=6",
+                   PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=300,
+                             cwd=os.path.dirname(os.path.dirname(
+                                 os.path.abspath(__file__))))
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "SHARDED_OK" in out.stdout
+
+
+class TestPhaseBounds:
+    """RunResult.phase used to silently drop ``bounds`` — slicing a
+    scenario result lost its segment structure."""
+
+    def _mk(self, bounds):
+        t = bounds[-1]
+        return evaluate.RunResult(
+            arms=np.zeros((2, t), np.int32), rewards=np.zeros((2, t)),
+            costs=np.zeros((2, t)), lams=np.zeros((2, t)), bounds=bounds)
+
+    def test_phase_rebases_overlapping_bounds(self):
+        r = self._mk((0, 30, 60, 90))
+        p = r.phase(10, 70)
+        assert p.bounds == (0, 20, 50, 60)
+        assert p.n_segments == 3
+
+    def test_phase_on_boundary_keeps_interior_only(self):
+        r = self._mk((0, 30, 60, 90))
+        p = r.phase(30, 90)
+        assert p.bounds == (0, 30, 60)
+        assert p.n_segments == 2
+
+    def test_phase_without_bounds_stays_none(self):
+        r = evaluate.RunResult(
+            arms=np.zeros((2, 50), np.int32), rewards=np.zeros((2, 50)),
+            costs=np.zeros((2, 50)), lams=np.zeros((2, 50)))
+        assert r.phase(10, 40).bounds is None
+
+    def test_segment_of_phase(self, env):
+        spec = TestScenarioGrid.SPEC
+        res = evaluate.run_scenario(CFG, spec, env, 6.6e-4, seeds=(0,))
+        sliced = res.phase(0, 75)
+        assert sliced.bounds == (0, 30, 60, 75)
+        np.testing.assert_array_equal(
+            sliced.segment(1).arms, res.segment(1).arms)
