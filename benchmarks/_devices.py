@@ -1,0 +1,32 @@
+"""Pre-jax-import device-count bootstrap shared by the sharded-fabric
+benchmarks (bench_sweep, bench_knee).
+
+``--devices N`` forces N CPU placeholder devices via
+``xla_force_host_platform_device_count`` (dryrun.py's convention) so the
+device-sharded path is exercised on machines without accelerators. The
+flag must be applied BEFORE jax initialises, hence this module is
+jax-free and callers invoke ``apply_devices_flag(sys.argv)`` at the very
+top, ahead of any jax-touching import.
+"""
+from __future__ import annotations
+
+import os
+
+
+def peek_devices(argv) -> int:
+    """--devices N or --devices=N, parsed without argparse/jax."""
+    for i, a in enumerate(argv):
+        if a == "--devices":
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return 0
+
+
+def apply_devices_flag(argv) -> int:
+    n = peek_devices(argv)
+    if n:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=" + str(n))
+    return n

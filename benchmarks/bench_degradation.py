@@ -57,8 +57,9 @@ def main(seeds=SEEDS):
     # Unconstrained baseline (quality-only routing: lambda_c = 0, no
     # pacer): reward unaffected, cost increases from over-allocating to
     # Gemini when Mistral degrades.
-    from repro.core.types import RouterConfig
-    uncon_cfg = RouterConfig(alpha=0.01, gamma=0.997, lambda_c=0.0)
+    from repro.core.types import HyperParams, RouterConfig
+    uncon_cfg = RouterConfig(
+        hyper=HyperParams(alpha=0.01, gamma=0.997, lambda_c=0.0))
     res_u = evaluate.run_scenario(uncon_cfg, spec, b.test, 1.0, seeds=seeds,
                                   priors=priors, n_eff=N_EFF,
                                   pacer_enabled=False)

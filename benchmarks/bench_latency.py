@@ -21,7 +21,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import router
-from repro.core.types import RouterConfig, init_state
+from repro.core.types import HyperParams, RouterConfig, init_state
 
 N_CYCLES = 2000
 WARMUP = 200
@@ -93,7 +93,7 @@ def time_numpy(mode, d, n=N_CYCLES):
 # ---------------------------------------------------------------------------
 
 def time_production(d, n=N_CYCLES):
-    cfg = RouterConfig(d=d, max_arms=3, alpha=0.05)
+    cfg = RouterConfig(d=d, max_arms=3, hyper=HyperParams(alpha=0.05))
     prices = jnp.asarray([1e-4, 1e-3, 5.6e-3])
     state = init_state(cfg, prices, prices, budget=6.6e-4)
     sel = jax.jit(lambda s, x: router.select(cfg, s, x))
@@ -128,7 +128,7 @@ def time_e2e(n=300):
     corpus = [r["prompt"] for r in make_request_stream(400, seed=1)]
     raw = np.stack([hash_encode(p) for p in corpus])
     wh = fit_pca_whitener(raw)
-    cfg = RouterConfig(max_arms=3, alpha=0.05)
+    cfg = RouterConfig(max_arms=3, hyper=HyperParams(alpha=0.05))
     prices = jnp.asarray([1e-4, 1e-3, 5.6e-3])
     state = init_state(cfg, prices, prices, budget=6.6e-4)
     sel = jax.jit(lambda s, x: router.select(cfg, s, x))
@@ -196,7 +196,8 @@ def time_batched_sweep(batch_sizes=BATCH_SIZES, backends=BACKENDS,
     prices = jnp.asarray([1e-4, 1e-3, 5.6e-3], jnp.float32)
     out = {}
     for bk in backends:
-        cfg = RouterConfig(d=d, max_arms=3, alpha=0.05, backend=bk)
+        cfg = RouterConfig(d=d, max_arms=3, backend=bk,
+                           hyper=HyperParams(alpha=0.05))
 
         def cycle(s, X, R, C, cfg=cfg):
             return router.step_batch(cfg, s, X, R, C)
@@ -222,7 +223,7 @@ def backend_score_divergence(B=256, d=26, K=3, seed=0):
     """Max abs score diff jnp vs Pallas on one block (the ≤1e-4 contract)."""
     from repro.core import backend as backend_lib
     rng = np.random.default_rng(seed)
-    cfg = RouterConfig(d=d, max_arms=K, alpha=0.05)
+    cfg = RouterConfig(d=d, max_arms=K, hyper=HyperParams(alpha=0.05))
     theta = jnp.asarray(rng.standard_normal((K, d)) * 0.1, jnp.float32)
     M = rng.standard_normal((K, d, d)) * 0.1
     A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None]
@@ -231,7 +232,8 @@ def backend_score_divergence(B=256, d=26, K=3, seed=0):
     X = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
     dt = jnp.asarray(rng.integers(0, 500, K), jnp.int32)
     return backend_lib.score_divergence(
-        cfg, theta, ainv, c_tilde, X, dt, jnp.float32(0.7))
+        cfg, cfg.hyper.as_leaves(), theta, ainv, c_tilde, X, dt,
+        jnp.float32(0.7))
 
 
 def main(quick: bool = False):

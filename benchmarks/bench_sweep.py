@@ -20,24 +20,11 @@ the environment and grid for CI.
 """
 from __future__ import annotations
 
-import os
 import sys
 
-def _peek_devices(argv):
-    """--devices N or --devices=N, read before jax initialises."""
-    for i, a in enumerate(argv):
-        if a == "--devices":
-            return int(argv[i + 1])
-        if a.startswith("--devices="):
-            return int(a.split("=", 1)[1])
-    return 0
+from benchmarks._devices import apply_devices_flag
 
-
-if _peek_devices(sys.argv):  # must precede any jax import
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + " --xla_force_host_platform_device_count="
-        + str(_peek_devices(sys.argv)))
+apply_devices_flag(sys.argv)  # must precede any jax import
 
 import argparse
 import time

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import evaluate, simulator, sweep
 from repro.core.costs import BUDGET_LOOSE, BUDGET_MODERATE, BUDGET_TIGHT
-from repro.core.types import RouterConfig
+from repro.core.types import HyperParams, RouterConfig
 
 SEEDS = tuple(range(20))
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
@@ -24,12 +24,13 @@ BUDGETS = {
 }
 
 # The paper's production hyper-parameters (Appendix A knee point).
-PARETO_CFG = RouterConfig(alpha=0.01, gamma=0.997)
-NAIVE_CFG = RouterConfig(alpha=0.01, gamma=1.0)       # infinite memory
+PARETO_CFG = RouterConfig(hyper=HyperParams(alpha=0.01, gamma=0.997))
+NAIVE_CFG = RouterConfig(                             # infinite memory
+    hyper=HyperParams(alpha=0.01, gamma=1.0))
 # Tabula Rasa runs under ITS OWN independently tuned optimum (the paper's
 # Appendix-C methodology). On this environment the cold start needs more
 # exploration than the paper's 0.05 (bench_knee grid: alpha=0.2 best).
-TABULA_CFG = RouterConfig(alpha=0.2, gamma=0.997)
+TABULA_CFG = RouterConfig(hyper=HyperParams(alpha=0.2, gamma=0.997))
 N_EFF = 1164.0
 
 

@@ -2,8 +2,10 @@
 
 A worked example of the scenario engine (DESIGN.md §6): one spec that
 chains a provider price war, a hot-swap onboarding, a silent regression
-of the newcomer, and a mid-stream budget cut — then runs it through both
-the scalar and the batched data plane and reduces metrics per segment.
+of the newcomer, and a mid-stream budget cut paired with an operator
+hyper-parameter retune (``HyperShift``, DESIGN.md §9) — then runs it
+through both the scalar and the batched data plane and reduces metrics
+per segment.
 
 Scenario authoring is three steps:
 
@@ -22,7 +24,8 @@ sys.path.insert(0, "src")
 
 from repro.core import evaluate, simulator  # noqa: E402
 from repro.core.scenario import (  # noqa: E402
-    AddArm, BudgetChange, PriceChange, QualityShift, ScenarioSpec,
+    AddArm, BudgetChange, HyperShift, PriceChange, QualityShift,
+    ScenarioSpec,
 )
 from repro.core.types import RouterConfig  # noqa: E402
 
@@ -43,6 +46,7 @@ def main():
             AddArm(2 * P, FLASH),                  # Flash hot-swapped in
             QualityShift(3 * P, FLASH, 0.60),      # ...then regresses
             BudgetChange(4 * P, 3.0e-4),           # operator cuts ceiling
+            HyperShift(4 * P, gamma=0.99),         # ...and forgets faster
         ),
         init_active=3,                             # Flash starts inactive
     )

@@ -1,11 +1,14 @@
 """ParetoBandit core: the paper's contribution as a composable JAX module."""
 from repro.core.types import (  # noqa: F401
     ArmPrior,
+    HyperParams,
     PacerState,
     RouterConfig,
     RouterState,
+    Statics,
     init_state,
     log_normalized_cost,
+    with_hyperparams,
 )
 from repro.core.router import (  # noqa: F401
     BatchDecision,
@@ -25,6 +28,7 @@ from repro.core.scenario import (  # noqa: F401
     AddArm,
     BudgetChange,
     DeleteArm,
+    HyperShift,
     PriceChange,
     QualityShift,
     ScenarioSpec,
@@ -32,8 +36,11 @@ from repro.core.scenario import (  # noqa: F401
 )
 from repro.core.sweep import (  # noqa: F401
     GridResult,
+    chain_edits,
+    hyper_edit,
     run_grid,
     run_scenario_grid,
+    warmup_edit,
 )
 from repro.core.warmup import (  # noqa: F401
     apply_warmup,

@@ -11,11 +11,17 @@ arm through a ``RoutingBackend``. Two implementations ship (DESIGN.md §2):
                  exact kernel code path that compiles on hardware.
 
 The backend is selected statically via ``RouterConfig.backend``, so the
-choice is resolved at trace time and never costs a runtime branch.
+choice is resolved at trace time and never costs a runtime branch. The
+hyper-parameters, by contrast, are *traced operands* (DESIGN.md §9):
+``alpha`` enters the Pallas kernel as a scalar input, and the penalty /
+inflation vectors are computed from the traced ``HyperParams`` leaves —
+so a sweep can stack a whole (α, γ) grid on the fabric's flattened
+(condition x seed) vmap axis without recompiling either backend.
 
 Numerical-equivalence contract: both backends must agree on scores to
-``EQUIV_TOL`` max abs diff (enforced by tests/test_batched_routing.py and
-reported by benchmarks/bench_latency.py).
+``EQUIV_TOL`` max abs diff (enforced by tests/test_batched_routing.py —
+including under the fabric's vmap axis in tests/test_hyperparams.py —
+and reported by benchmarks/bench_latency.py).
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import linucb
-from repro.core.types import RouterConfig
+from repro.core.types import HyperParams, RouterConfig
 from repro.kernels.linucb_score.ops import linucb_score
 
 Array = jax.Array
@@ -42,6 +48,7 @@ class RoutingBackend(Protocol):
     def score(
         self,
         cfg: RouterConfig,
+        hp: HyperParams,  # traced hyper leaves (state-carried)
         theta: Array,     # (K, d)
         A_inv: Array,     # (K, d, d)
         c_tilde: Array,   # (K,)
@@ -54,8 +61,9 @@ class RoutingBackend(Protocol):
 class JnpBackend:
     name = "jnp"
 
-    def score(self, cfg, theta, A_inv, c_tilde, X, dt, lam) -> Array:
-        return linucb.ucb_scores_batch(cfg, theta, A_inv, c_tilde, X, dt, lam)
+    def score(self, cfg, hp, theta, A_inv, c_tilde, X, dt, lam) -> Array:
+        return linucb.ucb_scores_batch(
+            cfg, hp, theta, A_inv, c_tilde, X, dt, lam)
 
 
 class PallasBackend:
@@ -65,14 +73,14 @@ class PallasBackend:
         # None = auto: compiled on TPU, interpret elsewhere.
         self._interpret = interpret
 
-    def score(self, cfg, theta, A_inv, c_tilde, X, dt, lam) -> Array:
+    def score(self, cfg, hp, theta, A_inv, c_tilde, X, dt, lam) -> Array:
         interpret = self._interpret
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        pen = (cfg.lambda_c + lam) * c_tilde
-        infl = linucb.staleness_inflation(cfg, dt)
+        pen = (hp.lambda_c + lam) * c_tilde
+        infl = linucb.staleness_inflation(cfg, hp, dt)
         return linucb_score(
-            X, theta, A_inv, pen, infl, alpha=cfg.alpha, interpret=interpret
+            X, theta, A_inv, pen, infl, hp.alpha, interpret=interpret
         )
 
 
@@ -92,10 +100,11 @@ def get_backend(name: str) -> RoutingBackend:
 
 
 def score_divergence(
-    cfg: RouterConfig, theta, A_inv, c_tilde, X, dt, lam
+    cfg: RouterConfig, hp: HyperParams, theta, A_inv, c_tilde, X, dt, lam
 ) -> float:
     """Max abs score diff between the two backends on one block (the
     equivalence contract, for benchmarks and monitoring)."""
-    a = get_backend("jnp").score(cfg, theta, A_inv, c_tilde, X, dt, lam)
-    b = get_backend("pallas").score(cfg, theta, A_inv, c_tilde, X, dt, lam)
+    a = get_backend("jnp").score(cfg, hp, theta, A_inv, c_tilde, X, dt, lam)
+    b = get_backend("pallas").score(
+        cfg, hp, theta, A_inv, c_tilde, X, dt, lam)
     return float(jnp.max(jnp.abs(a - b)))

@@ -16,7 +16,10 @@ import numpy as np
 
 from repro.core import router, scenario as scenario_lib, warmup
 from repro.core.simulator import Environment
-from repro.core.types import ArmPrior, RouterConfig, RouterState, init_state
+from repro.core.types import (
+    HYPER_FIELDS, ArmPrior, HyperParams, RouterConfig, RouterState,
+    init_state,
+)
 
 Array = jax.Array
 
@@ -100,6 +103,34 @@ class RunResult:
         return (oracle[None, :] - self.rewards).sum(axis=1)
 
 
+def pad_priors(cfg: RouterConfig, priors: Sequence[ArmPrior | None]):
+    """Pad a per-arm prior list out to ``max_arms`` slots (the layout
+    ``warmup.apply_warmup`` expects); shared with sweep.warmup_edit so
+    per-condition warm starts match ``make_states`` exactly."""
+    pad = cfg.max_arms - len(priors)
+    assert pad >= 0, (len(priors), cfg.max_arms)
+    return list(priors) + [None] * pad
+
+
+def _hyper_stack(cfg: RouterConfig, hyper: Optional[HyperParams], n: int):
+    """(leaves, vmap in_axes) for a hyper spec that is either one shared
+    ``HyperParams`` or one with (n,)-stacked leaves (a per-state axis)."""
+    hp = cfg.hyper if hyper is None else hyper
+    if isinstance(hp, HyperParams):
+        hp.validate()
+    leaves, axes = {}, {}
+    for name in HYPER_FIELDS:
+        leaf = jnp.asarray(getattr(hp, name), jnp.float32)
+        if leaf.ndim not in (0, 1) or (leaf.ndim == 1
+                                       and leaf.shape[0] != n):
+            raise ValueError(
+                f"hyper.{name} must be a scalar or a ({n},) stack; got "
+                f"shape {leaf.shape}")
+        leaves[name] = leaf
+        axes[name] = 0 if leaf.ndim else None
+    return HyperParams(**leaves), HyperParams(**axes)
+
+
 def make_states(
     cfg: RouterConfig,
     env: Environment,
@@ -107,19 +138,28 @@ def make_states(
     seeds: Sequence[int],
     *,
     priors: Optional[Sequence[ArmPrior | None]] = None,
-    n_eff: float = 0.0,
+    n_eff: float | Sequence[float] = 0.0,
     pacer_enabled: bool = True,
     active_arms: Optional[int] = None,
+    hyper: Optional[HyperParams] = None,
 ) -> RouterState:
     """Stacked initial states, one per seed: a single ``jax.vmap`` over
-    (PRNG key, budget) pairs — everything else broadcasts — not a Python
-    loop + ``jnp.stack``.
+    (PRNG key, budget, hyper, n_eff) tuples — everything else broadcasts
+    — not a Python loop + ``jnp.stack``.
 
     ``budget`` is either one ceiling shared by every state or a sequence
     aligned with ``seeds``: the ceiling lives in ``PacerState.budget``, a
     *state leaf*, so a grid sweep stacks one budget per (condition, seed)
     element and the whole grid runs through one compiled program
-    (sweep.py) instead of re-entering per ceiling."""
+    (sweep.py) instead of re-entering per ceiling. ``hyper`` follows the
+    same rule (DESIGN.md §9): one shared ``HyperParams`` (default:
+    ``cfg.hyper``) or one whose leaves are (len(seeds),) stacks — a per-
+    state (α, γ, ...) axis for fused hyper grids. ``n_eff`` likewise: a
+    scalar, or one pseudo-count per stacked state (the knee grid derives
+    n_eff from each cell's gamma via Eq. 13), applied inside the same
+    vmap — all warm or all cold; a mixed stack would need the warmup
+    branch to be data-dependent (use per-condition ``condition_edits``
+    for that instead)."""
     k = env.k
     assert k <= cfg.max_arms, (k, cfg.max_arms)
     pad = cfg.max_arms - k
@@ -128,22 +168,37 @@ def make_states(
     n_active = k if active_arms is None else active_arms
     active = np.zeros(cfg.max_arms, bool)
     active[:n_active] = True
+    hp, hp_axes = _hyper_stack(cfg, hyper, len(seeds))
+    ne = np.asarray(n_eff, np.float32)
+    warm = priors is not None and bool(np.any(ne > 0))
+    if warm and ne.ndim and not np.all(ne > 0):
+        raise ValueError(
+            "mixed warm/cold n_eff in one stack: apply_warmup at n_eff=0 "
+            "is not a no-op, so warm-vs-cold cannot share the vmapped "
+            "branch — stack it via condition_edits instead")
+    if ne.ndim and ne.shape != (len(seeds),):
+        raise ValueError(
+            f"n_eff must be a scalar or one value per state; got shape "
+            f"{ne.shape} for {len(seeds)} states")
+    padded = pad_priors(cfg, list(priors)) if warm else None
 
-    def one(key, b):
+    def one(key, b, h, ne_):
         st = init_state(
             cfg, preq, p1k, b,
             key=key, active=jnp.asarray(active),
-            pacer_enabled=pacer_enabled,
+            pacer_enabled=pacer_enabled, hyper=h,
         )
-        if priors is not None and n_eff > 0:
-            st = warmup.apply_warmup(cfg, st, list(priors) + [None] * pad, n_eff)
+        if warm:
+            st = warmup.apply_warmup(cfg, st, padded, ne_)
         return st
 
     keys = jax.vmap(jax.random.PRNGKey)(
         jnp.asarray([int(s) for s in seeds], jnp.uint32))
     budgets = jnp.broadcast_to(
         jnp.asarray(budget, jnp.float32), (len(seeds),))
-    return jax.vmap(one)(keys, budgets)
+    ne_in = jnp.asarray(ne) if ne.ndim else float(ne)
+    return jax.vmap(one, in_axes=(0, 0, hp_axes, 0 if ne.ndim else None))(
+        keys, budgets, hp, ne_in)
 
 
 def _pad_env_arrays(cfg: RouterConfig, env: Environment):
@@ -202,6 +257,7 @@ def run(
     shuffle: bool = True,
     return_states: bool = False,
     batch_size: Optional[int] = None,
+    hyper: Optional[HyperParams] = None,
 ):
     """Vectorised multi-seed run of Algorithm 1 over an environment stream.
 
@@ -215,6 +271,9 @@ def run(
     select_batch/update_batch path the batch-serving gateway runs — so
     scenario benchmarks can exercise production code. Default (None) is
     the per-request closed loop.
+
+    ``hyper`` overrides ``cfg.hyper`` for the run — a *data* change, so
+    sweeping it re-enters the same compiled program (DESIGN.md §9).
     """
     xs, rmat, cmat, stream_axes, env0 = build_run_streams(
         cfg, env, seeds, shuffle)
@@ -222,9 +281,10 @@ def run(
         states = make_states(
             cfg, env0, budget, seeds,
             priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+            hyper=hyper,
         )
 
-    run_fn = _cached_run_fn(cfg, stream_axes, batch_size)
+    run_fn = _cached_run_fn(cfg.statics, stream_axes, batch_size)
     finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
@@ -251,11 +311,12 @@ def stream_body(cfg: RouterConfig, batch_size=None):
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_run_fn(cfg: RouterConfig, stream_axes, batch_size=None):
-    """One jitted sweep function per (RouterConfig, stream layout) — the
-    hyper-parameter grids re-enter with identical signatures thousands of
-    times, so caching the jit wrapper avoids retrace-per-call."""
-    one_seed = stream_body(cfg, batch_size)
+def _cached_run_fn(statics, stream_axes, batch_size=None):
+    """One jitted sweep function per (Statics, stream layout). Keyed on
+    the *statics projection* only: hyper-parameters live in the state
+    (DESIGN.md §9), so an (α, γ) grid — which used to retrace per cell —
+    re-enters one cached program."""
+    one_seed = stream_body(statics, batch_size)
     return jax.jit(
         jax.vmap(one_seed, in_axes=(0, stream_axes, stream_axes, stream_axes))
     )
@@ -273,6 +334,7 @@ def run_scenario(
     pacer_enabled: bool = True,
     batch_size: Optional[int] = None,
     return_states: bool = False,
+    hyper: Optional[HyperParams] = None,
 ):
     """Run a declarative ``ScenarioSpec`` over ``env`` as ONE jitted,
     seed-vmapped segmented-scan call (scenario.py).
@@ -288,7 +350,7 @@ def run_scenario(
     states = make_states(
         cfg, env, budget, seeds,
         priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
-        active_arms=spec.init_active,
+        active_arms=spec.init_active, hyper=hyper,
     )
     run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size)
     finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)

@@ -5,19 +5,27 @@ scalar multiply on (A, b) and a scalar divide on the cached inverse,
 Sherman-Morrison rank-1 updates, and the staleness-inflated UCB variance.
 
 All functions are pure and shape-stable; the router (router.py) composes
-them into Algorithm 1.
+them into Algorithm 1. Every function takes the split configuration
+(DESIGN.md §9): ``cfg`` supplies the trace statics (only ``dt_max``
+here), ``hp`` the traced ``HyperParams`` leaves — so one compiled program
+serves every (α, γ, λ_c, ...) operating point.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import RouterConfig
+from repro.core.types import HyperParams, RouterConfig
 
 Array = jax.Array
 
+# Runtime floor for the traced forgetting factor: gamma is validated to
+# (0, 1] at construction time, but a traced leaf can carry any value, so
+# the kernel clamps (identity for every valid gamma).
+GAMMA_FLOOR = 1e-6
 
-def forgetting_factor(cfg: RouterConfig, dt: Array) -> Array:
+
+def forgetting_factor(cfg: RouterConfig, hp: HyperParams, dt: Array) -> Array:
     """gamma^dt with a numerical clamp on the exponent.
 
     The paper decays the full sufficient statistics (ridge included). For an
@@ -27,16 +35,18 @@ def forgetting_factor(cfg: RouterConfig, dt: Array) -> Array:
     so routing behaviour is unchanged. Documented in DESIGN.md §4.
     """
     dt = jnp.clip(dt, 0, cfg.dt_max).astype(jnp.float32)
-    return jnp.power(jnp.float32(cfg.gamma), dt)
+    g = jnp.clip(jnp.asarray(hp.gamma, jnp.float32), GAMMA_FLOOR, 1.0)
+    return jnp.power(g, dt)
 
 
 def decay_statistics(
-    cfg: RouterConfig, A: Array, A_inv: Array, b: Array, dt: Array
+    cfg: RouterConfig, hp: HyperParams, A: Array, A_inv: Array, b: Array,
+    dt: Array,
 ):
     """Algorithm 1 lines 18-20: batched exponentiation gamma^dt applied to
     one arm's statistics. A_inv scales by 1/gamma^dt — an O(d^2) scalar op.
     """
-    g = forgetting_factor(cfg, dt)
+    g = forgetting_factor(cfg, hp, dt)
     return A * g, A_inv / g, b * g
 
 
@@ -49,6 +59,7 @@ def sherman_morrison(A_inv: Array, x: Array) -> Array:
 
 def rank1_update(
     cfg: RouterConfig,
+    hp: HyperParams,
     A: Array,
     A_inv: Array,
     b: Array,
@@ -60,7 +71,7 @@ def rank1_update(
 
     Returns (A, A_inv, b, theta).
     """
-    A, A_inv, b = decay_statistics(cfg, A, A_inv, b, dt)
+    A, A_inv, b = decay_statistics(cfg, hp, A, A_inv, b, dt)
     A = A + jnp.outer(x, x)
     A_inv = sherman_morrison(A_inv, x)
     b = b + r * x
@@ -69,7 +80,7 @@ def rank1_update(
 
 
 def ucb_variance(
-    cfg: RouterConfig, A_inv: Array, x: Array, dt: Array
+    cfg: RouterConfig, hp: HyperParams, A_inv: Array, x: Array, dt: Array
 ) -> Array:
     """Eq. 9: staleness-inflated posterior variance for one arm.
 
@@ -77,11 +88,12 @@ def ucb_variance(
     """
     q = x @ (A_inv @ x)
     q = jnp.maximum(q, 0.0)  # guard tiny negative from f32 round-off
-    return q / staleness_inflation(cfg, dt)
+    return q / staleness_inflation(cfg, hp, dt)
 
 
 def ucb_scores(
     cfg: RouterConfig,
+    hp: HyperParams,
     theta: Array,     # (K, d)
     A_inv: Array,     # (K, d, d)
     c_tilde: Array,   # (K,)
@@ -92,19 +104,22 @@ def ucb_scores(
     """Eq. 2 scores for every arm (the Pallas linucb_score kernel mirrors
     this math for batched request streams; this is the jnp oracle)."""
     exploit = theta @ x                                     # (K,)
-    v = jax.vmap(lambda Ai, d_: ucb_variance(cfg, Ai, x, d_))(A_inv, dt)
-    explore = cfg.alpha * jnp.sqrt(v)
-    penalty = (cfg.lambda_c + lam) * c_tilde
+    v = jax.vmap(lambda Ai, d_: ucb_variance(cfg, hp, Ai, x, d_))(A_inv, dt)
+    explore = hp.alpha * jnp.sqrt(v)
+    penalty = (hp.lambda_c + lam) * c_tilde
     return exploit + explore - penalty
 
 
-def staleness_inflation(cfg: RouterConfig, dt: Array) -> Array:
+def staleness_inflation(
+    cfg: RouterConfig, hp: HyperParams, dt: Array
+) -> Array:
     """Eq. 9 denominator, vectorised: max(gamma^dt, 1/V_max) per arm."""
-    return jnp.maximum(forgetting_factor(cfg, dt), 1.0 / cfg.v_max)
+    return jnp.maximum(forgetting_factor(cfg, hp, dt), 1.0 / hp.v_max)
 
 
 def ucb_scores_batch(
     cfg: RouterConfig,
+    hp: HyperParams,
     theta: Array,     # (K, d)
     A_inv: Array,     # (K, d, d)
     c_tilde: Array,   # (K,)
@@ -122,6 +137,6 @@ def ucb_scores_batch(
     exploit = X @ theta.T                                   # (B, K)
     t = jnp.einsum("bd,kde->bke", X, A_inv)
     quad = jnp.maximum(jnp.einsum("bke,be->bk", t, X), 0.0)
-    v = quad / staleness_inflation(cfg, dt)[None, :]
-    penalty = (cfg.lambda_c + lam) * c_tilde
-    return exploit + cfg.alpha * jnp.sqrt(v) - penalty[None, :]
+    v = quad / staleness_inflation(cfg, hp, dt)[None, :]
+    penalty = (hp.lambda_c + lam) * c_tilde
+    return exploit + hp.alpha * jnp.sqrt(v) - penalty[None, :]

@@ -4,18 +4,23 @@ Two-layer enforcement:
   * soft penalty   — lambda_t enters the UCB score (router.py, Eq. 2);
   * hard ceiling   — when lambda_t > 0, arms priced above
                      c_max / (1 + lambda_t) are excluded (circuit breaker).
+
+The pacer reads no trace statics at all: its knobs (``eta``,
+``alpha_ema``, ``lambda_bar``) are traced ``HyperParams`` leaves, so an
+operator can retune the dual-ascent dynamics of a live router without a
+recompile (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import PacerState, RouterConfig
+from repro.core.types import HyperParams, PacerState
 
 Array = jax.Array
 
 
-def pacer_update(cfg: RouterConfig, p: PacerState, cost: Array) -> PacerState:
+def pacer_update(hp: HyperParams, p: PacerState, cost: Array) -> PacerState:
     """Algorithm 1 lines 25-26.
 
     c_ema <- (1 - a_ema) c_ema + a_ema * c_t                       (Eq. 3)
@@ -25,14 +30,17 @@ def pacer_update(cfg: RouterConfig, p: PacerState, cost: Array) -> PacerState:
     When the pacer is disabled (ablations), lambda stays frozen at its
     current value (zero unless explicitly set).
     """
-    c_ema = (1.0 - cfg.alpha_ema) * p.c_ema + cfg.alpha_ema * cost
-    lam = jnp.clip(p.lam + cfg.eta * (c_ema / p.budget - 1.0), 0.0, cfg.lambda_bar)
+    c_ema = (1.0 - hp.alpha_ema) * p.c_ema + hp.alpha_ema * cost
+    lam = jnp.clip(p.lam + hp.eta * (c_ema / p.budget - 1.0), 0.0,
+                   hp.lambda_bar)
     lam = jnp.where(p.enabled, lam, p.lam)
     c_ema = jnp.where(p.enabled, c_ema, p.c_ema)
     return PacerState(lam=lam, c_ema=c_ema, budget=p.budget, enabled=p.enabled)
 
 
-def pacer_update_batch(cfg: RouterConfig, p: PacerState, costs: Array) -> PacerState:
+def pacer_update_batch(
+    hp: HyperParams, p: PacerState, costs: Array
+) -> PacerState:
     """One dual-ascent pass over a block of realised costs (DESIGN.md §2).
 
     Folds Eqs. 3-4 over ``costs`` (B,) in arrival order inside a single
@@ -43,15 +51,13 @@ def pacer_update_batch(cfg: RouterConfig, p: PacerState, costs: Array) -> PacerS
     """
 
     def body(pp, c):
-        return pacer_update(cfg, pp, c), None
+        return pacer_update(hp, pp, c), None
 
     p2, _ = jax.lax.scan(body, p, costs)
     return p2
 
 
-def hard_ceiling_mask(
-    cfg: RouterConfig, p: PacerState, price: Array, active: Array
-) -> Array:
+def hard_ceiling_mask(p: PacerState, price: Array, active: Array) -> Array:
     """Algorithm 1 lines 4-8: candidate set under the dynamic price ceiling.
 
     A_t = {a : c_a <= c_max^A / (1 + lambda_t)}  when lambda_t > 0, else A.

@@ -38,12 +38,13 @@ def _replace(state: RouterState, **kw) -> RouterState:
     return dataclasses.replace(state, **kw)
 
 
-def heuristic_prior(cfg: RouterConfig, n_eff: float, bias_reward: float):
+def heuristic_prior(cfg: RouterConfig, hp, n_eff: float, bias_reward: float):
     """§3.4: for models absent from offline data — n_eff pseudo-observations
     at isotropic uncertainty with a bias-only reward prediction. Assumes the
-    bias coordinate is the last feature (features.py appends it)."""
+    bias coordinate is the last feature (features.py appends it). ``hp``
+    supplies the (traced) ridge weight lambda0."""
     d = cfg.d
-    A = jnp.eye(d, dtype=jnp.float32) * (cfg.lambda0 + n_eff / d)
+    A = jnp.eye(d, dtype=jnp.float32) * (hp.lambda0 + n_eff / d)
     b = jnp.zeros((d,), jnp.float32).at[d - 1].set(bias_reward * n_eff / d)
     return A, b
 
@@ -64,16 +65,17 @@ def add_arm(
     callable from the host (serving gateway), under ``jax.vmap`` over a
     stacked state, or inside a jitted scenario program."""
     d = cfg.d
+    hp = state.hyper   # traced leaves: lambda0 / Eq. 6 bounds are data
     if prior is not None:
-        A, b = warmup_lib.scale_prior(cfg, prior, n_eff or 1.0)
+        A, b = warmup_lib.scale_prior(cfg, hp, prior, n_eff or 1.0)
     elif n_eff is not None and n_eff > 0:
-        A, b = heuristic_prior(cfg, n_eff, bias_reward)
+        A, b = heuristic_prior(cfg, hp, n_eff, bias_reward)
     else:
-        A = jnp.eye(d, dtype=jnp.float32) * cfg.lambda0
+        A = jnp.eye(d, dtype=jnp.float32) * hp.lambda0
         b = jnp.zeros((d,), jnp.float32)
     A_inv = jnp.linalg.inv(A)
     theta = A_inv @ b
-    c_t = log_normalized_cost(jnp.asarray(price_per_1k, jnp.float32), cfg)
+    c_t = log_normalized_cost(jnp.asarray(price_per_1k, jnp.float32), hp)
     state = _replace(
         state,
         A=state.A.at[slot].set(A),
@@ -100,11 +102,12 @@ def delete_arm(cfg: RouterConfig, state: RouterState, slot: int) -> RouterState:
     the same slot starts clean; any in-flight forced exploration of the slot
     is cancelled."""
     d = cfg.d
+    lambda0 = state.hyper.lambda0
     cancel = state.force_arm == slot
     return _replace(
         state,
-        A=state.A.at[slot].set(jnp.eye(d, dtype=jnp.float32) * cfg.lambda0),
-        A_inv=state.A_inv.at[slot].set(jnp.eye(d, dtype=jnp.float32) / cfg.lambda0),
+        A=state.A.at[slot].set(jnp.eye(d, dtype=jnp.float32) * lambda0),
+        A_inv=state.A_inv.at[slot].set(jnp.eye(d, dtype=jnp.float32) / lambda0),
         b=state.b.at[slot].set(jnp.zeros((d,), jnp.float32)),
         theta=state.theta.at[slot].set(jnp.zeros((d,), jnp.float32)),
         active=state.active.at[slot].set(False),
@@ -119,7 +122,8 @@ def set_price(
 ) -> RouterState:
     """Reprice an arm (provider price change). The pacer reacts to realised
     costs automatically; this keeps the hard ceiling and Eq. 6 in sync."""
-    c_t = log_normalized_cost(jnp.asarray(price_per_1k, jnp.float32), cfg)
+    c_t = log_normalized_cost(
+        jnp.asarray(price_per_1k, jnp.float32), state.hyper)
     return _replace(
         state,
         price=state.price.at[slot].set(price_per_req),

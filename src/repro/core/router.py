@@ -8,6 +8,12 @@ The synchronous inference path is ``select``; the asynchronous feedback
 path is ``update`` (context cached at route time by the caller, §3.1, so
 late rewards never re-encode the prompt).
 
+Hyper-parameters are data (DESIGN.md §9): every (α, γ, λ_c, ...) knob is
+read from ``state.hyper`` — a traced ``HyperParams`` leaf — never from
+``cfg``, so retuning a live router (or stacking a hyper grid on the sweep
+fabric's condition axis) re-enters the same compiled program. ``cfg``
+contributes only trace statics (shapes, backend, dt_max, forced_pulls).
+
 Batched data plane (DESIGN.md §2): ``select_batch`` scores a (B, d) block
 of contexts against all arms in one backend call (jnp oracle or the
 Pallas ``linucb_score`` kernel, chosen by ``RouterConfig.backend``);
@@ -32,6 +38,12 @@ Array = jax.Array
 
 NEG_INF = jnp.float32(-1e30)
 
+# Incremented inside ``select``/``select_batch``: under jit these bodies
+# run only while XLA traces, so the counter moves once per (re)trace and
+# tests can assert e.g. that retuning hyper-parameters on a live server
+# leaves it flat (tests/test_hyperparams.py).
+TRACE_COUNT = [0]
+
 
 class Decision(NamedTuple):
     arm: Array         # scalar i32 — chosen arm slot
@@ -47,13 +59,16 @@ def select(cfg: RouterConfig, state: RouterState, x: Array):
     Only bookkeeping (t, last_play, tiebreak key, forced counter) changes
     here; sufficient statistics change in ``update``.
     """
-    cand = pacer.hard_ceiling_mask(cfg, state.pacer, state.price, state.active)
+    TRACE_COUNT[0] += 1       # moves only while tracing (under jit)
+    hp = state.hyper
+    cand = pacer.hard_ceiling_mask(state.pacer, state.price, state.active)
     dt = state.t - jnp.maximum(state.last_upd, state.last_play)   # line 10
     scores = linucb.ucb_scores(
-        cfg, state.theta, state.A_inv, state.c_tilde, x, dt, state.pacer.lam
+        cfg, hp, state.theta, state.A_inv, state.c_tilde, x, dt,
+        state.pacer.lam,
     )
     key, sub = jax.random.split(state.key)
-    noise = cfg.tiebreak_scale * jax.random.uniform(sub, scores.shape)
+    noise = hp.tiebreak_scale * jax.random.uniform(sub, scores.shape)
     masked = jnp.where(cand, scores + noise, NEG_INF)             # line 13
     arm = jnp.argmax(masked).astype(jnp.int32)                    # line 14
 
@@ -64,19 +79,10 @@ def select(cfg: RouterConfig, state: RouterState, x: Array):
     arm = jnp.where(forced, jnp.clip(state.force_arm, 0), arm)
 
     t_new = state.t + 1                                           # line 15
-    new_state = RouterState(
-        A=state.A,
-        A_inv=state.A_inv,
-        b=state.b,
-        theta=state.theta,
-        last_upd=state.last_upd,
+    new_state = dataclasses.replace(
+        state,
         last_play=state.last_play.at[arm].set(t_new),
-        active=state.active,
-        price=state.price,
-        c_tilde=state.c_tilde,
         t=t_new,
-        pacer=state.pacer,
-        force_arm=state.force_arm,
         force_left=jnp.where(forced, state.force_left - 1, state.force_left),
         key=key,
     )
@@ -94,7 +100,8 @@ def _apply_feedback(
     update (decay + rank-1), without the pacer step."""
     dt = state.t - state.last_upd[arm]                            # line 18
     A_a, Ainv_a, b_a, theta_a = linucb.rank1_update(
-        cfg, state.A[arm], state.A_inv[arm], state.b[arm], x, reward, dt
+        cfg, state.hyper, state.A[arm], state.A_inv[arm], state.b[arm],
+        x, reward, dt,
     )
     return dataclasses.replace(
         state,
@@ -117,7 +124,7 @@ def update(
     """Algorithm 1 lines 17-26: geometric-forgetting reward update for the
     played arm + budget-pacer dual ascent on the realised cost."""
     state = _apply_feedback(cfg, state, arm, x, reward)
-    p = pacer.pacer_update(cfg, state.pacer, cost)                # lines 25-26
+    p = pacer.pacer_update(state.hyper, state.pacer, cost)        # lines 25-26
     return dataclasses.replace(state, pacer=p)
 
 
@@ -189,12 +196,15 @@ def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
     decisions coincide with sequential no-feedback selects bit-for-bit
     up to backend summation order.
     """
+    TRACE_COUNT[0] += 1       # moves only while tracing (under jit)
     B = X.shape[0]
-    cand = pacer.hard_ceiling_mask(cfg, state.pacer, state.price, state.active)
+    hp = state.hyper
+    cand = pacer.hard_ceiling_mask(state.pacer, state.price, state.active)
     dt = state.t - jnp.maximum(state.last_upd, state.last_play)   # line 10
     backend = backend_lib.get_backend(cfg.backend)
     scores = backend.score(
-        cfg, state.theta, state.A_inv, state.c_tilde, X, dt, state.pacer.lam
+        cfg, hp, state.theta, state.A_inv, state.c_tilde, X, dt,
+        state.pacer.lam,
     )                                                             # (B, K)
 
     # Sequentially-chained tiebreak keys: key_i+1, sub_i = split(key_i).
@@ -203,7 +213,7 @@ def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
         return k2, sub
 
     key, subs = jax.lax.scan(split_body, state.key, None, length=B)
-    noise = cfg.tiebreak_scale * jax.vmap(
+    noise = hp.tiebreak_scale * jax.vmap(
         lambda s: jax.random.uniform(s, (cfg.max_arms,))
     )(subs)                                                       # (B, K)
     masked = jnp.where(cand[None, :], scores + noise, NEG_INF)    # line 13
@@ -256,7 +266,7 @@ def update_batch(
         return _apply_feedback(cfg, s, arm, x, r), None
 
     state, _ = jax.lax.scan(body, state, (arms, X, rewards))
-    p = pacer.pacer_update_batch(cfg, state.pacer, costs)         # lines 25-26
+    p = pacer.pacer_update_batch(state.hyper, state.pacer, costs)  # l. 25-26
     return dataclasses.replace(state, pacer=p)
 
 

@@ -51,11 +51,14 @@ Event semantics (DESIGN.md §6):
     restores the base rate card, ``target_mean=None`` restores base
     quality — so a spec reads as a timeline of operator settings, not a
     diff chain;
-  * state events (AddArm, DeleteArm, BudgetChange, and PriceChange with
-    ``recalibrate=True``) edit ``RouterState`` between segments. A
-    PriceChange without ``recalibrate`` is *silent*: realised costs
-    drift but the router's rate card is not updated — the paper's
-    realistic setting, where only the pacer notices.
+  * state events (AddArm, DeleteArm, BudgetChange, HyperShift, and
+    PriceChange with ``recalibrate=True``) edit ``RouterState`` between
+    segments. A PriceChange without ``recalibrate`` is *silent*:
+    realised costs drift but the router's rate card is not updated — the
+    paper's realistic setting, where only the pacer notices. A
+    ``HyperShift`` retunes the live ``RouterState.hyper`` leaves
+    (DESIGN.md §9), so "operator changes α/γ/λ_c mid-stream" is a
+    declarable timeline event — still one compiled program.
 """
 from __future__ import annotations
 
@@ -70,7 +73,10 @@ import numpy as np
 
 from repro.core import pacer as pacer_lib
 from repro.core import registry, router, simulator
-from repro.core.types import ArmPrior, RouterConfig, RouterState
+from repro.core import types as types_lib
+from repro.core.types import (
+    HYPER_FIELDS, ArmPrior, HyperParams, RouterConfig, RouterState,
+)
 
 Array = jax.Array
 
@@ -145,6 +151,34 @@ class BudgetChange:
 
 
 @dataclasses.dataclass(frozen=True)
+class HyperShift:
+    """Operator retunes the router's live hyper-parameters at step ``t``
+    (DESIGN.md §9): any subset of ``HyperParams`` fields; ``None`` leaves
+    a field unchanged. A pure state edit on ``RouterState.hyper`` —
+    "operator retunes mid-stream" as a declarable scenario, with no
+    retrace at the boundary (the whole timeline is still one program)."""
+
+    t: int
+    alpha: Optional[float] = None
+    gamma: Optional[float] = None
+    lambda_c: Optional[float] = None
+    lambda0: Optional[float] = None
+    eta: Optional[float] = None
+    alpha_ema: Optional[float] = None
+    lambda_bar: Optional[float] = None
+    v_max: Optional[float] = None
+    c_floor: Optional[float] = None
+    c_ceil: Optional[float] = None
+    tiebreak_scale: Optional[float] = None
+
+    def overrides(self) -> dict:
+        ov = {n: getattr(self, n) for n in HYPER_FIELDS
+              if getattr(self, n) is not None}
+        HyperParams.validate_fields(**ov)   # fail at spec-build time
+        return ov
+
+
+@dataclasses.dataclass(frozen=True)
 class TrafficMixShift:
     """From step ``t``, prompts are drawn with per-family ``weights``
     (proportional sampling over ``simulator.FAMILIES``; None restores the
@@ -155,10 +189,11 @@ class TrafficMixShift:
 
 
 Event = Union[
-    PriceChange, QualityShift, AddArm, DeleteArm, BudgetChange, TrafficMixShift
+    PriceChange, QualityShift, AddArm, DeleteArm, BudgetChange,
+    TrafficMixShift, HyperShift,
 ]
 
-_STATE_EVENTS = (PriceChange, AddArm, DeleteArm, BudgetChange)
+_STATE_EVENTS = (PriceChange, AddArm, DeleteArm, BudgetChange, HyperShift)
 
 
 # ---------------------------------------------------------------------------
@@ -453,6 +488,11 @@ def _one_edit(cfg: RouterConfig, e: Event, env: simulator.Environment,
     if isinstance(e, BudgetChange):
         return lambda st: dataclasses.replace(
             st, pacer=pacer_lib.set_budget(st.pacer, e.budget))
+    if isinstance(e, HyperShift):
+        ov = e.overrides()
+        if not ov:
+            return None
+        return lambda st: types_lib.with_hyperparams(st, **ov)
     return None
 
 
@@ -568,7 +608,10 @@ def compiled_runner(
     ``RouterState``), so sweeping them re-enters the same compiled
     program — the retrace-per-phase of the hand-rolled benchmarks is gone.
     """
-    key = (cfg, spec_key(spec), _env_sig(env), batch_size)
+    # Keyed on the statics projection: hyper-parameters are state leaves
+    # (DESIGN.md §9), so configs differing only in (α, γ, ...) share one
+    # compiled runner.
+    key = (cfg.statics, spec_key(spec), _env_sig(env), batch_size)
 
     def make():
         seg_lens = tuple(b - a for a, b in spec.segments)

@@ -28,11 +28,14 @@ one jitted, device-sharded call:
   * the state stack is donated to the compiled call, so the grid's
     initial states never double-buffer.
 
-Knobs that are *trace constants* — anything in ``RouterConfig``
-(``alpha``, ``gamma``, ``eta``, the backend) or the stream tensors'
-shapes — still cost one compile per value; sweep those by calling the
-fabric once per config cell (bench_knee.py), which fuses the inner
-budget x seed grid per cell. DESIGN.md §7 tabulates which knobs stack.
+Hyper-parameters are state leaves too (DESIGN.md §9): ``RouterState``
+carries a ``HyperParams`` pytree, so a whole (α, γ) grid stacks on the
+condition axis via ``hyper_edit``/``condition_edits`` — bench_knee's
+full (α x γ x budget x seed) selection grid is ONE fabric call. Knobs
+that remain *trace constants* — the ``Statics`` (``d``, ``max_arms``,
+``backend``, ``dt_max``, ``forced_pulls``) and the stream tensors'
+shapes — still cost one compile per value. DESIGN.md §7 tabulates which
+knobs stack.
 
 Per-condition results are bit-identical to the looped
 ``evaluate.run``-per-condition baseline (pinned in tests/test_sweep.py):
@@ -50,10 +53,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate, router
+from repro.core import evaluate, router, warmup
 from repro.core import scenario as scenario_lib
+from repro.core import types as types_lib
 from repro.core.simulator import Environment
-from repro.core.types import ArmPrior, RouterConfig, RouterState
+from repro.core.types import ArmPrior, HyperParams, RouterConfig, RouterState
 from repro.launch import mesh as mesh_lib
 
 Array = jax.Array
@@ -100,6 +104,26 @@ def _flatten_grid(budgets, seeds):
     flat_b = np.repeat(np.asarray(budgets, np.float32), len(seeds))
     flat_s = seeds * len(budgets)
     return budgets, seeds, flat_b, flat_s
+
+
+def _per_condition_axis(value, C: int, S: int):
+    """Expand a per-condition vector to the flattened grid: a (C,) value
+    repeats each entry S times to align with the condition-major (C*S,)
+    state stack; scalars and already-flat (C*S,) values pass through."""
+    arr = np.asarray(value)
+    if arr.ndim == 1 and arr.shape[0] == C and C != C * S:
+        return np.repeat(arr, S)
+    return value
+
+
+def _expand_hyper(hyper, C: int, S: int):
+    """Per-condition (C,) hyper leaves -> flattened (C*S,) stacks."""
+    if hyper is None:
+        return None
+    return HyperParams(**{
+        n: _per_condition_axis(getattr(hyper, n), C, S)
+        for n in types_lib.HYPER_FIELDS
+    })
 
 
 def _tile_conditions(arr: Array, C: int, sh) -> Array:
@@ -150,11 +174,12 @@ def _apply_condition_edits(
 
 
 @functools.lru_cache(maxsize=64)
-def _cached_grid_fn(cfg: RouterConfig, stream_axes, batch_size):
-    """One jitted fabric program per (config, stream layout, data plane);
-    budgets, seeds and priors are data, so every grid with the same
-    shapes re-enters the same executable. The state stack is donated."""
-    body = evaluate.stream_body(cfg, batch_size)
+def _cached_grid_fn(statics, stream_axes, batch_size):
+    """One jitted fabric program per (Statics, stream layout, data
+    plane); budgets, seeds, priors and hyper-parameters are data, so
+    every grid with the same shapes re-enters the same executable. The
+    state stack is donated."""
+    body = evaluate.stream_body(statics, batch_size)
 
     def one(state, x, rm, cm):
         TRACE_COUNT[0] += 1       # moves only while tracing
@@ -166,6 +191,60 @@ def _cached_grid_fn(cfg: RouterConfig, stream_axes, batch_size):
     )
 
 
+# ---------------------------------------------------------------------------
+# Condition-edit helpers (DESIGN.md §7 stacking rules)
+# ---------------------------------------------------------------------------
+
+
+def hyper_edit(hyper: Optional[HyperParams] = None, **overrides):
+    """A condition edit pinning hyper-parameter leaves — the way a
+    (α, γ, ...) grid joins the fused condition axis (DESIGN.md §9).
+
+    ``sweep.run_grid(cfg, env, budgets, condition_edits=[
+        sweep.hyper_edit(alpha=0.05, gamma=0.997), ...])``
+    """
+    if hyper is not None:
+        hyper.validate()
+    if overrides:
+        HyperParams.validate_fields(**overrides)
+
+    def edit(st: RouterState) -> RouterState:
+        return types_lib.with_hyperparams(st, hyper=hyper, **overrides)
+
+    return edit
+
+
+def warmup_edit(cfg: RouterConfig, priors, n_eff: float):
+    """A condition edit applying the §3.4 warm start — per-condition
+    ``n_eff`` (e.g. derived from gamma via Eq. 13) stacked on the grid
+    axis. Identical math to ``make_states(priors=..., n_eff=...)``, so
+    fused cells stay bit-identical to their looped counterparts."""
+    padded = evaluate.pad_priors(cfg, list(priors))
+
+    def edit(st: RouterState) -> RouterState:
+        return warmup.apply_warmup(cfg, st, padded, n_eff)
+
+    return edit
+
+
+def chain_edits(*edits):
+    """Compose condition edits left-to-right (``None`` entries skipped);
+    returns None when nothing remains, matching ``condition_edits``'
+    no-op convention."""
+    live = tuple(e for e in edits if e is not None)
+    if not live:
+        return None
+    if len(live) == 1:
+        return live[0]
+
+    def edit(st: RouterState) -> RouterState:
+        for e in live:
+            st = e(st)
+        return st
+
+    return edit
+
+
 def run_grid(
     cfg: RouterConfig,
     env: Environment | Sequence[Environment],
@@ -173,13 +252,14 @@ def run_grid(
     seeds: Sequence[int] = tuple(range(20)),
     *,
     priors: Optional[Sequence[ArmPrior | None]] = None,
-    n_eff: float = 0.0,
+    n_eff: float | Sequence[float] = 0.0,
     pacer_enabled: bool = True,
     shuffle: bool = True,
     batch_size: Optional[int] = None,
     condition_edits: Optional[Sequence[Optional[Callable]]] = None,
     devices=None,
     return_states: bool = False,
+    hyper: Optional[HyperParams] = None,
 ):
     """Evaluate a (budget x seed) grid as one compiled, sharded call.
 
@@ -188,6 +268,13 @@ def run_grid(
     states, same scan bodies. ``condition_edits`` optionally applies one
     extra pure state edit per condition (aligned with ``budgets``) for
     state-leaf axes beyond the ceiling.
+
+    ``hyper`` leaves and ``n_eff`` may be per-condition (C,) vectors
+    (DESIGN.md §9): they are repeated S times onto the flattened stack
+    and applied inside ``make_states``' single vmap — the cheap way to
+    put an (α, γ, n_eff) grid on the condition axis (``condition_edits``
+    pays one eager vmapped edit per condition instead, which dominates
+    wall clock on wide grids).
 
     ``devices`` defaults to ``jax.devices()``; the flattened C*S axis is
     sharded over the largest device count dividing it.
@@ -198,7 +285,9 @@ def run_grid(
         cfg, env, seeds, shuffle)
     states = evaluate.make_states(
         cfg, env0, flat_b, flat_s,
-        priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
+        priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
+        pacer_enabled=pacer_enabled,
+        hyper=_expand_hyper(hyper, C, S),
     )
     if condition_edits is not None:
         assert len(condition_edits) == C, (len(condition_edits), C)
@@ -206,7 +295,7 @@ def run_grid(
     states, streams = _shard_grid(
         states, (xs, rmat, cmat), stream_axes, C, devices)
 
-    fn = _cached_grid_fn(cfg, stream_axes, batch_size)
+    fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size)
     finals, (arms, r, c, lam) = fn(states, *streams)
     res = GridResult(
         budgets=budgets, seeds=seeds,
@@ -235,10 +324,10 @@ def _cached_scenario_grid_fn(
     batch_size,
 ):
     """Fabric program around the scenario engine's segmented-scan body,
-    cached like ``scenario.compiled_runner`` (config, spec, rate card,
-    batch size) — budgets and seeds stay data."""
-    key = (cfg, scenario_lib.spec_key(spec), scenario_lib._env_sig(env),
-           batch_size)
+    cached like ``scenario.compiled_runner`` (statics, spec, rate card,
+    batch size) — budgets, seeds and hyper-parameters stay data."""
+    key = (cfg.statics, scenario_lib.spec_key(spec),
+           scenario_lib._env_sig(env), batch_size)
 
     def make():
         body = scenario_lib.spec_body(cfg, spec, env, batch_size)
@@ -261,11 +350,13 @@ def run_scenario_grid(
     seeds: Sequence[int] = tuple(range(20)),
     *,
     priors: Optional[Sequence[ArmPrior | None]] = None,
-    n_eff: float = 0.0,
+    n_eff: float | Sequence[float] = 0.0,
     pacer_enabled: bool = True,
     batch_size: Optional[int] = None,
     devices=None,
     return_states: bool = False,
+    hyper: Optional[HyperParams] = None,
+    condition_edits: Optional[Sequence[Optional[Callable]]] = None,
 ):
     """One multi-event scenario across a budget grid as one compiled,
     sharded call — per condition equivalent to ``evaluate.run_scenario``
@@ -280,9 +371,13 @@ def run_scenario_grid(
     xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds)
     states = evaluate.make_states(
         cfg, env, flat_b, flat_s,
-        priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
-        active_arms=spec.init_active,
+        priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
+        pacer_enabled=pacer_enabled,
+        active_arms=spec.init_active, hyper=_expand_hyper(hyper, C, S),
     )
+    if condition_edits is not None:
+        assert len(condition_edits) == C, (len(condition_edits), C)
+        states = _apply_condition_edits(states, condition_edits, S)
     states, streams = _shard_grid(states, (xs, rmat, cmat), 0, C, devices)
 
     fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size)

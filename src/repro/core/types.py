@@ -6,12 +6,28 @@ registered pytree of fixed-capacity arrays (``max_arms`` slots with an
 shapes and the jitted step functions never recompile on portfolio changes
 (the paper's hot-swap registry, §3.6).
 
-All hyper-parameters are static and live in ``RouterConfig`` (hashable, so
-it can be a jit static argument).
+Configuration is split in two (DESIGN.md §9):
+
+  * ``Statics``     — shape/trace-affecting knobs (``d``, ``max_arms``,
+                      ``backend``, ``dt_max``, ``forced_pulls``). Hashable;
+                      the key for every compiled-program cache. Changing a
+                      static means a new program.
+  * ``HyperParams`` — the continuous knobs of Algorithm 1 (α, γ, λ_c, ...)
+                      as a registered pytree. They ride in
+                      ``RouterState.hyper`` as traced f32 leaves, so an
+                      operator can retune a live router — and a sweep can
+                      stack a whole (α, γ) grid on the condition axis —
+                      without a single recompile.
+
+``RouterConfig`` remains the user-facing constructor: its static fields
+ARE the statics, and ``cfg.hyper`` is the default ``HyperParams`` seeded
+into ``init_state``. Legacy hyper kwargs (``RouterConfig(alpha=...)``)
+still work for one release behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -20,36 +36,208 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class RouterConfig:
-    """Static hyper-parameters of Algorithm 1.
+class HyperParams:
+    """Algorithm 1's continuous hyper-parameters as a pytree (state leaf).
 
-    Defaults are the paper's production configuration (knee-point selection,
-    Appendix A Table 3): alpha=0.01, gamma=0.997, n_eff=1164.
+    Defaults are the paper's production configuration (knee-point
+    selection, Appendix A Table 3): alpha=0.01, gamma=0.997, n_eff=1164.
+
+    Fields hold Python floats at construction time and f32 scalars (or
+    stacked (N,) vectors, in a sweep-fabric grid) once loaded into
+    ``RouterState.hyper`` via ``as_leaves``/``init_state``.
     """
+
+    alpha: float | Array = 0.01          # UCB exploration coefficient
+    gamma: float | Array = 0.997         # geometric forgetting factor, §3.3
+    lambda_c: float | Array = 0.3        # static cost penalty weight, Eq. 2
+    lambda0: float | Array = 1.0         # ridge regularisation A_a = lambda0*I
+    eta: float | Array = 0.05            # dual ascent step size, Eq. 4
+    alpha_ema: float | Array = 0.05      # EMA smoothing of the cost, Eq. 3
+    lambda_bar: float | Array = 5.0      # projection cap for lambda_t, Eq. 4
+    v_max: float | Array = 200.0         # staleness-inflation cap, Eq. 9
+    c_floor: float | Array = 1e-4        # market cost floor ($/1k tok), Eq. 6
+    c_ceil: float | Array = 0.1          # market cost ceiling ($/1k tok), Eq. 6
+    tiebreak_scale: float | Array = 1e-7  # random tiebreak noise amplitude
+
+    _RANGES = {
+        "alpha": (lambda v: v >= 0.0, ">= 0"),
+        "gamma": (lambda v: 0.0 < v <= 1.0, "in (0, 1]"),
+        "lambda_c": (lambda v: v >= 0.0, ">= 0"),
+        "lambda0": (lambda v: v > 0.0, "> 0"),
+        "eta": (lambda v: v >= 0.0, ">= 0"),
+        "alpha_ema": (lambda v: 0.0 < v <= 1.0, "in (0, 1]"),
+        "lambda_bar": (lambda v: v >= 0.0, ">= 0"),
+        "v_max": (lambda v: v >= 1.0, ">= 1"),
+        "c_floor": (lambda v: v > 0.0, "> 0"),
+        "c_ceil": (lambda v: v > 0.0, "> 0"),
+        "tiebreak_scale": (lambda v: v >= 0.0, ">= 0"),
+    }
+
+    @staticmethod
+    def validate_fields(**fields) -> None:
+        """Range-check the given *concrete* values, raising ``ValueError``
+        (not ``assert``, which vanishes under ``python -O``). Traced or
+        stacked leaves cannot be inspected here; ``gamma`` is additionally
+        clamp-checked at runtime (linucb.forgetting_factor)."""
+        for name, v in fields.items():
+            if name not in HYPER_FIELDS:
+                raise TypeError(f"unknown hyper-parameter: {name!r}")
+            if not isinstance(v, (int, float)):
+                continue  # traced / stacked leaf: runtime-clamped instead
+            ok, want = HyperParams._RANGES[name]
+            if not ok(float(v)):
+                raise ValueError(f"HyperParams.{name}={v!r}: must be {want}")
+        cf, cc = fields.get("c_floor"), fields.get("c_ceil")
+        if (isinstance(cf, (int, float)) and isinstance(cc, (int, float))
+                and not float(cc) > float(cf)):
+            raise ValueError(
+                f"HyperParams.c_ceil={cc!r} must exceed c_floor={cf!r}")
+
+    def validate(self) -> "HyperParams":
+        """Range-check every concrete field (see ``validate_fields``)."""
+        self.validate_fields(
+            **{n: getattr(self, n) for n in HYPER_FIELDS})
+        return self
+
+    def as_leaves(self) -> "HyperParams":
+        """Every field as an f32 array — the state-leaf representation."""
+        return HyperParams(**{
+            n: jnp.asarray(getattr(self, n), jnp.float32)
+            for n in HYPER_FIELDS
+        })
+
+    def updated(self, **overrides) -> "HyperParams":
+        """Copy with ``overrides`` applied (validated when concrete)."""
+        bad = set(overrides) - set(HYPER_FIELDS)
+        if bad:
+            raise TypeError(f"unknown hyper-parameters: {sorted(bad)}")
+        return dataclasses.replace(self, **overrides).validate()
+
+
+HYPER_FIELDS = tuple(f.name for f in dataclasses.fields(HyperParams))
+
+
+def _concrete(v):
+    """A hyper leaf as a host float when possible (scalar float or
+    concrete 0-d array), else None (tracer or stacked vector)."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    if isinstance(v, jax.core.Tracer):
+        return None
+    try:
+        if jnp.ndim(v) == 0:
+            return float(v)
+    except TypeError:
+        pass
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Statics:
+    """Shape/trace-affecting router configuration — the compiled-program
+    identity. Hashable; every jit/runner cache keys on this (and ONLY
+    this: hyper-parameters are data and never force a retrace)."""
 
     d: int = 26                  # context dim (25 PCA + bias), §2.2
     max_arms: int = 8            # fixed registry capacity (K <= max_arms)
-    alpha: float = 0.01          # UCB exploration coefficient
-    gamma: float = 0.997         # geometric forgetting factor, §3.3
-    lambda_c: float = 0.3        # static cost penalty weight, Eq. 2
-    lambda0: float = 1.0         # ridge regularisation A_a = lambda0*I
-    eta: float = 0.05            # dual ascent step size, Eq. 4
-    alpha_ema: float = 0.05      # EMA smoothing of the cost signal, Eq. 3
-    lambda_bar: float = 5.0      # projection cap for lambda_t, Eq. 4
-    v_max: float = 200.0         # staleness-inflation cap, Eq. 9
-    c_floor: float = 1e-4        # market cost floor ($/1k tok), Eq. 6
-    c_ceil: float = 0.1          # market cost ceiling ($/1k tok), Eq. 6
     forced_pulls: int = 20       # burn-in pulls for a hot-swapped arm, §4.5
     dt_max: int = 4096           # numerical clamp on forgetting exponents
-    tiebreak_scale: float = 1e-7  # random tiebreak noise amplitude
     backend: str = "jnp"         # batched scoring backend (DESIGN.md §2):
                                  # "jnp" oracle or "pallas" TPU kernel
 
     def __post_init__(self):
-        assert 0.0 < self.gamma <= 1.0, "gamma must be in (0, 1]"
-        assert self.d >= 2 and self.max_arms >= 1
-        assert self.backend in ("jnp", "pallas"), self.backend
+        if self.d < 2:
+            raise ValueError(f"d={self.d}: need >= 2 (features + bias)")
+        if self.max_arms < 1:
+            raise ValueError(f"max_arms={self.max_arms}: need >= 1")
+        if self.forced_pulls < 0:
+            raise ValueError(f"forced_pulls={self.forced_pulls}: need >= 0")
+        if self.dt_max < 1:
+            raise ValueError(f"dt_max={self.dt_max}: need >= 1")
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"backend={self.backend!r}: have ('jnp', 'pallas')")
+
+    @property
+    def statics(self) -> "Statics":
+        return self
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class RouterConfig:
+    """User-facing router configuration: ``Statics`` fields + the default
+    ``HyperParams`` seeded into new states.
+
+    Hyper-parameters are constructed via ``hyper=HyperParams(...)``; the
+    pre-split flat kwargs (``RouterConfig(alpha=0.05)``) forward into the
+    default ``HyperParams`` under a ``DeprecationWarning`` for one
+    release. ``cfg.alpha`` etc. remain readable as properties.
+    """
+
+    d: int = 26
+    max_arms: int = 8
+    forced_pulls: int = 20
+    dt_max: int = 4096
+    backend: str = "jnp"
+    hyper: HyperParams = HyperParams()
+
+    def __init__(
+        self,
+        d: int = 26,
+        max_arms: int = 8,
+        forced_pulls: int = 20,
+        dt_max: int = 4096,
+        backend: str = "jnp",
+        hyper: Optional[HyperParams] = None,
+        **legacy,
+    ):
+        bad = set(legacy) - set(HYPER_FIELDS)
+        if bad:
+            raise TypeError(f"unknown RouterConfig arguments: {sorted(bad)}")
+        if legacy:
+            if hyper is not None:
+                raise TypeError(
+                    "pass hyper=HyperParams(...) or flat hyper kwargs, "
+                    "not both")
+            warnings.warn(
+                "flat hyper-parameter kwargs on RouterConfig "
+                f"({sorted(legacy)}) are deprecated; pass "
+                "hyper=HyperParams(...) instead (DESIGN.md §9)",
+                DeprecationWarning, stacklevel=2)
+            hyper = HyperParams(**legacy)
+        object.__setattr__(self, "d", d)
+        object.__setattr__(self, "max_arms", max_arms)
+        object.__setattr__(self, "forced_pulls", forced_pulls)
+        object.__setattr__(self, "dt_max", dt_max)
+        object.__setattr__(self, "backend", backend)
+        object.__setattr__(self, "hyper", hyper or HyperParams())
+        self.__post_init__()
+
+    def __post_init__(self):
+        # Field ranges mirror Statics (ValueError, not assert: validation
+        # must survive ``python -O``).
+        Statics(self.d, self.max_arms, self.forced_pulls, self.dt_max,
+                self.backend)
+        self.hyper.validate()
+
+    @property
+    def statics(self) -> Statics:
+        """The trace-identity projection — the cache key for every
+        compiled program (evaluate/scenario/sweep runner caches)."""
+        return Statics(self.d, self.max_arms, self.forced_pulls,
+                       self.dt_max, self.backend)
+
+
+def _mk_hyper_property(name: str):
+    return property(
+        lambda self: getattr(self.hyper, name),
+        doc=f"Read-through to ``hyper.{name}`` (pre-split compatibility).")
+
+
+for _name in HYPER_FIELDS:
+    setattr(RouterConfig, _name, _mk_hyper_property(_name))
 
 
 @jax.tree_util.register_dataclass
@@ -67,7 +255,8 @@ class PacerState:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class RouterState:
-    """Full ParetoBandit state: per-arm sufficient statistics + pacer.
+    """Full ParetoBandit state: per-arm sufficient statistics + pacer +
+    the live hyper-parameters.
 
     Shapes use K = cfg.max_arms, d = cfg.d.
     """
@@ -86,6 +275,37 @@ class RouterState:
     force_arm: Array   # scalar i32, -1 when no forced exploration
     force_left: Array  # scalar i32, remaining forced pulls
     key: Array         # PRNG key for random tiebreaks
+    hyper: HyperParams  # live (α, γ, λ_c, ...) — f32 leaves, retunable
+
+
+def with_hyperparams(
+    state: RouterState,
+    hyper: Optional[HyperParams] = None,
+    **overrides,
+) -> RouterState:
+    """Retune a state's hyper-parameters in place (pure; jit/vmap-safe).
+
+    Either a full replacement ``hyper`` or field ``overrides`` on the
+    state's current values. The per-condition ``hyper_edit`` of the sweep
+    fabric, the scenario engine's ``HyperShift`` event and
+    ``PortfolioServer.set_hyperparams`` all lower to this.
+    """
+    hp = state.hyper if hyper is None else hyper.validate().as_leaves()
+    if overrides:
+        HyperParams.validate_fields(**overrides)  # before they become arrays
+        hp = dataclasses.replace(hp, **{
+            k: jnp.asarray(v, jnp.float32) for k, v in overrides.items()
+        })
+        # Cross-field check against the MERGED values: overriding only
+        # c_ceil below the state's current c_floor would silently zero
+        # the Eq. 6 cost range. Best effort — traced or stacked leaves
+        # cannot be compared here.
+        cf, cc = _concrete(hp.c_floor), _concrete(hp.c_ceil)
+        if cf is not None and cc is not None and not cc > cf:
+            raise ValueError(
+                f"HyperParams.c_ceil={cc!r} must exceed c_floor={cf!r} "
+                "(merged with the state's current values)")
+    return dataclasses.replace(state, hyper=hp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,15 +320,17 @@ class ArmPrior:
         return jnp.linalg.solve(self.A_off, self.b_off)
 
 
-def log_normalized_cost(price_per_1k: Array, cfg: RouterConfig) -> Array:
+def log_normalized_cost(price_per_1k: Array, hp: HyperParams) -> Array:
     """Eq. 6: compress the ~530x price range into [0, 1] on a log scale.
 
     ``price_per_1k`` is the blended $/1k-token rate. Values at or below the
     market floor map to 0 (the paper: "any model priced at or below the
     floor is treated as zero-cost").
     """
-    num = jnp.log(jnp.maximum(price_per_1k, cfg.c_floor)) - jnp.log(cfg.c_floor)
-    den = jnp.log(cfg.c_ceil) - jnp.log(cfg.c_floor)
+    c_floor = jnp.asarray(hp.c_floor, jnp.float32)
+    c_ceil = jnp.asarray(hp.c_ceil, jnp.float32)
+    num = jnp.log(jnp.maximum(price_per_1k, c_floor)) - jnp.log(c_floor)
+    den = jnp.log(c_ceil) - jnp.log(c_floor)
     return jnp.clip(num / den, 0.0, 1.0)
 
 
@@ -121,6 +343,7 @@ def init_state(
     key: Optional[Array] = None,
     active: Optional[jnp.ndarray] = None,
     pacer_enabled: bool = True,
+    hyper: Optional[HyperParams] = None,
 ) -> RouterState:
     """Uninformative (tabula-rasa) initial state; warm start via warmup.py.
 
@@ -129,16 +352,18 @@ def init_state(
         hard ceiling and reported compliance).
       prices_per_1k: (K,) blended $/1k-token rate per arm (drives Eq. 6).
       budget: operator ceiling B in $/request.
+      hyper: overrides ``cfg.hyper`` as the state's live hyper-parameters.
     """
     K, d = cfg.max_arms, cfg.d
+    hp = (cfg.hyper if hyper is None else hyper).as_leaves()
     prices_per_req = jnp.asarray(prices_per_req, jnp.float32)
     prices_per_1k = jnp.asarray(prices_per_1k, jnp.float32)
     assert prices_per_req.shape == (K,), (prices_per_req.shape, K)
     if active is None:
         active = jnp.ones((K,), bool)
     eye = jnp.eye(d, dtype=jnp.float32)
-    A = jnp.tile(eye[None] * cfg.lambda0, (K, 1, 1))
-    A_inv = jnp.tile(eye[None] / cfg.lambda0, (K, 1, 1))
+    A = jnp.tile(eye[None], (K, 1, 1)) * hp.lambda0
+    A_inv = jnp.tile(eye[None], (K, 1, 1)) / hp.lambda0
     if key is None:
         key = jax.random.PRNGKey(0)
     return RouterState(
@@ -150,7 +375,7 @@ def init_state(
         last_play=jnp.zeros((K,), jnp.int32),
         active=jnp.asarray(active, bool),
         price=prices_per_req,
-        c_tilde=log_normalized_cost(prices_per_1k, cfg),
+        c_tilde=log_normalized_cost(prices_per_1k, hp),
         t=jnp.zeros((), jnp.int32),
         pacer=PacerState(
             lam=jnp.zeros((), jnp.float32),
@@ -161,4 +386,5 @@ def init_state(
         force_arm=jnp.asarray(-1, jnp.int32),
         force_left=jnp.zeros((), jnp.int32),
         key=key,
+        hyper=hp,
     )

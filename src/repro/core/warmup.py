@@ -12,7 +12,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ArmPrior, RouterConfig, RouterState
+from repro.core.types import ArmPrior, HyperParams, RouterConfig, RouterState
 
 Array = jax.Array
 
@@ -26,20 +26,24 @@ def fit_offline_prior(xs: Array, rs: Array, lambda0: float = 1.0) -> ArmPrior:
     return ArmPrior(A_off=A.astype(jnp.float32), b_off=b.astype(jnp.float32))
 
 
-def scale_prior(cfg: RouterConfig, prior: ArmPrior, n_eff: float):
+def scale_prior(cfg: RouterConfig, hp: HyperParams, prior: ArmPrior,
+                n_eff: float):
     """Eqs. 10-12.
 
       s   = n_eff / A_off[d-1, d-1]          (bias-direction precision mass)
       A   = s * A_off + lambda0 * I
       b   = s * b_off + lambda0 * theta_off   (mean-preserving correction)
+
+    ``hp`` supplies lambda0 — a traced hyper leaf, so warm starts compose
+    inside jitted programs (sweep condition edits, scenario AddArm).
     """
     d = cfg.d
     assert prior.A_off.shape == (d, d), prior.A_off.shape
     mass = prior.A_off[d - 1, d - 1]
     s = n_eff / jnp.maximum(mass, 1e-12)
     theta_off = jnp.linalg.solve(prior.A_off, prior.b_off)
-    A = s * prior.A_off + cfg.lambda0 * jnp.eye(d, dtype=jnp.float32)
-    b = s * prior.b_off + cfg.lambda0 * theta_off
+    A = s * prior.A_off + hp.lambda0 * jnp.eye(d, dtype=jnp.float32)
+    b = s * prior.b_off + hp.lambda0 * theta_off
     return A, b
 
 
@@ -54,7 +58,7 @@ def apply_warmup(
     for k, prior in enumerate(priors):
         if prior is None:
             continue
-        A_k, b_k = scale_prior(cfg, prior, n_eff)
+        A_k, b_k = scale_prior(cfg, state.hyper, prior, n_eff)
         Ainv_k = jnp.linalg.inv(A_k)
         A = A.at[k].set(A_k)
         A_inv = A_inv.at[k].set(Ainv_k)

@@ -6,6 +6,11 @@ gateway QPS the request batch is the long axis; the kernel tiles requests
 (rows) and keeps all K arms' (d x d) inverses resident in VMEM
 (K<=8, d<=128 -> 512 KB f32 worst case). Each arm's quadratic form is one
 (br x d) x (d x d) MXU matmul plus an elementwise reduce.
+
+``alpha`` is a (1, 1) scalar *operand*, not a trace constant (DESIGN.md
+§9): hyper-parameters are data, so one compiled kernel serves every
+exploration coefficient — including a whole (α, γ) grid batched over the
+sweep fabric's flattened (condition x seed) vmap axis.
 """
 from __future__ import annotations
 
@@ -22,11 +27,13 @@ def _score_kernel(
     ainv_ref,   # (K, d, d)
     pen_ref,    # (1, K)  (lambda_c + lam) * c_tilde
     infl_ref,   # (1, K)  max(gamma^dt, 1/V_max)
+    alpha_ref,  # (1, 1)  UCB exploration coefficient (traced hyper leaf)
     o_ref,      # (br, K)
-    *, num_arms: int, alpha: float,
+    *, num_arms: int,
 ):
     x = x_ref[...].astype(jnp.float32)                     # (br, d)
     theta = theta_ref[...].astype(jnp.float32)             # (K, d)
+    alpha = alpha_ref[0, 0].astype(jnp.float32)
     exploit = jax.lax.dot_general(
         x, theta, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -51,8 +58,8 @@ def linucb_score_blocked(
     ainv: jax.Array,   # (K, d, d)
     pen: jax.Array,    # (1, K)
     infl: jax.Array,   # (1, K)
+    alpha: jax.Array,  # (1, 1)
     *,
-    alpha: float,
     block_r: int = 256,
     interpret: bool = False,
 ):
@@ -60,7 +67,7 @@ def linucb_score_blocked(
     K = theta.shape[0]
     block_r = min(block_r, R)
     assert R % block_r == 0
-    kernel = functools.partial(_score_kernel, num_arms=K, alpha=alpha)
+    kernel = functools.partial(_score_kernel, num_arms=K)
     return pl.pallas_call(
         kernel,
         grid=(R // block_r,),
@@ -70,8 +77,9 @@ def linucb_score_blocked(
             pl.BlockSpec((K, d, d), lambda i: (0, 0, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
             pl.BlockSpec((1, K), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_r, K), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
         interpret=interpret,
-    )(x, theta, ainv, pen, infl)
+    )(x, theta, ainv, pen, infl, alpha)

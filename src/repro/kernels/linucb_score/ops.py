@@ -1,5 +1,6 @@
 """jit'd wrapper: pads (requests, d, arms) to kernel-friendly shapes and
-derives the Eq. 2 penalty/inflation vectors from RouterState."""
+feeds the Eq. 2 penalty/inflation vectors plus the traced ``alpha``
+scalar operand (hyper-parameters are data — DESIGN.md §9)."""
 from __future__ import annotations
 
 import functools
@@ -11,15 +12,17 @@ from repro.kernels.linucb_score.kernel import linucb_score_blocked
 
 
 @functools.partial(
-    jax.jit, static_argnames=("alpha", "block_r", "interpret", "pad_d")
+    jax.jit, static_argnames=("block_r", "interpret", "pad_d")
 )
 def linucb_score(
-    x, theta, ainv, pen, infl, *, alpha: float, block_r: int = 256,
+    x, theta, ainv, pen, infl, alpha, *, block_r: int = 256,
     interpret: bool = True, pad_d: int = 32,
 ):
     """x (R,d), theta (K,d), ainv (K,d,d), pen (K,), infl (K,) -> (R,K).
 
-    d is padded to a lane-friendly multiple (zero-padded contexts leave the
+    ``alpha`` is a traced scalar operand (array or float), so sweeping the
+    exploration coefficient re-enters the same compiled kernel. d is
+    padded to a lane-friendly multiple (zero-padded contexts leave the
     quadratic form unchanged); R is padded to the row block.
     """
     R, d = x.shape
@@ -34,6 +37,7 @@ def linucb_score(
         x = jnp.pad(x, [(0, pr), (0, 0)])
     out = linucb_score_blocked(
         x, theta, ainv, pen[None, :], infl[None, :],
-        alpha=alpha, block_r=block_r, interpret=interpret,
+        jnp.asarray(alpha, jnp.float32).reshape(1, 1),
+        block_r=block_r, interpret=interpret,
     )
     return out[:R]

@@ -31,7 +31,10 @@ from repro.core import registry as registry_lib
 from repro.core import router as router_lib
 from repro.core.costs import ArmPricing
 from repro.core.features import PCAWhitener, hash_encode, hash_encode_batch
-from repro.core.types import RouterConfig, RouterState, init_state
+from repro.core.types import (
+    HYPER_FIELDS, HyperParams, RouterConfig, RouterState, init_state,
+    with_hyperparams,
+)
 from repro.models import decode_step, init_model, prefill_forward
 from repro.models.config import ModelConfig
 from repro.serving.feedback_store import InMemoryFeedbackStore
@@ -183,8 +186,11 @@ class PortfolioServer:
             key=jax.random.PRNGKey(seed), active=jnp.asarray(active),
         )
         # context cache for async feedback (§3.6): in-memory default,
-        # SQLiteFeedbackStore for durable multi-worker deployments
-        self._ctx_cache = feedback_store or InMemoryFeedbackStore()
+        # SQLiteFeedbackStore for durable multi-worker deployments.
+        # Explicit None check: a just-constructed store is empty, and
+        # ``len() == 0`` makes it falsy — ``or`` would silently discard it.
+        self._ctx_cache = (InMemoryFeedbackStore() if feedback_store is None
+                           else feedback_store)
         # Late/duplicate/unknown rewards are skipped, not raised on — the
         # async path faces redelivery and replay; operators watch this.
         self.dropped_feedback = 0
@@ -215,6 +221,43 @@ class PortfolioServer:
         from repro.core import pacer
         self.state = dataclasses.replace(
             self.state, pacer=pacer.set_budget(self.state.pacer, budget))
+
+    def set_hyperparams(self, hyper: Optional[HyperParams] = None,
+                        **overrides) -> HyperParams:
+        """Retune the live router's hyper-parameters with ZERO retraces.
+
+        They live in ``RouterState.hyper`` as traced f32 leaves (DESIGN.md
+        §9), so replacing their *values* keeps the state's pytree
+        structure — and therefore the jitted select/update programs —
+        intact; only a shape/dtype change could force a recompile, and
+        this setter cannot produce one. Pass a full ``HyperParams`` or
+        field overrides (``srv.set_hyperparams(alpha=0.05)``); values are
+        range-validated (ValueError) before they touch the state.
+        Returns the now-live concrete ``HyperParams``.
+        """
+        self.state = with_hyperparams(self.state, hyper=hyper, **overrides)
+        return self.hyperparams()
+
+    def hyperparams(self) -> HyperParams:
+        """The live hyper-parameters as concrete floats (operator view)."""
+        return HyperParams(**{
+            n: float(np.asarray(getattr(self.state.hyper, n)))
+            for n in HYPER_FIELDS
+        })
+
+    def metrics(self) -> Dict[str, float]:
+        """Operator counters: feedback-store depth (contexts awaiting
+        rewards), total dropped feedback (unknown/duplicate/retired-arm),
+        and entries aged out by the store TTL (never-arriving rewards)."""
+        store = self._ctx_cache
+        if hasattr(store, "sweep_expired"):
+            store.sweep_expired()   # fold aged-out entries into the count
+        return {
+            "store_depth": int(len(store)),
+            "store_ttl_s": getattr(store, "ttl", None),
+            "dropped_feedback": int(self.dropped_feedback),
+            "expired_feedback": int(getattr(store, "expired_total", 0)),
+        }
 
     # -- request path -------------------------------------------------------
     def featurize(self, prompt: str) -> jnp.ndarray:

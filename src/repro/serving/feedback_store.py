@@ -5,61 +5,137 @@ hours later (human RLHF labels, batch metrics) can update the bandit
 without re-encoding the prompt. Two backends, as in the paper: in-memory
 (process-local) and SQLite (survives restarts, sharable across gateway
 workers).
+
+Both stores support a TTL: entries whose rewards never arrive (client
+crashed, judge queue dropped the job) would otherwise live forever and
+leak memory at gateway QPS. An entry older than ``ttl`` seconds is
+treated as absent — ``pop`` deletes it and counts it in
+``expired_total`` — and ``sweep_expired()`` bulk-evicts for periodic
+housekeeping. ``PortfolioServer.metrics()`` exports depth / drop /
+expiry counters for operators.
 """
 from __future__ import annotations
 
+import collections
 import sqlite3
 import threading
-from typing import Dict, Optional, Tuple
+import time
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 
 class InMemoryFeedbackStore:
-    def __init__(self):
-        self._d: Dict[int, Tuple[np.ndarray, int]] = {}
+    """Process-local context cache with optional ageing.
+
+    ``ttl`` is in seconds (None = keep forever); ``clock`` is injectable
+    for tests (defaults to ``time.monotonic``).
+    """
+
+    def __init__(self, ttl: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        # insertion-ordered: puts are timestamped monotonically, so the
+        # expired prefix is always at the front and sweeps are O(expired)
+        self._d: "collections.OrderedDict[int, Tuple[np.ndarray, int, float]]" = (
+            collections.OrderedDict())
         self._lock = threading.Lock()
+        self.ttl = ttl
+        self._clock = clock
+        self.expired_total = 0
 
     def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
+        now = self._clock()
         with self._lock:
-            self._d[request_id] = (np.asarray(context, np.float32), int(arm))
+            self._d[request_id] = (
+                np.asarray(context, np.float32), int(arm), now)
+            self._d.move_to_end(request_id)  # re-put keeps time order
+            self._sweep_locked(now)
 
     def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
         with self._lock:
-            return self._d.pop(request_id, None)
+            hit = self._d.pop(request_id, None)
+            if hit is None:
+                return None
+            ctx, arm, ts = hit
+            if self.ttl is not None and self._clock() - ts > self.ttl:
+                self.expired_total += 1   # reward arrived after the TTL
+                return None
+            return ctx, arm
+
+    def sweep_expired(self) -> int:
+        """Evict every aged-out entry; returns how many were dropped."""
+        with self._lock:
+            before = self.expired_total
+            self._sweep_locked(self._clock())
+            return self.expired_total - before
+
+    def _sweep_locked(self, now: float) -> None:
+        if self.ttl is None:
+            return
+        while self._d:
+            rid, (_, _, ts) = next(iter(self._d.items()))
+            if now - ts <= self.ttl:
+                break
+            del self._d[rid]
+            self.expired_total += 1
 
     def __len__(self) -> int:
         return len(self._d)
 
 
 class SQLiteFeedbackStore:
-    """Durable context cache: (request_id, context blob, arm)."""
+    """Durable context cache: (request_id, context blob, arm, created_at).
 
-    def __init__(self, path: str = ":memory:"):
+    Same TTL contract as ``InMemoryFeedbackStore``. ``clock`` defaults to
+    ``time.time`` so ``created_at`` stays meaningful across process
+    restarts (the whole point of the durable store).
+    """
+
+    def __init__(self, path: str = ":memory:", ttl: Optional[float] = None,
+                 clock: Callable[[], float] = time.time):
         self._conn = sqlite3.connect(path, check_same_thread=False)
         self._lock = threading.Lock()
+        self.ttl = ttl
+        self._clock = clock
+        self.expired_total = 0
         self._conn.execute(
             "CREATE TABLE IF NOT EXISTS ctx ("
             " request_id INTEGER PRIMARY KEY,"
             " context BLOB NOT NULL,"
             " dim INTEGER NOT NULL,"
-            " arm INTEGER NOT NULL)"
+            " arm INTEGER NOT NULL,"
+            " created_at REAL NOT NULL DEFAULT 0)"
         )
+        # Migrate pre-TTL databases (no created_at column) in place.
+        # Legacy rows are stamped with the migration time, NOT 0: a
+        # created_at of 0 would read as decades old, so the first TTL'd
+        # reopen would expire every in-flight context written seconds
+        # before the restart — exactly what the durable store exists to
+        # survive. Ageing starts at upgrade instead.
+        cols = {r[1] for r in self._conn.execute("PRAGMA table_info(ctx)")}
+        if "created_at" not in cols:
+            self._conn.execute(
+                "ALTER TABLE ctx ADD COLUMN created_at REAL NOT NULL "
+                "DEFAULT 0")
+            self._conn.execute("UPDATE ctx SET created_at = ?",
+                               (float(self._clock()),))
         self._conn.commit()
 
     def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
         c = np.asarray(context, np.float32)
         with self._lock:
             self._conn.execute(
-                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?)",
-                (int(request_id), c.tobytes(), c.size, int(arm)),
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?)",
+                (int(request_id), c.tobytes(), c.size, int(arm),
+                 float(self._clock())),
             )
             self._conn.commit()
 
     def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
         with self._lock:
             row = self._conn.execute(
-                "SELECT context, dim, arm FROM ctx WHERE request_id = ?",
+                "SELECT context, dim, arm, created_at FROM ctx "
+                "WHERE request_id = ?",
                 (int(request_id),),
             ).fetchone()
             if row is None:
@@ -68,8 +144,26 @@ class SQLiteFeedbackStore:
                 "DELETE FROM ctx WHERE request_id = ?", (int(request_id),)
             )
             self._conn.commit()
-        blob, dim, arm = row
+            blob, dim, arm, created = row
+            if (self.ttl is not None
+                    and self._clock() - float(created) > self.ttl):
+                self.expired_total += 1   # reward arrived after the TTL
+                return None
         return np.frombuffer(blob, np.float32, count=dim).copy(), int(arm)
+
+    def sweep_expired(self) -> int:
+        """Evict every aged-out row; returns how many were dropped."""
+        if self.ttl is None:
+            return 0
+        with self._lock:
+            cur = self._conn.execute(
+                "DELETE FROM ctx WHERE created_at < ?",
+                (float(self._clock()) - self.ttl,),
+            )
+            self._conn.commit()
+            n = cur.rowcount if cur.rowcount and cur.rowcount > 0 else 0
+            self.expired_total += n
+            return n
 
     def __len__(self) -> int:
         return self._conn.execute("SELECT COUNT(*) FROM ctx").fetchone()[0]

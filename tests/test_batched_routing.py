@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import backend as backend_lib
 from repro.core import evaluate, linucb, pacer, registry, router, simulator
-from repro.core.types import PacerState, RouterConfig, init_state
+from repro.core.types import HyperParams, PacerState, RouterConfig, init_state
 
 RNG = np.random.default_rng(7)
 
@@ -54,7 +54,7 @@ class TestBackendEquivalence:
         (1, 3, 26), (7, 4, 26), (64, 8, 26), (256, 3, 13),
     ])
     def test_scores_match(self, B, K, d):
-        cfg = RouterConfig(d=d, max_arms=K, alpha=0.05)
+        cfg = RouterConfig(d=d, max_arms=K, hyper=HyperParams(alpha=0.05))
         theta = jnp.asarray(RNG.standard_normal((K, d)) * 0.1, jnp.float32)
         M = RNG.standard_normal((K, d, d)) * 0.1
         A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None]
@@ -63,24 +63,28 @@ class TestBackendEquivalence:
         X = rand_block(B, d, seed=B + K)
         dt = jnp.asarray(RNG.integers(0, 2000, K), jnp.int32)
         lam = jnp.float32(0.7)
-        div = backend_lib.score_divergence(cfg, theta, ainv, c_tilde, X, dt, lam)
+        div = backend_lib.score_divergence(
+            cfg, cfg.hyper.as_leaves(), theta, ainv, c_tilde, X, dt, lam)
         assert div <= backend_lib.EQUIV_TOL, div
 
     def test_batch_oracle_matches_per_request_scores(self):
         """ucb_scores_batch row i == the scalar Eq. 2 path on x_i."""
-        cfg = RouterConfig(d=8, max_arms=3, alpha=0.05)
+        cfg = RouterConfig(d=8, max_arms=3, hyper=HyperParams(alpha=0.05))
         st = warmed_state(cfg)
         X = rand_block(16, cfg.d, seed=3)
         dt = st.t - jnp.maximum(st.last_upd, st.last_play)
         got = linucb.ucb_scores_batch(
-            cfg, st.theta, st.A_inv, st.c_tilde, X, dt, st.pacer.lam)
+            cfg, st.hyper, st.theta, st.A_inv, st.c_tilde, X, dt,
+            st.pacer.lam)
         for i in range(16):
             want = linucb.ucb_scores(
-                cfg, st.theta, st.A_inv, st.c_tilde, X[i], dt, st.pacer.lam)
+                cfg, st.hyper, st.theta, st.A_inv, st.c_tilde, X[i], dt,
+                st.pacer.lam)
             np.testing.assert_allclose(got[i], want, rtol=2e-5, atol=2e-5)
 
     def test_unknown_backend_rejected(self):
-        with pytest.raises(AssertionError):
+        # ValueError, not assert: validation must survive ``python -O``
+        with pytest.raises(ValueError):
             RouterConfig(backend="cuda")
         with pytest.raises(KeyError):
             backend_lib.get_backend("cuda")
@@ -105,7 +109,8 @@ class TestSelectBatch:
     def test_matches_sequential_selects(self, bk):
         """gamma=1 removes staleness inflation, so the frozen-dt block
         decision is exactly the sequential no-feedback fold."""
-        cfg = RouterConfig(d=8, max_arms=4, gamma=1.0, backend=bk)
+        cfg = RouterConfig(d=8, max_arms=4, backend=bk,
+                           hyper=HyperParams(gamma=1.0))
         st = warmed_state(cfg)
         B = 16
         X = rand_block(B, cfg.d, seed=2)
@@ -189,8 +194,8 @@ class TestUpdateBatch:
             np.random.default_rng(0).uniform(1e-5, 2e-3, 64), jnp.float32)
         q = p
         for c in costs:
-            q = pacer.pacer_update(cfg, q, c)
-        qb = pacer.pacer_update_batch(cfg, p, costs)
+            q = pacer.pacer_update(cfg.hyper, q, c)
+        qb = pacer.pacer_update_batch(cfg.hyper, p, costs)
         np.testing.assert_allclose(qb.lam, q.lam, atol=2e-6)
         np.testing.assert_allclose(qb.c_ema, q.c_ema, rtol=1e-5)
 
@@ -199,7 +204,7 @@ class TestUpdateBatch:
         p = PacerState(lam=jnp.float32(0.3), c_ema=jnp.float32(1e-3),
                        budget=jnp.float32(6.6e-4),
                        enabled=jnp.asarray(False))
-        qb = pacer.pacer_update_batch(cfg, p, jnp.full((32,), 5e-2))
+        qb = pacer.pacer_update_batch(cfg.hyper, p, jnp.full((32,), 5e-2))
         assert float(qb.lam) == pytest.approx(0.3)
         assert float(qb.c_ema) == pytest.approx(1e-3)
 
@@ -371,7 +376,8 @@ def _mk_server(backend="jnp", seed=0, judge_noise=0.0):
     # coincide exactly; noise-free judge keeps rewards order-independent.
     return PortfolioServer(
         models, whitener, budget=6.6e-4,
-        router_cfg=RouterConfig(max_arms=4, gamma=1.0, backend=backend),
+        router_cfg=RouterConfig(max_arms=4, backend=backend,
+                                hyper=HyperParams(gamma=1.0)),
         judge=SimulatedJudge(seed, noise=judge_noise),
         max_new_tokens=2, seed=seed,
     )

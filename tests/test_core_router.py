@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core import linucb, pacer, registry, router, warmup
-from repro.core.types import RouterConfig, init_state, log_normalized_cost
+from repro.core.types import (
+    HyperParams, RouterConfig, init_state, log_normalized_cost,
+)
 
 CFG = RouterConfig(d=6, max_arms=4)
 
@@ -38,14 +40,15 @@ class TestShermanMorrison:
         np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
 
     def test_repeated_updates_stay_consistent(self):
-        cfg = RouterConfig(d=6, max_arms=4, gamma=0.99)
+        cfg = RouterConfig(d=6, max_arms=4, hyper=HyperParams(gamma=0.99))
         A = jnp.eye(6) * cfg.lambda0
         A_inv = jnp.eye(6) / cfg.lambda0
         b = jnp.zeros(6)
         for i in range(30):
             x = rand_x(i)
             A, A_inv, b, theta = linucb.rank1_update(
-                cfg, A, A_inv, b, x, jnp.float32(0.5), jnp.int32(1)
+                cfg, cfg.hyper, A, A_inv, b, x, jnp.float32(0.5),
+                jnp.int32(1)
             )
         np.testing.assert_allclose(
             A_inv, jnp.linalg.inv(A), rtol=1e-3, atol=1e-4
@@ -54,27 +57,31 @@ class TestShermanMorrison:
 
 class TestForgetting:
     def test_decay_is_scalar_multiply(self):
-        cfg = RouterConfig(d=6, max_arms=4, gamma=0.9)
+        cfg = RouterConfig(d=6, max_arms=4, hyper=HyperParams(gamma=0.9))
         A = jnp.eye(6) * 2.0
         A_inv = jnp.eye(6) / 2.0
         b = jnp.ones(6)
-        A2, Ainv2, b2 = linucb.decay_statistics(cfg, A, A_inv, b, jnp.int32(3))
+        A2, Ainv2, b2 = linucb.decay_statistics(
+            cfg, cfg.hyper, A, A_inv, b, jnp.int32(3))
         np.testing.assert_allclose(A2, A * 0.9**3, rtol=1e-6)
         np.testing.assert_allclose(b2, b * 0.9**3, rtol=1e-6)
         np.testing.assert_allclose(Ainv2, A_inv / 0.9**3, rtol=1e-6)
 
     def test_gamma_one_is_standard_linucb(self):
-        cfg = RouterConfig(d=6, max_arms=4, gamma=1.0)
+        cfg = RouterConfig(d=6, max_arms=4, hyper=HyperParams(gamma=1.0))
         A = jnp.eye(6)
-        A2, _, _ = linucb.decay_statistics(cfg, A, A, jnp.ones(6), jnp.int32(100))
+        A2, _, _ = linucb.decay_statistics(
+            cfg, cfg.hyper, A, A, jnp.ones(6), jnp.int32(100))
         np.testing.assert_allclose(A2, A)
 
     def test_staleness_inflation_capped(self):
-        cfg = RouterConfig(d=6, max_arms=4, gamma=0.9, v_max=50.0)
+        cfg = RouterConfig(d=6, max_arms=4,
+                           hyper=HyperParams(gamma=0.9, v_max=50.0))
         A_inv = jnp.eye(6)
         x = rand_x(1)
-        v_fresh = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(0))
-        v_stale = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(10_000))
+        v_fresh = linucb.ucb_variance(cfg, cfg.hyper, A_inv, x, jnp.int32(0))
+        v_stale = linucb.ucb_variance(
+            cfg, cfg.hyper, A_inv, x, jnp.int32(10_000))
         assert v_stale <= 50.0 * v_fresh + 1e-4
         assert v_stale > v_fresh
 
@@ -84,24 +91,24 @@ class TestPacer:
         st = mk_state(budget=0.5)
         p = st.pacer
         for _ in range(50):
-            p = pacer.pacer_update(CFG, p, jnp.float32(5.0))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(5.0))
         assert float(p.lam) > 0.5
 
     def test_lambda_bounded(self):
         st = mk_state(budget=1e-6)
         p = st.pacer
         for _ in range(500):
-            p = pacer.pacer_update(CFG, p, jnp.float32(100.0))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(100.0))
         assert float(p.lam) <= CFG.lambda_bar + 1e-6
 
     def test_lambda_decays_when_underspending(self):
         st = mk_state(budget=1.0)
         p = st.pacer
         for _ in range(100):
-            p = pacer.pacer_update(CFG, p, jnp.float32(10.0))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(10.0))
         high = float(p.lam)
         for _ in range(300):
-            p = pacer.pacer_update(CFG, p, jnp.float32(0.0))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(0.0))
         assert float(p.lam) < high
         assert float(p.lam) >= 0.0
 
@@ -110,7 +117,7 @@ class TestPacer:
         p = st.pacer
         import dataclasses
         p = dataclasses.replace(p, lam=jnp.float32(4.0))
-        mask = pacer.hard_ceiling_mask(CFG, p, st.price, st.active)
+        mask = pacer.hard_ceiling_mask(p, st.price, st.active)
         # ceiling = 10 / 5 = 2 -> arm 2 (price 10) excluded
         assert bool(mask[0]) and bool(mask[1]) and not bool(mask[2])
         assert not bool(mask[3])  # inactive stays excluded
@@ -119,7 +126,7 @@ class TestPacer:
         st = mk_state(pacer_enabled=False)
         p = st.pacer
         for _ in range(50):
-            p = pacer.pacer_update(CFG, p, jnp.float32(100.0))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(100.0))
         assert float(p.lam) == 0.0
 
 
@@ -138,7 +145,8 @@ class TestSelect:
             assert int(dec.arm) == 0
 
     def test_cost_penalty_prefers_cheap_at_equal_quality(self):
-        cfg = RouterConfig(d=6, max_arms=4, alpha=0.0, lambda_c=0.5)
+        cfg = RouterConfig(d=6, max_arms=4,
+                           hyper=HyperParams(alpha=0.0, lambda_c=0.5))
         st = mk_state(cfg=cfg, prices=(1e-4, 0.05, 0.09, 1e9))
         # identical (zero) reward estimates -> cheapest should win
         dec, _ = router.select(cfg, st, rand_x())
@@ -214,7 +222,7 @@ class TestWarmup:
         theta_true = jnp.asarray([0.1, -0.2, 0.0, 0.3, 0.05, 0.6])
         rs = xs @ theta_true
         prior = warmup.fit_offline_prior(xs, rs)
-        A, b = warmup.scale_prior(cfg, prior, n_eff=50.0)
+        A, b = warmup.scale_prior(cfg, cfg.hyper, prior, n_eff=50.0)
         theta = jnp.linalg.solve(A, b)
         np.testing.assert_allclose(theta, prior.theta_off, rtol=0.1, atol=0.02)
 
@@ -233,8 +241,8 @@ class TestWarmup:
 class TestCostNormalization:
     def test_eq6_floor_and_ceiling(self):
         cfg = RouterConfig(d=6, max_arms=4)
-        assert float(log_normalized_cost(jnp.float32(1e-4), cfg)) == 0.0
-        assert float(log_normalized_cost(jnp.float32(2.9e-5), cfg)) == 0.0
-        assert abs(float(log_normalized_cost(jnp.float32(0.1), cfg)) - 1.0) < 1e-6
-        mid = float(log_normalized_cost(jnp.float32(5.3e-4 * 1.0), cfg))
+        assert float(log_normalized_cost(jnp.float32(1e-4), cfg.hyper)) == 0.0
+        assert float(log_normalized_cost(jnp.float32(2.9e-5), cfg.hyper)) == 0.0
+        assert abs(float(log_normalized_cost(jnp.float32(0.1), cfg.hyper)) - 1.0) < 1e-6
+        mid = float(log_normalized_cost(jnp.float32(5.3e-4 * 1.0), cfg.hyper))
         assert 0.0 < mid < 1.0

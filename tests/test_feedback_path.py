@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core import pacer, registry
-from repro.core.types import RouterConfig, init_state
+from repro.core.types import HyperParams, RouterConfig, init_state
 from repro.serving.feedback_store import (
     InMemoryFeedbackStore, SQLiteFeedbackStore,
 )
@@ -43,7 +43,7 @@ def _mk_server(store=None, seed=0):
     ]
     return PortfolioServer(
         models, whitener, budget=6.6e-4,
-        router_cfg=RouterConfig(max_arms=4, gamma=1.0),
+        router_cfg=RouterConfig(max_arms=4, hyper=HyperParams(gamma=1.0)),
         judge=SimulatedJudge(seed, noise=0.0),
         max_new_tokens=2, seed=seed,
         feedback_store=None if store is None else store(),
@@ -172,7 +172,7 @@ class TestEmptyPortfolio:
         st = init_state(cfg, np.full(4, 1e-3, np.float32),
                         np.full(4, 1e-3, np.float32), 6.6e-4,
                         active=jnp.zeros(4, bool))
-        mask = pacer.hard_ceiling_mask(cfg, st.pacer, st.price, st.active)
+        mask = pacer.hard_ceiling_mask(st.pacer, st.price, st.active)
         assert not bool(np.asarray(mask).any())
         # ... which is why the serving layer must gate on num_active:
         # argmax over the all-NEG_INF row would silently pick slot 0.
@@ -211,3 +211,146 @@ class TestNumActiveUnderTracing:
         stacked = jax.tree.map(lambda l: jnp.stack([l, l]), st)
         counts = jax.jit(jax.vmap(registry.num_active))(stacked)
         np.testing.assert_array_equal(np.asarray(counts), [3, 3])
+
+
+# ---------------------------------------------------------------------------
+# Feedback-store TTL: entries whose rewards never arrive must age out
+# (ROADMAP item), with depth / drop / expiry counters exported for both
+# store backends via PortfolioServer.metrics().
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+TTL_STORES = {
+    "memory": lambda ttl, clock: InMemoryFeedbackStore(ttl=ttl, clock=clock),
+    "sqlite": lambda ttl, clock: SQLiteFeedbackStore(":memory:", ttl=ttl,
+                                                     clock=clock),
+}
+
+
+@pytest.mark.parametrize("store", list(TTL_STORES), ids=list(TTL_STORES))
+class TestFeedbackStoreTTL:
+    def test_fresh_entries_survive(self, store):
+        clock = _FakeClock()
+        s = TTL_STORES[store](60.0, clock)
+        s.put(1, np.ones(4, np.float32), 2)
+        clock.advance(59.0)
+        hit = s.pop(1)
+        assert hit is not None and hit[1] == 2
+        assert s.expired_total == 0
+
+    def test_pop_after_ttl_expires(self, store):
+        clock = _FakeClock()
+        s = TTL_STORES[store](60.0, clock)
+        s.put(1, np.ones(4, np.float32), 2)
+        clock.advance(61.0)
+        assert s.pop(1) is None          # reward arrived too late
+        assert s.expired_total == 1
+        assert len(s) == 0               # the aged entry is gone
+
+    def test_sweep_expired_bulk_evicts(self, store):
+        clock = _FakeClock()
+        s = TTL_STORES[store](10.0, clock)
+        for rid in range(5):
+            s.put(rid, np.ones(4, np.float32), 0)
+        clock.advance(11.0)
+        s.put(99, np.ones(4, np.float32), 1)   # fresh entry stays
+        s.sweep_expired()   # (the in-memory store already sweeps on put)
+        assert s.expired_total == 5
+        assert len(s) == 1
+        assert s.pop(99) is not None
+
+    def test_no_ttl_keeps_forever(self, store):
+        clock = _FakeClock()
+        s = TTL_STORES[store](None, clock)
+        s.put(1, np.ones(4, np.float32), 0)
+        clock.advance(1e9)
+        assert s.sweep_expired() == 0
+        assert s.pop(1) is not None
+        assert s.expired_total == 0
+
+    def test_reput_refreshes_age(self, store):
+        clock = _FakeClock()
+        s = TTL_STORES[store](10.0, clock)
+        s.put(1, np.ones(4, np.float32), 0)
+        clock.advance(8.0)
+        s.put(1, np.zeros(4, np.float32), 1)   # redelivery re-times it
+        clock.advance(8.0)                     # 16s after first put
+        hit = s.pop(1)
+        assert hit is not None and hit[1] == 1
+
+
+@pytest.mark.parametrize("store", list(TTL_STORES), ids=list(TTL_STORES))
+class TestServerMetrics:
+    def test_metrics_export_depth_drops_and_expiry(self, store, requests8):
+        clock = _FakeClock()
+        srv = _mk_server(lambda: TTL_STORES[store](30.0, clock))
+        res = srv.serve_batch(requests8[:4], defer_feedback=True)
+        m = srv.metrics()
+        assert m["store_depth"] == 4
+        assert m["store_ttl_s"] == 30.0
+        assert m["dropped_feedback"] == 0 and m["expired_feedback"] == 0
+        # one late reward (aged out), one unknown id, two on time
+        clock.advance(31.0)
+        srv.feedback(res[0].request_id, reward=0.5, cost=1e-4)
+        m = srv.metrics()
+        assert m["expired_feedback"] >= 1
+        assert m["dropped_feedback"] == 1    # the expired one was dropped
+        assert m["store_depth"] == 0         # sweep evicted the rest
+        srv.feedback(987654, reward=0.5, cost=1e-4)
+        assert srv.metrics()["dropped_feedback"] == 2
+
+    def test_sqlite_schema_migration(self, store, tmp_path):
+        """A pre-TTL database (no created_at column) must open cleanly."""
+        if store != "sqlite":
+            pytest.skip("sqlite-only")
+        import sqlite3
+        path = str(tmp_path / "ctx.db")
+        conn = sqlite3.connect(path)
+        conn.execute(
+            "CREATE TABLE ctx (request_id INTEGER PRIMARY KEY,"
+            " context BLOB NOT NULL, dim INTEGER NOT NULL,"
+            " arm INTEGER NOT NULL)")
+        ctx = np.ones(4, np.float32)
+        conn.execute("INSERT INTO ctx VALUES (?, ?, ?, ?)",
+                     (7, ctx.tobytes(), 4, 1))
+        conn.commit()
+        conn.close()
+        s = SQLiteFeedbackStore(path, ttl=None)
+        hit = s.pop(7)
+        assert hit is not None and hit[1] == 1
+
+    def test_sqlite_migration_stamps_legacy_rows(self, store, tmp_path):
+        """Legacy rows must age from the MIGRATION time, not epoch 0 —
+        otherwise the first TTL'd reopen would expire every in-flight
+        context the durable store exists to preserve."""
+        if store != "sqlite":
+            pytest.skip("sqlite-only")
+        import sqlite3
+        path = str(tmp_path / "ctx.db")
+        conn = sqlite3.connect(path)
+        conn.execute(
+            "CREATE TABLE ctx (request_id INTEGER PRIMARY KEY,"
+            " context BLOB NOT NULL, dim INTEGER NOT NULL,"
+            " arm INTEGER NOT NULL)")
+        ctx = np.ones(4, np.float32)
+        conn.execute("INSERT INTO ctx VALUES (?, ?, ?, ?)",
+                     (7, ctx.tobytes(), 4, 1))
+        conn.commit()
+        conn.close()
+        clock = _FakeClock(1_000_000.0)
+        s = SQLiteFeedbackStore(path, ttl=60.0, clock=clock)
+        clock.advance(30.0)
+        hit = s.pop(7)                 # well within TTL of the upgrade
+        assert hit is not None and hit[1] == 1
+        assert s.expired_total == 0

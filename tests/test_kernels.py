@@ -152,8 +152,8 @@ class TestLinUCBScore:
     def test_matches_router_scores(self):
         """Kernel == the router's own per-request scoring math (Eq. 2)."""
         from repro.core import linucb
-        from repro.core.types import RouterConfig
-        cfg = RouterConfig(d=6, max_arms=4, alpha=0.05)
+        from repro.core.types import HyperParams, RouterConfig
+        cfg = RouterConfig(d=6, max_arms=4, hyper=HyperParams(alpha=0.05))
         theta = randn((4, 6)) * 0.1
         M = RNG.standard_normal((4, 6, 6)) * 0.1
         A = np.einsum("kij,klj->kil", M, M) + np.eye(6)[None]
@@ -162,7 +162,8 @@ class TestLinUCBScore:
         lam = jnp.float32(0.7)
         dt = jnp.zeros((4,), jnp.int32)
         x = randn((6,))
-        want = linucb.ucb_scores(cfg, theta, ainv, c_tilde, x, dt, lam)
+        want = linucb.ucb_scores(
+            cfg, cfg.hyper, theta, ainv, c_tilde, x, dt, lam)
         pen = (cfg.lambda_c + lam) * c_tilde
         infl = jnp.ones((4,))
         got = linucb_score(x[None], theta, ainv, pen, infl, alpha=cfg.alpha)

@@ -12,7 +12,9 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import linucb, pacer, router
-from repro.core.types import RouterConfig, init_state, log_normalized_cost
+from repro.core.types import (
+    HyperParams, RouterConfig, init_state, log_normalized_cost,
+)
 
 CFG = RouterConfig(d=5, max_arms=3)
 
@@ -41,7 +43,7 @@ class TestPacerInvariants:
         st_ = mk_state(budget, (1e-4, 1e-3, 1e-2))
         p = st_.pacer
         for c in costs:
-            p = pacer.pacer_update(CFG, p, jnp.float32(c))
+            p = pacer.pacer_update(CFG.hyper, p, jnp.float32(c))
             lam = float(p.lam)
             assert 0.0 <= lam <= CFG.lambda_bar + 1e-6
 
@@ -53,7 +55,7 @@ class TestPacerInvariants:
         prices = (1e-4, 1e-3, 1e-2)
         st_ = mk_state(budget, prices)
         p = dataclasses.replace(st_.pacer, lam=jnp.float32(lam))
-        mask = pacer.hard_ceiling_mask(CFG, p, st_.price, st_.active)
+        mask = pacer.hard_ceiling_mask(p, st_.price, st_.active)
         ceiling = max(prices) / (1.0 + lam)
         sel = np.asarray(st_.price)[np.asarray(mask)]
         if sel.size:  # non-empty candidate set
@@ -65,7 +67,7 @@ class TestPacerInvariants:
         st_ = mk_state(budget, (1e-4, 1e-3, 1e-2))
         for lam in (0.0, 0.5, 5.0):
             p = dataclasses.replace(st_.pacer, lam=jnp.float32(lam))
-            mask = pacer.hard_ceiling_mask(CFG, p, st_.price, st_.active)
+            mask = pacer.hard_ceiling_mask(p, st_.price, st_.active)
             assert bool(np.asarray(mask).any())
 
 
@@ -75,7 +77,7 @@ class TestLinUCBInvariants:
     def test_sherman_morrison_tracks_inverse(self, data):
         """A_inv stays the true inverse of A under arbitrary interleavings
         of decay and rank-1 updates."""
-        cfg = RouterConfig(d=4, max_arms=2, gamma=0.98)
+        cfg = RouterConfig(d=4, max_arms=2, hyper=HyperParams(gamma=0.98))
         A = jnp.eye(4)
         A_inv = jnp.eye(4)
         b = jnp.zeros(4)
@@ -86,7 +88,8 @@ class TestLinUCBInvariants:
             dt = data.draw(st.integers(1, 5))
             r = data.draw(finite_f)
             A, A_inv, b, _ = linucb.rank1_update(
-                cfg, A, A_inv, b, x, jnp.float32(r), jnp.int32(dt))
+                cfg, cfg.hyper, A, A_inv, b, x, jnp.float32(r),
+                jnp.int32(dt))
         np.testing.assert_allclose(
             np.asarray(A_inv), np.linalg.inv(np.asarray(A)),
             rtol=2e-2, atol=2e-3)
@@ -95,18 +98,19 @@ class TestLinUCBInvariants:
     @settings(max_examples=30, deadline=None)
     def test_variance_inflation_bounded(self, dt):
         """Property (2): staleness inflation is capped at V_max."""
-        cfg = RouterConfig(d=4, max_arms=2, gamma=0.99, v_max=100.0)
+        cfg = RouterConfig(d=4, max_arms=2,
+                           hyper=HyperParams(gamma=0.99, v_max=100.0))
         A_inv = jnp.eye(4) * 0.7
         x = jnp.asarray([1.0, -0.5, 0.2, 1.0])
-        v0 = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(0))
-        v = linucb.ucb_variance(cfg, A_inv, x, jnp.int32(dt))
+        v0 = linucb.ucb_variance(cfg, cfg.hyper, A_inv, x, jnp.int32(0))
+        v = linucb.ucb_variance(cfg, cfg.hyper, A_inv, x, jnp.int32(dt))
         assert float(v) <= float(v0) * 100.0 * (1 + 1e-5)
         assert float(v) >= float(v0) * (1 - 1e-5)
 
     @given(price=st.integers(1, 10**8).map(lambda i: i * 1e-7))
     @settings(max_examples=50, deadline=None)
     def test_log_cost_always_in_unit_interval(self, price):
-        c = float(log_normalized_cost(jnp.float32(price), CFG))
+        c = float(log_normalized_cost(jnp.float32(price), CFG.hyper))
         assert 0.0 <= c <= 1.0
 
 
