@@ -8,33 +8,49 @@ reward lift.
 The protocol is a ``ScenarioSpec``: two timed ``PriceChange`` events
 (with ``recalibrate=True`` for the oracle-recalibration baseline) and a
 phase-3 prompt replay — the whole three-phase run is one jitted call
-through ``evaluate.run_scenario`` per condition.
+through ``evaluate.run_scenario`` per condition. With ``--mult-grid``
+the drift *magnitude* becomes a ``Param`` payload and the whole
+(multiplier x budget x seed) matrix runs as ONE fused, device-sharded
+fabric call (DESIGN.md §10) — the paper's "price cuts at several
+magnitudes" family without a host loop over specs.
 """
 from __future__ import annotations
+
+import argparse
+
+import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, NAIVE_CFG, PARETO_CFG, SEEDS, benchmark, bootstrap_ci,
     emit, warmup_priors,
 )
-from repro.core import evaluate
-from repro.core.scenario import PriceChange, ScenarioSpec
+from repro.core import evaluate, sweep
+from repro.core.scenario import (
+    Param, PriceChange, ScenarioParams, ScenarioSpec,
+)
 
 PHASE = 608
 GEMINI = 2
 PRICE_MULT = (0.10 / 1e3) / 5.6e-3  # -> $0.10 per 1M tokens
 
+# --mult-grid: repricing magnitudes from the paper's Gemini cut (1/56)
+# up through a 2x price HIKE, all fused on the condition axis.
+DRIFT_MULTS = (PRICE_MULT, 0.05, 0.2, 0.5, 2.0)
 
-def drift_spec(recalibrate: bool = False) -> ScenarioSpec:
+
+def drift_spec(recalibrate: bool = False, multiplier=PRICE_MULT,
+               ) -> ScenarioSpec:
     """Normal -> drifted -> restored, phase 3 replaying phase 1's prompts.
 
     ``recalibrate=True`` is the oracle baseline: the router's rate card
     (price / c_tilde) is updated at each boundary; otherwise the drift is
-    silent and only realised costs change.
+    silent and only realised costs change. ``multiplier`` may be a
+    ``Param`` — the fused-matrix mode passes ``Param("mult")``.
     """
     return ScenarioSpec(
         horizon=3 * PHASE,
         events=(
-            PriceChange(PHASE, GEMINI, PRICE_MULT, recalibrate=recalibrate),
+            PriceChange(PHASE, GEMINI, multiplier, recalibrate=recalibrate),
             PriceChange(2 * PHASE, GEMINI, 1.0, recalibrate=recalibrate),
         ),
         stream_seed_base=1000,
@@ -80,5 +96,41 @@ def main(seeds=SEEDS):
     return rows
 
 
+def mult_grid(seeds=SEEDS, mults=DRIFT_MULTS):
+    """The full (multiplier x budget x seed) cost-drift matrix as ONE
+    fused fabric call: the drift magnitude rides the condition axis as
+    a ``ScenarioParams`` leaf, so every repricing severity shares the
+    single compiled program (15 conditions, one dispatch)."""
+    budgets = tuple(BUDGETS.values())
+    names = tuple(BUDGETS)
+    b_flat = tuple(np.tile(budgets, len(mults)))
+    m_flat = np.repeat(np.asarray(mults, np.float32), len(budgets))
+    grid = sweep.run_scenario_grid(
+        PARETO_CFG, drift_spec(multiplier=Param("mult")), benchmark().test,
+        b_flat, seeds=seeds, priors=list(warmup_priors()), n_eff=N_EFF,
+        scenario_params=ScenarioParams(mult=m_flat))
+    rows = []
+    for i, (m, budget) in enumerate(zip(m_flat, b_flat)):
+        res = grid.condition(i)
+        bname = names[i % len(budgets)]
+        comp = [bootstrap_ci(res.segment(p).costs.mean(axis=1) / budget)[0]
+                for p in range(3)]
+        lift = res.segment(1).mean_reward - res.segment(0).mean_reward
+        rows.append([
+            f"cost_drift_grid_m{float(m):.3g}_{bname}", f"{budget:.2e}",
+            f"compliance={comp[0]:.2f}/{comp[1]:.2f}/{comp[2]:.2f};"
+            f"p2_lift={lift:+.4f}",
+        ])
+    emit(rows, ["name", "budget", "derived"], "cost_drift_mult_grid")
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mult-grid", action="store_true",
+                    help="fused (multiplier x budget x seed) drift matrix")
+    args = ap.parse_args()
+    if args.mult_grid:
+        mult_grid()
+    else:
+        main()

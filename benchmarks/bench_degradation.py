@@ -6,22 +6,37 @@ recovery ratio, compliance, the unconstrained baseline's cost blow-up,
 and the no-pacer bandit's overshoot (the paper's 6.9x headline).
 
 The protocol is a ``ScenarioSpec``: a timed ``QualityShift`` and its
-restore, phase 3 replaying phase 1's prompts.
+restore, phase 3 replaying phase 1's prompts. With ``--target-grid``
+the degraded target becomes a ``Param`` payload and the whole
+(quality-target x budget x seed) degradation matrix runs as ONE fused,
+device-sharded fabric call (DESIGN.md §10).
 """
 from __future__ import annotations
+
+import argparse
+
+import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, NAIVE_CFG, PARETO_CFG, SEEDS, benchmark, bootstrap_ci,
     emit, warmup_priors,
 )
-from repro.core import evaluate
-from repro.core.scenario import QualityShift, ScenarioSpec
+from repro.core import evaluate, sweep
+from repro.core.scenario import (
+    Param, QualityShift, ScenarioParams, ScenarioSpec,
+)
 
 PHASE = 608
 MISTRAL = 1
 
+# --target-grid: regression severities fused on the condition axis.
+TARGETS = (0.45, 0.60, 0.75, 0.90)
 
-def degradation_spec(target: float = 0.75) -> ScenarioSpec:
+
+def degradation_spec(target=0.75) -> ScenarioSpec:
+    """``target`` may be a ``Param`` (the fused-matrix mode passes
+    ``Param("target")``); the restore stays a concrete ``None``
+    (restoring is structural)."""
     return ScenarioSpec(
         horizon=3 * PHASE,
         events=(
@@ -85,5 +100,40 @@ def main(seeds=SEEDS):
     return rows
 
 
+def target_grid(seeds=SEEDS, targets=TARGETS):
+    """The (quality-target x budget x seed) degradation matrix as ONE
+    fused fabric call — the paper's severity family without a host loop
+    over specs."""
+    budgets = tuple(BUDGETS.values())
+    names = tuple(BUDGETS)
+    b_flat = tuple(np.tile(budgets, len(targets)))
+    t_flat = np.repeat(np.asarray(targets, np.float32), len(budgets))
+    grid = sweep.run_scenario_grid(
+        PARETO_CFG, degradation_spec(Param("target")), benchmark().test,
+        b_flat, seeds=seeds, priors=list(warmup_priors()), n_eff=N_EFF,
+        scenario_params=ScenarioParams(target=t_flat))
+    rows = []
+    for i, (t, budget) in enumerate(zip(t_flat, b_flat)):
+        res = grid.condition(i)
+        bname = names[i % len(budgets)]
+        a1, a2, a3 = (res.segment(p).allocation(3)[MISTRAL]
+                      for p in range(3))
+        recovery = res.segment(2).mean_reward / res.segment(0).mean_reward
+        rows.append([
+            f"degradation_grid_t{float(t):.2f}_{bname}", f"{budget:.2e}",
+            f"mistral_alloc={a1:.2f}->{a2:.2f}->{a3:.2f};"
+            f"recovery={recovery:.3f}",
+        ])
+    emit(rows, ["name", "budget", "derived"], "degradation_target_grid")
+    return rows
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target-grid", action="store_true",
+                    help="fused (target x budget x seed) severity matrix")
+    args = ap.parse_args()
+    if args.target_grid:
+        target_grid()
+    else:
+        main()

@@ -2,23 +2,32 @@
 
 Sweeps Mistral's degraded reward from 0.05 to 0.85 (moderate budget),
 measuring the Phase-3/Phase-1 reward ratio at the base (608) and extended
-(1216) horizons. Each (severity, horizon) cell is a two-event
-``ScenarioSpec`` (degrade, restore) with fresh i.i.d. phase-3 prompts.
+(1216) horizons. The severity axis is a ``Param`` payload (DESIGN.md
+§10): per horizon, the whole six-severity family runs as ONE fused
+fabric call (``sweep.run_scenario_grid`` with a stacked ``target``
+leaf) — two compiles total instead of one per (severity, horizon) cell,
+bit-identical per condition to the looped concrete-spec protocol.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from benchmarks.common import (
     BUDGETS, N_EFF, PARETO_CFG, benchmark, emit, warmup_priors,
 )
-from repro.core import evaluate
-from repro.core.scenario import QualityShift, ScenarioSpec
+from repro.core import sweep
+from repro.core.scenario import (
+    Param, QualityShift, ScenarioParams, ScenarioSpec,
+)
 
 MISTRAL = 1
 PHASE = 608
 SEVERITIES = (0.05, 0.25, 0.45, 0.65, 0.75, 0.85)
 
 
-def recovery_spec(target: float, horizon: int) -> ScenarioSpec:
+def recovery_spec(target, horizon: int) -> ScenarioSpec:
+    """``target`` may be a ``Param`` (the fused sweep passes
+    ``Param("target")`` and stacks severities on the condition axis)."""
     return ScenarioSpec(
         horizon=2 * PHASE + horizon,
         events=(
@@ -29,24 +38,33 @@ def recovery_spec(target: float, horizon: int) -> ScenarioSpec:
     )
 
 
-def run(target, horizon, seeds):
-    res = evaluate.run_scenario(
-        PARETO_CFG, recovery_spec(target, horizon), benchmark().test,
-        BUDGETS["moderate"], seeds=seeds,
-        priors=list(warmup_priors()), n_eff=N_EFF)
-    r1 = res.segment(0).mean_reward
-    # recovery measured on the TAIL of phase 3 (converged region)
-    r3 = res.phase(PHASE + PHASE + horizon // 2, 2 * PHASE + horizon).mean_reward
-    return r3 / r1
+def run_severity_family(horizon, seeds, severities=SEVERITIES):
+    """All severities at one horizon as ONE fused grid; returns the
+    per-severity Phase-3-tail / Phase-1 reward ratios."""
+    grid = sweep.run_scenario_grid(
+        PARETO_CFG, recovery_spec(Param("target"), horizon),
+        benchmark().test, (BUDGETS["moderate"],) * len(severities),
+        seeds=seeds, priors=list(warmup_priors()), n_eff=N_EFF,
+        scenario_params=ScenarioParams(
+            target=np.asarray(severities, np.float32)))
+    ratios = []
+    for i in range(len(severities)):
+        res = grid.condition(i)
+        r1 = res.segment(0).mean_reward
+        # recovery measured on the TAIL of phase 3 (converged region)
+        r3 = res.phase(PHASE + PHASE + horizon // 2,
+                       2 * PHASE + horizon).mean_reward
+        ratios.append(r3 / r1)
+    return ratios
 
 
 def main(seeds=tuple(range(10))):
+    base = run_severity_family(PHASE, seeds)
+    ext = run_severity_family(2 * PHASE, seeds)
     rows = []
-    for sev in SEVERITIES:
-        base = run(sev, PHASE, seeds)
-        ext = run(sev, 2 * PHASE, seeds)
-        rows.append([f"recovery_target{sev:.2f}", f"{base:.3f}",
-                     f"extended={ext:.3f}"])
+    for sev, b, e in zip(SEVERITIES, base, ext):
+        rows.append([f"recovery_target{sev:.2f}", f"{b:.3f}",
+                     f"extended={e:.3f}"])
     emit(rows, ["name", "p3_over_p1", "derived"], "recovery_limit")
     return rows
 

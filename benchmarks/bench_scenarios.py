@@ -18,22 +18,35 @@ Scenarios beyond the paper's protocols, authored as ``ScenarioSpec`` data
 environment (CI's scenario-engine smoke job). ``--budget-grid`` runs
 scenario x budget matrices through the sweep fabric: each spec's whole
 (budget x seed) grid is ONE compiled, device-sharded call
-(``sweep.run_scenario_grid``).
+(``sweep.run_scenario_grid``). ``--param-grid`` runs whole spec
+*families* — price cuts at several magnitudes, regressions to several
+quality targets — as fused (payload x budget x seed) grids via
+``Param`` payloads riding the condition axis (DESIGN.md §10), gated
+bit-identical against looping ``run_scenario`` over the equivalent
+concrete-payload specs and timed looped-vs-fused (CI's
+scenario-param-grid job with ``--smoke --devices N``).
 """
 from __future__ import annotations
 
+import sys
+
+from benchmarks._devices import apply_devices_flag
+
+apply_devices_flag(sys.argv)  # must precede any jax import
+
 import argparse
+import time
 
 import numpy as np
 
 from benchmarks.common import (
-    N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
+    BUDGETS, N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
 )
-from repro.core import evaluate, simulator, sweep
+from repro.core import evaluate, scenario, simulator, sweep
 from repro.core.costs import BUDGET_LOOSE, BUDGET_TIGHT
 from repro.core.scenario import (
-    AddArm, BudgetChange, DeleteArm, PriceChange, QualityShift, ScenarioSpec,
-    TrafficMixShift,
+    AddArm, BudgetChange, DeleteArm, Param, PriceChange, QualityShift,
+    ScenarioParams, ScenarioSpec, TrafficMixShift,
 )
 
 PHASE = 608
@@ -173,6 +186,132 @@ def budget_grid(seeds=SEEDS, budgets=GRID_BUDGETS):
     return rows
 
 
+# Payload families (--param-grid): the §4.3 cost-drift protocol at
+# several repricing magnitudes and the §4.4 degradation protocol at
+# several quality targets — each family ONE fused fabric call.
+PRICE_MULTS = (1 / 56, 0.05, 0.2, 0.5, 2.0)
+QUALITY_TARGETS = (0.45, 0.60, 0.75, 0.90)
+GEMINI_RESTORE = 1.0
+
+
+def _drift_family_spec(mult, phase, base):
+    return ScenarioSpec(
+        horizon=3 * phase,
+        events=(PriceChange(phase, GEMINI, mult),
+                PriceChange(2 * phase, GEMINI, GEMINI_RESTORE)),
+        stream_seed_base=base, replay=((2, 0),))
+
+
+def _regress_family_spec(target, phase, base):
+    return ScenarioSpec(
+        horizon=3 * phase,
+        events=(QualityShift(phase, MISTRAL, target),
+                QualityShift(2 * phase, MISTRAL, None)),
+        stream_seed_base=base, replay=((2, 0),))
+
+
+def _time(fn, repeats):
+    t0 = time.perf_counter()
+    fn()
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        warm = min(warm, time.perf_counter() - t0)
+    return cold, warm
+
+
+def _clear_scenario_caches():
+    scenario._RUNNER_CACHE.clear()
+    scenario._STREAM_CACHE.clear()
+    sweep._SCEN_CACHE.clear()
+
+
+def _one_family(name, env, spec_of, param_spec, pname, payloads, budgets,
+                seeds, priors, repeats, rows):
+    """Gate + time one payload family: fused (payload x budget x seed)
+    grid vs looping run_scenario over concrete-payload specs."""
+    b_flat = tuple(np.tile(budgets, len(payloads)))
+    p_flat = np.repeat(np.asarray(payloads, np.float32), len(budgets))
+    kw = dict(seeds=seeds, priors=priors, n_eff=N_EFF)
+
+    def looped():
+        return [evaluate.run_scenario(PARETO_CFG, spec_of(float(p)), env,
+                                      float(b), **kw)
+                for p, b in zip(p_flat, b_flat)]
+
+    def fused():
+        return sweep.run_scenario_grid(
+            PARETO_CFG, param_spec, env, b_flat,
+            scenario_params=ScenarioParams(**{pname: p_flat}), **kw)
+
+    # Bit-identity gate before any timing: every fused condition must
+    # equal its looped concrete-payload twin, and the whole family must
+    # compile exactly once.
+    base = looped()
+    before = sweep.TRACE_COUNT[0]
+    grid = fused()
+    assert sweep.TRACE_COUNT[0] == before + 1, (
+        f"{name}: payload family must compile as ONE program")
+    for i, res in enumerate(base):
+        np.testing.assert_array_equal(grid.condition(i).arms, res.arms)
+        np.testing.assert_array_equal(grid.condition(i).rewards,
+                                      res.rewards)
+        np.testing.assert_array_equal(grid.condition(i).costs, res.costs)
+        np.testing.assert_array_equal(grid.condition(i).lams, res.lams)
+    rows.append([f"param_grid_{name}_equivalence", "bit_identical",
+                 f"{len(payloads)}x{len(budgets)}x{len(seeds)} grid"])
+
+    # Cold timings need fresh programs on both sides.
+    _clear_scenario_caches()
+    looped_cold, looped_warm = _time(looped, repeats)
+    _clear_scenario_caches()
+    fused_cold, fused_warm = _time(fused, repeats)
+    import jax
+    rows.append([f"param_grid_{name}_looped_s", f"{looped_warm:.3f}",
+                 f"cold={looped_cold:.3f}"])
+    rows.append([f"param_grid_{name}_fused_s", f"{fused_warm:.3f}",
+                 f"cold={fused_cold:.3f};devices={len(jax.devices())}"])
+    rows.append([f"param_grid_{name}_speedup",
+                 f"{looped_warm / fused_warm:.2f}x",
+                 f"cold {looped_cold / fused_cold:.2f}x"])
+    return grid
+
+
+def param_grid(smoke: bool = False, repeats: int = 2):
+    """Fused payload grids: (price-multiplier x budget x seed) and
+    (quality-target x budget x seed), each ONE compiled, device-sharded
+    call, bit-identical to the looped concrete-spec protocol."""
+    if smoke:
+        b = simulator.make_benchmark(
+            seed=0, splits={"train": 256, "val": 32, "test": 200})
+        env, phase, seeds = b.test, 40, (0, 1)
+        mults, targets = PRICE_MULTS[:2], QUALITY_TARGETS[:2]
+        budgets = (BUDGETS["tight"], BUDGETS["moderate"])
+        priors, repeats = None, 1   # cold-start family: no warm priors
+    else:
+        env, phase, seeds = benchmark().test, PHASE, SEEDS
+        mults, targets = PRICE_MULTS, QUALITY_TARGETS
+        budgets = tuple(BUDGETS.values())
+        priors = list(warmup_priors())
+
+    rows = []
+    pri = priors
+    _one_family(
+        "price", env,
+        lambda m: _drift_family_spec(m, phase, 7000),
+        _drift_family_spec(Param("mult"), phase, 7000), "mult",
+        mults, budgets, seeds, pri, repeats, rows)
+    _one_family(
+        "quality", env,
+        lambda t: _regress_family_spec(t, phase, 7100),
+        _regress_family_spec(Param("target"), phase, 7100), "target",
+        targets, budgets, seeds, pri, repeats, rows)
+    emit(rows, ["name", "value", "derived"], "scenario_param_grid")
+    return rows
+
+
 def smoke():
     """CI smoke: every event type in one tiny spec, both data planes."""
     bench = simulator.make_benchmark(
@@ -210,11 +349,19 @@ def smoke():
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny every-event-type spec (CI)")
+                    help="tiny every-event-type spec (CI); with "
+                         "--param-grid, shrinks the payload grids")
     ap.add_argument("--budget-grid", action="store_true",
                     help="scenario x budget matrices via the sweep fabric")
+    ap.add_argument("--param-grid", action="store_true",
+                    help="fused (payload x budget x seed) spec families "
+                         "with bit-identity gate + looped-vs-fused timing")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N CPU placeholder devices (before jax init)")
     args = ap.parse_args()
-    if args.smoke:
+    if args.param_grid:
+        param_grid(smoke=args.smoke)
+    elif args.smoke:
         smoke()
     elif args.budget_grid:
         budget_grid()

@@ -24,6 +24,8 @@ BENCHES = [
     ("recovery_limit", "App. G: recovery limit"),
     ("scenarios", "Scenario engine: new multi-event scenarios, both planes"),
     ("scenario_grid", "Scenario x budget matrices via the sweep fabric"),
+    ("scenario_param_grid",
+     "Fused (payload x budget x seed) spec families, looped-vs-fused"),
     ("sweep", "Sweep fabric: looped-vs-fabric grid wall clock"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
@@ -39,7 +41,8 @@ def main(argv=None) -> None:
 
     import importlib
     # Entries whose module or entrypoint differs from bench_{name}.main().
-    MODULES = {"scenario_grid": "scenarios"}
+    MODULES = {"scenario_grid": "scenarios",
+               "scenario_param_grid": "scenarios"}
     failures = []
     for name, desc in BENCHES:
         if args.only and name not in args.only:
@@ -54,6 +57,8 @@ def main(argv=None) -> None:
             elif name == "scenario_grid":
                 mod.budget_grid(seeds=tuple(range(5)) if args.quick
                                 else tuple(range(20)))
+            elif name == "scenario_param_grid":
+                mod.param_grid(smoke=args.quick)
             elif args.quick and name in ("pareto", "cost_drift",
                                          "degradation", "onboarding",
                                          "warmup", "prior_mismatch",

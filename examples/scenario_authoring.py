@@ -16,16 +16,23 @@ Scenario authoring is three steps:
      jitted, seed-vmapped call; ``res.segment(j)`` slices at event
      boundaries.
 
+The second half shows payloads as *data* (DESIGN.md §10): the price-war
+magnitude becomes ``Param("mult")``, and the whole family of repricings
+sweeps through the ONE already-compiled program — then fuses with a
+budget axis into a single device-sharded grid call.
+
     PYTHONPATH=src python examples/scenario_authoring.py
 """
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import evaluate, simulator  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import evaluate, simulator, sweep  # noqa: E402
 from repro.core.scenario import (  # noqa: E402
-    AddArm, BudgetChange, HyperShift, PriceChange, QualityShift,
-    ScenarioSpec,
+    AddArm, BudgetChange, HyperShift, Param, PriceChange, QualityShift,
+    ScenarioParams, ScenarioSpec,
 )
 from repro.core.types import RouterConfig  # noqa: E402
 
@@ -69,6 +76,38 @@ def main():
             print(f"{labels[j]:>16} {seg.mean_reward:>8.4f} "
                   f"{seg.mean_cost:>10.2e} {100 * alloc[GEMINI]:>7.1f}% "
                   f"{100 * alloc[FLASH]:>7.1f}%")
+
+    # -- payloads as data: one spec, a whole repricing family ---------
+    family = ScenarioSpec(
+        horizon=3 * P,
+        events=(PriceChange(P, GEMINI, Param("mult")),
+                PriceChange(2 * P, GEMINI, 1.0)),
+        replay=((2, 0),),
+    )
+    print("\n-- repricing family via Param('mult'): each value re-enters "
+          "the same compiled program --")
+    for mult in (1 / 56, 0.2, 2.0):
+        res = evaluate.run_scenario(
+            cfg, family, env4, 1.9e-3, seeds=range(5),
+            priors=priors, n_eff=1164.0,
+            scenario_params=ScenarioParams(mult=mult))
+        drift = res.segment(1)
+        print(f"  mult={mult:>7.4f}: drift-phase reward "
+              f"{drift.mean_reward:.4f}, cost {drift.mean_cost:.2e}")
+
+    # ...and the whole (multiplier x budget) matrix as ONE fused call:
+    mults, budgets = (1 / 56, 0.2, 2.0), (6.6e-4, 1.9e-3)
+    grid = sweep.run_scenario_grid(
+        cfg, family, env4, np.tile(budgets, len(mults)), seeds=range(5),
+        priors=priors, n_eff=1164.0,
+        scenario_params=ScenarioParams(
+            mult=np.repeat(np.float32(mults), len(budgets))))
+    print(f"\n-- fused (mult x budget) grid: {len(grid)} conditions, "
+          "one compiled, device-sharded dispatch --")
+    for i, (b, res) in enumerate(grid.conditions()):
+        m = grid.params["mult"][i]
+        print(f"  mult={m:>7.4f} budget={b:.1e}: "
+              f"drift reward {res.segment(1).mean_reward:.4f}")
 
 
 if __name__ == "__main__":

@@ -335,6 +335,7 @@ def run_scenario(
     batch_size: Optional[int] = None,
     return_states: bool = False,
     hyper: Optional[HyperParams] = None,
+    scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
 ):
     """Run a declarative ``ScenarioSpec`` over ``env`` as ONE jitted,
     seed-vmapped segmented-scan call (scenario.py).
@@ -345,15 +346,25 @@ def run_scenario(
     plane instead of the per-request loop. The returned ``RunResult``
     carries the spec's segment ``bounds`` so metrics reduce per segment
     via ``res.segment(j)``.
+
+    ``scenario_params`` resolves any ``Param`` payload references in the
+    spec (DESIGN.md §10). Payload values are *data*: re-running the same
+    spec with new values re-enters the compiled program with zero
+    retraces. Leaves are scalars shared by every seed (or per-seed
+    ``(len(seeds),)`` stacks).
     """
-    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds)
+    params = scenario_lib.resolve_params(spec, scenario_params)
+    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
+                                                params=params)
     states = make_states(
         cfg, env, budget, seeds,
         priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
         active_arms=spec.init_active, hyper=hyper,
     )
     run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size)
-    finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
+    finals, (arms, r, c, lam) = run_fn(
+        states, xs, rmat, cmat,
+        scenario_lib.broadcast_params(params, len(seeds)))
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
         costs=np.asarray(c), lams=np.asarray(lam),

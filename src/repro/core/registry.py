@@ -66,9 +66,15 @@ def add_arm(
     stacked state, or inside a jitted scenario program."""
     d = cfg.d
     hp = state.hyper   # traced leaves: lambda0 / Eq. 6 bounds are data
+    # ``n_eff`` may be a traced f32 leaf (a scenario ``Param`` payload,
+    # DESIGN.md §10): its truthiness cannot branch, so a traced n_eff
+    # always takes the prior branch (heuristic_prior at n_eff == 0 is
+    # exactly the cold start, so the semantics agree at the boundary).
+    traced_ne = isinstance(n_eff, (jax.Array, jax.core.Tracer))
     if prior is not None:
-        A, b = warmup_lib.scale_prior(cfg, hp, prior, n_eff or 1.0)
-    elif n_eff is not None and n_eff > 0:
+        ne = n_eff if traced_ne else (n_eff or 1.0)
+        A, b = warmup_lib.scale_prior(cfg, hp, prior, ne)
+    elif n_eff is not None and (traced_ne or n_eff > 0):
         A, b = heuristic_prior(cfg, hp, n_eff, bias_reward)
     else:
         A = jnp.eye(d, dtype=jnp.float32) * hp.lambda0

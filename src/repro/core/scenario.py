@@ -59,6 +59,19 @@ Event semantics (DESIGN.md §6):
     ``HyperShift`` retunes the live ``RouterState.hyper`` leaves
     (DESIGN.md §9), so "operator changes α/γ/λ_c mid-stream" is a
     declarable timeline event — still one compiled program.
+
+Payloads as data (DESIGN.md §10): every event payload field may also be
+a ``Param("name")`` reference, resolved at run time from a
+``ScenarioParams`` pytree of named f32 leaves that rides the vmapped
+axis exactly like ``HyperParams`` leaves do. A parameterized payload is
+*data, not structure*: sweeping it re-enters the same compiled program,
+and the sweep fabric (sweep.py) stacks whole spec *families* — price
+cuts at several magnitudes, regressions to several quality targets —
+on the condition axis of ONE fused grid. Stream payloads (price
+multipliers, quality targets) then become traced per-segment transforms
+of the base stream tensors instead of numpy-baked values; event *times*,
+arm *slots* and traffic-mix weights stay structural (they change which
+prompts are drawn, not tensor values).
 """
 from __future__ import annotations
 
@@ -86,8 +99,152 @@ TRACE_COUNT = [0]
 
 
 # ---------------------------------------------------------------------------
+# Parameterized payloads: Param references + the ScenarioParams pytree
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """A named reference into ``ScenarioParams``, usable wherever an
+    event takes a float/tuple payload (``PriceChange.multiplier``,
+    ``QualityShift.target_mean``, ``BudgetChange.budget``, ``HyperShift``
+    fields, ``AddArm.n_eff``/``bias_reward``/``prior``,
+    ``TrafficMixShift.weights``). The payload becomes *data*: the spec's
+    structure (segment shapes, edit sequence) is fixed, the value is
+    resolved at run time — so a whole family of specs differing only in
+    payloads shares ONE compiled program, and the sweep fabric stacks
+    the family on the condition axis (DESIGN.md §10)."""
+
+    name: str
+
+    def __post_init__(self):
+        if not (isinstance(self.name, str) and self.name):
+            raise ValueError(f"Param name must be a non-empty str: "
+                             f"{self.name!r}")
+
+
+class ScenarioParams:
+    """Named payload leaves for ``Param`` references — a registered
+    pytree, so leaves ride the jitted runner's vmapped axis like
+    ``HyperParams`` leaves do (scalars shared by every element, or
+    stacked along the seed / flattened-grid axis by the callers).
+
+    Values are stored as f32 arrays: scalars for float payloads,
+    ``(F,)`` vectors for traffic-mix weights, ``(d, d+1)`` packed priors
+    (``pack_prior``). A leading axis equal to the stack size is treated
+    as per-element stacking by ``broadcast_params`` / the sweep fabric.
+    """
+
+    __slots__ = ("_values",)
+
+    def __init__(self, **values):
+        vals = {}
+        for k in sorted(values):
+            v = values[k]
+            if isinstance(v, ArmPrior):
+                v = pack_prior(v)
+            if not isinstance(v, (jax.Array, jax.core.Tracer)):
+                v = np.asarray(v, np.float32)
+            vals[k] = v
+        object.__setattr__(self, "_values", vals)
+
+    @classmethod
+    def _from_leaves(cls, names, leaves) -> "ScenarioParams":
+        obj = object.__new__(cls)
+        object.__setattr__(obj, "_values", dict(zip(names, leaves)))
+        return obj
+
+    @property
+    def names(self):
+        return tuple(self._values)
+
+    def get(self, name: str):
+        try:
+            return self._values[name]
+        except KeyError:
+            raise KeyError(
+                f"scenario param {name!r} not provided; have "
+                f"{sorted(self._values)}") from None
+
+    def updated(self, **overrides) -> "ScenarioParams":
+        merged = dict(self._values)
+        merged.update(ScenarioParams(**overrides)._values)
+        return ScenarioParams._from_leaves(
+            tuple(sorted(merged)), tuple(merged[k] for k in sorted(merged)))
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={np.shape(v)}" for k, v in
+                          self._values.items())
+        return f"ScenarioParams({inner})"
+
+
+jax.tree_util.register_pytree_node(
+    ScenarioParams,
+    lambda p: (tuple(p._values.values()), tuple(p._values)),
+    lambda names, leaves: ScenarioParams._from_leaves(names, leaves),
+)
+
+
+def pack_prior(prior: ArmPrior) -> np.ndarray:
+    """An ``ArmPrior`` as one ``(d, d+1)`` f32 leaf ``[A_off | b_off]``
+    so warm-start payloads can ride ``ScenarioParams`` (and stack along
+    a grid's condition axis as ``(C, d, d+1)``)."""
+    A = np.asarray(prior.A_off, np.float32)
+    b = np.asarray(prior.b_off, np.float32)
+    return np.concatenate([A, b[:, None]], axis=1)
+
+
+def _unpack_prior(leaf, d: int) -> ArmPrior:
+    assert leaf.shape == (d, d + 1), (leaf.shape, d)
+    return ArmPrior(A_off=leaf[:, :d], b_off=leaf[:, d])
+
+
+def _resolve(v, params: ScenarioParams):
+    """A payload value: a ``Param`` resolves from the (possibly traced)
+    params leaf; anything else passes through unchanged."""
+    return params.get(v.name) if isinstance(v, Param) else v
+
+
+def resolve_params(
+    spec: "ScenarioSpec", params: Optional[ScenarioParams]
+) -> ScenarioParams:
+    """Validate ``params`` against the spec's ``Param`` references:
+    every referenced name must be provided and (for typo safety) every
+    provided name must be referenced."""
+    params = params if params is not None else ScenarioParams()
+    want, have = set(spec.param_names), set(params.names)
+    if want - have:
+        raise ValueError(
+            f"ScenarioSpec references params {sorted(want - have)} but "
+            f"scenario_params provides only {sorted(have)}")
+    if have - want:
+        raise ValueError(
+            f"scenario_params provides {sorted(have - want)} but the "
+            f"spec only references {sorted(want)}")
+    return params
+
+
+def broadcast_params(params: ScenarioParams, n: int) -> ScenarioParams:
+    """Leaves -> per-element ``(n,) + payload_shape`` stacks for the
+    runner's vmapped axis (a leaf whose leading axis is already ``n``
+    is taken as stacked; everything else broadcasts)."""
+    def bc(leaf):
+        a = np.asarray(leaf)
+        if a.ndim and a.shape[0] == n:
+            return jnp.asarray(a, jnp.float32)
+        return jnp.asarray(np.broadcast_to(a, (n,) + a.shape), jnp.float32)
+
+    vals = {k: bc(v) for k, v in params._values.items()}
+    return ScenarioParams._from_leaves(
+        tuple(vals), tuple(vals[k] for k in vals))
+
+
+# ---------------------------------------------------------------------------
 # Typed control-plane events
 # ---------------------------------------------------------------------------
+
+
+Payload = Union[float, Param]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,22 +255,30 @@ class PriceChange:
     With ``recalibrate=True`` the router's price / c_tilde are also updated
     at the boundary (the paper's oracle-recalibration baseline); default is
     a silent drift the router only sees through realised costs.
+
+    ``multiplier`` may be a ``Param``: the cost scaling then happens as a
+    traced transform of the segment's stream slice (bit-identical to the
+    numpy-baked concrete path), so a whole repricing *family* shares one
+    compiled program. A ``Param`` multiplier is never treated as the 1.0
+    restore — restoring is structural, declare it with a concrete 1.0.
     """
 
     t: int
     arm: int
-    multiplier: float
+    multiplier: Payload
     recalibrate: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class QualityShift:
     """Silent quality regression (Appendix G): from step ``t``, ``arm``'s
-    rewards are mean-shifted to ``target_mean`` (None restores base)."""
+    rewards are mean-shifted to ``target_mean`` (None restores base).
+    A ``Param`` target makes the shift a traced stream transform, so a
+    degradation-severity family shares one compiled program."""
 
     t: int
     arm: int
-    target_mean: Optional[float]
+    target_mean: Optional[Payload]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,15 +288,18 @@ class AddArm:
     The base environment must already carry the arm's reward/cost columns
     (slot < env.k); before this event the slot is simply inactive. Prices
     default to the base rate card times any price multiplier in force.
-    ``prior``/``n_eff``/``bias_reward`` follow ``registry.add_arm``.
+    ``prior``/``n_eff``/``bias_reward`` follow ``registry.add_arm``; each
+    may be a ``Param`` (a ``Param`` prior resolves from a ``(d, d+1)``
+    ``pack_prior`` leaf; a ``Param`` n_eff always takes the heuristic- or
+    offline-prior branch, so it must be > 0).
     """
 
     t: int
     slot: int
-    n_eff: Optional[float] = None
-    bias_reward: float = 0.5
+    n_eff: Optional[Payload] = None
+    bias_reward: Payload = 0.5
     forced_exploration: bool = True
-    prior: Optional[ArmPrior] = None
+    prior: Optional[Union[ArmPrior, Param]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,34 +315,38 @@ class BudgetChange:
     """Operator retargets the pacer ceiling to ``budget`` $/req at ``t``."""
 
     t: int
-    budget: float
+    budget: Payload
 
 
 @dataclasses.dataclass(frozen=True)
 class HyperShift:
     """Operator retunes the router's live hyper-parameters at step ``t``
     (DESIGN.md §9): any subset of ``HyperParams`` fields; ``None`` leaves
-    a field unchanged. A pure state edit on ``RouterState.hyper`` —
-    "operator retunes mid-stream" as a declarable scenario, with no
-    retrace at the boundary (the whole timeline is still one program)."""
+    a field unchanged, and any field may be a ``Param``. A pure state
+    edit on ``RouterState.hyper`` — "operator retunes mid-stream" as a
+    declarable scenario, with no retrace at the boundary (the whole
+    timeline is still one program)."""
 
     t: int
-    alpha: Optional[float] = None
-    gamma: Optional[float] = None
-    lambda_c: Optional[float] = None
-    lambda0: Optional[float] = None
-    eta: Optional[float] = None
-    alpha_ema: Optional[float] = None
-    lambda_bar: Optional[float] = None
-    v_max: Optional[float] = None
-    c_floor: Optional[float] = None
-    c_ceil: Optional[float] = None
-    tiebreak_scale: Optional[float] = None
+    alpha: Optional[Payload] = None
+    gamma: Optional[Payload] = None
+    lambda_c: Optional[Payload] = None
+    lambda0: Optional[Payload] = None
+    eta: Optional[Payload] = None
+    alpha_ema: Optional[Payload] = None
+    lambda_bar: Optional[Payload] = None
+    v_max: Optional[Payload] = None
+    c_floor: Optional[Payload] = None
+    c_ceil: Optional[Payload] = None
+    tiebreak_scale: Optional[Payload] = None
 
     def overrides(self) -> dict:
         ov = {n: getattr(self, n) for n in HYPER_FIELDS
               if getattr(self, n) is not None}
-        HyperParams.validate_fields(**ov)   # fail at spec-build time
+        # Concrete values fail at spec-build time; Param references are
+        # range-clamped at runtime like any traced hyper leaf.
+        HyperParams.validate_fields(
+            **{k: v for k, v in ov.items() if not isinstance(v, Param)})
         return ov
 
 
@@ -182,10 +354,14 @@ class HyperShift:
 class TrafficMixShift:
     """From step ``t``, prompts are drawn with per-family ``weights``
     (proportional sampling over ``simulator.FAMILIES``; None restores the
-    uniform-over-prompts draw)."""
+    uniform-over-prompts draw). ``weights`` may be a ``Param`` naming an
+    ``(F,)`` leaf — but mix weights change *which prompts are drawn*,
+    a structural stream knob: they resolve host-side at stream-build
+    time (one concrete vector per run; they cannot stack on a fused
+    grid's condition axis)."""
 
     t: int
-    weights: Optional[Tuple[float, ...]]
+    weights: Optional[Union[Tuple[float, ...], Param]]
 
 
 Event = Union[
@@ -262,6 +438,17 @@ class ScenarioSpec:
         b = self.bounds
         return tuple(zip(b[:-1], b[1:]))
 
+    @property
+    def param_names(self) -> Tuple[str, ...]:
+        """Sorted names of every ``Param`` referenced by the timeline."""
+        names = set()
+        for e in self.events:
+            for f in dataclasses.fields(e):
+                v = getattr(e, f.name)
+                if isinstance(v, Param):
+                    names.add(v.name)
+        return tuple(sorted(names))
+
 
 def _hashable(obj):
     """Nested hashable signature; arrays become (shape, dtype, bytes)."""
@@ -290,24 +477,28 @@ def spec_key(spec: ScenarioSpec):
 
 @dataclasses.dataclass(frozen=True)
 class _SegmentMods:
-    """Stream settings in force during one segment."""
+    """Stream settings in force during one segment. Values may be
+    ``Param`` references — those are skipped by the numpy baking and
+    lowered to traced stream transforms instead (``_stream_tfs``)."""
 
-    price_mults: Tuple[Tuple[int, float], ...]   # (arm, multiplier != 1)
-    quality: Tuple[Tuple[int, float], ...]       # (arm, target_mean)
-    mix: Optional[Tuple[float, ...]]             # family weights
+    price_mults: Tuple[Tuple[int, Payload], ...]  # (arm, multiplier != 1)
+    quality: Tuple[Tuple[int, Payload], ...]      # (arm, target_mean)
+    mix: Optional[Union[Tuple[float, ...], Param]]  # family weights
 
 
 def _segment_mods(spec: ScenarioSpec) -> Tuple[_SegmentMods, ...]:
     """Fold stream events into per-segment absolute settings."""
-    price: Dict[int, float] = {}
-    quality: Dict[int, float] = {}
-    mix: Optional[Tuple[float, ...]] = None
+    price: Dict[int, Payload] = {}
+    quality: Dict[int, Payload] = {}
+    mix: Optional[Union[Tuple[float, ...], Param]] = None
     out = []
     for start, _ in spec.segments:
         for e in spec.events:
             if e.t != start:
                 continue
             if isinstance(e, PriceChange):
+                # A Param multiplier is never the 1.0 restore (restoring
+                # is structural); it stays in force until a concrete 1.0.
                 if e.multiplier == 1.0:
                     price.pop(e.arm, None)
                 else:
@@ -318,7 +509,10 @@ def _segment_mods(spec: ScenarioSpec) -> Tuple[_SegmentMods, ...]:
                 else:
                     quality[e.arm] = e.target_mean
             elif isinstance(e, TrafficMixShift):
-                mix = tuple(e.weights) if e.weights is not None else None
+                if e.weights is None or isinstance(e.weights, Param):
+                    mix = e.weights
+                else:
+                    mix = tuple(e.weights)
         out.append(_SegmentMods(
             price_mults=tuple(sorted(price.items())),
             quality=tuple(sorted(quality.items())),
@@ -328,16 +522,87 @@ def _segment_mods(spec: ScenarioSpec) -> Tuple[_SegmentMods, ...]:
 
 
 def _transformed_env(env: simulator.Environment, mods: _SegmentMods):
+    """Bake the segment's *concrete* stream settings into the env;
+    ``Param`` payloads are left to the traced transforms."""
     e = env
     for arm, target in mods.quality:
-        e = simulator.with_quality_shift(e, arm, target)
+        if not isinstance(target, Param):
+            e = simulator.with_quality_shift(e, arm, target)
     for arm, mult in mods.price_mults:
-        e = simulator.with_price_multiplier(e, arm, mult)
+        if not isinstance(mult, Param):
+            e = simulator.with_price_multiplier(e, arm, mult)
     return e
 
 
+def _stream_tfs(spec: ScenarioSpec, env: simulator.Environment):
+    """Per-segment traced stream transforms for ``Param`` payloads:
+    ``(xs, rmat, cmat, params) -> (xs, rmat, cmat)`` applied to the
+    segment's slice inside the jitted body (None when the segment has no
+    parameterized stream settings).
+
+    The math mirrors the numpy baking bit-for-bit — one f32 multiply per
+    cost entry (``with_price_multiplier``), one f32 subtract + clip per
+    reward entry against the BASE env's per-arm mean
+    (``with_quality_shift``) — and elementwise ops commute with the
+    prompt gather, so a concrete-payload spec and a Param spec resolved
+    to the same value produce identical bits (pinned in tests).
+    """
+    mods = _segment_mods(spec)
+    out = []
+    for m in mods:
+        pmult = tuple((arm, p) for arm, p in m.price_mults
+                      if isinstance(p, Param))
+        qual = tuple((arm, t) for arm, t in m.quality
+                     if isinstance(t, Param))
+        if not pmult and not qual:
+            out.append(None)
+            continue
+        # Absolute semantics: the shift targets the BASE env's arm mean
+        # (numpy f32 accumulation, matching with_quality_shift).
+        base_mean = {arm: env.rewards[:, arm].mean() for arm, _ in qual}
+
+        def tf(xs, rmat, cmat, params, _p=pmult, _q=qual, _bm=base_mean):
+            for arm, t in _q:
+                shift = jnp.float32(_bm[arm]) - params.get(t.name)
+                col = jnp.clip(rmat[:, arm] - shift, 0.0, 1.0)
+                rmat = rmat.at[:, arm].set(col)
+            for arm, p in _p:
+                cmat = cmat.at[:, arm].multiply(params.get(p.name))
+            return xs, rmat, cmat
+
+        out.append(tf)
+    return tuple(out)
+
+
+def _host_mix_values(
+    spec: ScenarioSpec, params: Optional[ScenarioParams]
+) -> Dict[str, np.ndarray]:
+    """Resolve ``TrafficMixShift`` ``Param`` weights to concrete host
+    vectors. Mix weights are *structural*: they change which prompt
+    indices are drawn, so they must be host-concrete at stream-build
+    time and cannot stack along a fused grid's condition axis."""
+    names = sorted({m.mix.name for m in _segment_mods(spec)
+                    if isinstance(m.mix, Param)})
+    out = {}
+    for nm in names:
+        if params is None or nm not in params.names:
+            raise ValueError(
+                f"TrafficMixShift references param {nm!r}; pass "
+                "scenario_params providing it")
+        v = np.asarray(params.get(nm))
+        if v.ndim != 1:
+            raise ValueError(
+                f"traffic-mix param {nm!r} must be one (F,) weight "
+                f"vector, got shape {v.shape}: mix weights change which "
+                "prompts are drawn (structural), so they cannot stack "
+                "on a grid's condition axis")
+        out[nm] = v
+    return out
+
+
 def compile_indices(
-    spec: ScenarioSpec, env: simulator.Environment, seed: int
+    spec: ScenarioSpec, env: simulator.Environment, seed: int,
+    mix_values: Optional[Dict[str, np.ndarray]] = None,
 ) -> Tuple[np.ndarray, ...]:
     """Per-segment prompt indices for one seed (exposed for tests).
 
@@ -345,6 +610,8 @@ def compile_indices(
     ``default_rng(stream_seed_base + seed)`` consumed sequentially across
     segments (or fresh per-segment generators when ``segment_seeds`` is
     set); replayed segments reuse earlier indices and consume no draws.
+    ``mix_values`` supplies host-resolved weight vectors for
+    parameterized ``TrafficMixShift`` events.
     """
     mods = _segment_mods(spec)
     replay = dict(spec.replay)
@@ -365,7 +632,12 @@ def compile_indices(
             assert L <= n, (L, n)
             idx = r.permutation(n)[:L]
         elif mods[j].mix is not None:
-            w = np.asarray(mods[j].mix, np.float64)
+            mix = mods[j].mix
+            if isinstance(mix, Param):
+                assert mix_values is not None and mix.name in mix_values, (
+                    f"unresolved mix param {mix.name!r}")
+                mix = mix_values[mix.name]
+            w = np.asarray(mix, np.float64)
             assert env.families.max() < len(w), (env.families.max(), len(w))
             p = w[env.families]
             idx = r.choice(n, size=L, p=p / p.sum())
@@ -415,17 +687,29 @@ def build_streams(
     spec: ScenarioSpec,
     env: simulator.Environment,
     seeds: Sequence[int],
+    params: Optional[ScenarioParams] = None,
 ):
     """Lower the spec to stacked (S, T, d) / (S, T, max_arms) tensors.
 
-    Cached (bounded LRU) on (spec, padding, seeds, env content): benchmark
-    sweeps re-run the same spec across router configs and budgets, and the
-    host-side gather + device put is the expensive part.
+    Concrete stream payloads are baked in (today's behaviour); ``Param``
+    price/quality payloads are NOT — their segments gather base-env
+    values and the traced transforms (``_stream_tfs``) apply the
+    payload inside the jitted body, so the stream stack (and this
+    cache) is shared across every payload value. Parameterized
+    traffic-mix weights are the exception: they are resolved host-side
+    here (structural — they change the prompt draw itself).
+
+    Cached (bounded LRU) on (spec, padding, seeds, env content, resolved
+    mix weights): benchmark sweeps re-run the same spec across router
+    configs, budgets and payload values, and the host-side gather +
+    device put is the expensive part.
     """
     assert env.k <= cfg.max_arms, (env.k, cfg.max_arms)
     _validate_state_events(spec, env.k)
+    mix_values = _host_mix_values(spec, params)
     cache_key = (spec_key(spec), cfg.max_arms,
-                 tuple(int(s) for s in seeds), _env_content_sig(env))
+                 tuple(int(s) for s in seeds), _env_content_sig(env),
+                 tuple((nm, v.tobytes()) for nm, v in mix_values.items()))
 
     def make():
         mods = _segment_mods(spec)
@@ -437,7 +721,7 @@ def build_streams(
         pad = cfg.max_arms - env.k
         xs, rs, cs = [], [], []
         for s in seeds:
-            idxs = compile_indices(spec, env, int(s))
+            idxs = compile_indices(spec, env, int(s), mix_values)
             x = np.concatenate(
                 [envs[j].contexts[i] for j, i in enumerate(idxs)])
             r = np.concatenate(
@@ -464,35 +748,65 @@ def build_streams(
 # ---------------------------------------------------------------------------
 
 
+def _scaled_price(base_preq: float, base_p1k: float, mult,
+                  params: ScenarioParams):
+    """(price_per_req, price_per_1k) scaled by ``mult``. A concrete
+    multiplier keeps the historical host-float (f64) lowering
+    byte-for-byte; a ``Param`` multiplier is an f32 traced multiply
+    (may differ from the concrete lowering by 1 ulp — DESIGN.md §10)."""
+    if isinstance(mult, Param):
+        m = params.get(mult.name)
+        return jnp.float32(base_preq) * m, jnp.float32(base_p1k) * m
+    return base_preq * mult, base_p1k * mult
+
+
 def _one_edit(cfg: RouterConfig, e: Event, env: simulator.Environment,
               mods: _SegmentMods):
-    """Lower one state event to a pure RouterState -> RouterState fn."""
+    """Lower one state event to a pure (RouterState, ScenarioParams) ->
+    RouterState fn (``Param`` payloads resolve from the traced leaves).
+    Closures capture per-arm price *scalars*, never ``env`` itself — the
+    bounded runner caches would otherwise pin whole Environments."""
     if isinstance(e, PriceChange):
         if not e.recalibrate:
             return None
-        preq = float(env.prices_per_req[e.arm]) * e.multiplier
-        p1k = float(env.prices_per_1k[e.arm]) * e.multiplier
-        return lambda st: registry.set_price(cfg, st, e.arm, preq, p1k)
+        preq0 = float(env.prices_per_req[e.arm])
+        p1k0 = float(env.prices_per_1k[e.arm])
+
+        def reprice(st, ps):
+            preq, p1k = _scaled_price(preq0, p1k0, e.multiplier, ps)
+            return registry.set_price(cfg, st, e.arm, preq, p1k)
+
+        return reprice
     if isinstance(e, AddArm):
         assert e.slot < env.k, (
             f"AddArm slot {e.slot} has no environment columns (k={env.k})")
         mult = dict(mods.price_mults).get(e.slot, 1.0)
-        preq = float(env.prices_per_req[e.slot]) * mult
-        p1k = float(env.prices_per_1k[e.slot]) * mult
-        return lambda st: registry.add_arm(
-            cfg, st, e.slot, preq, p1k,
-            prior=e.prior, n_eff=e.n_eff, bias_reward=e.bias_reward,
-            forced_exploration=e.forced_exploration)
+        preq0 = float(env.prices_per_req[e.slot])
+        p1k0 = float(env.prices_per_1k[e.slot])
+
+        def add(st, ps):
+            preq, p1k = _scaled_price(preq0, p1k0, mult, ps)
+            prior = e.prior
+            if isinstance(prior, Param):
+                prior = _unpack_prior(ps.get(prior.name), cfg.d)
+            return registry.add_arm(
+                cfg, st, e.slot, preq, p1k,
+                prior=prior, n_eff=_resolve(e.n_eff, ps),
+                bias_reward=_resolve(e.bias_reward, ps),
+                forced_exploration=e.forced_exploration)
+
+        return add
     if isinstance(e, DeleteArm):
-        return lambda st: registry.delete_arm(cfg, st, e.slot)
+        return lambda st, ps: registry.delete_arm(cfg, st, e.slot)
     if isinstance(e, BudgetChange):
-        return lambda st: dataclasses.replace(
-            st, pacer=pacer_lib.set_budget(st.pacer, e.budget))
+        return lambda st, ps: dataclasses.replace(
+            st, pacer=pacer_lib.set_budget(st.pacer, _resolve(e.budget, ps)))
     if isinstance(e, HyperShift):
         ov = e.overrides()
         if not ov:
             return None
-        return lambda st: types_lib.with_hyperparams(st, **ov)
+        return lambda st, ps: types_lib.with_hyperparams(
+            st, **{k: _resolve(v, ps) for k, v in ov.items()})
     return None
 
 
@@ -514,9 +828,9 @@ def _edit_fns(cfg: RouterConfig, spec: ScenarioSpec,
             out.append(None)
             continue
 
-        def composite(st, _fns=tuple(fns)):
+        def composite(st, ps, _fns=tuple(fns)):
             for f in _fns:
-                st = f(st)
+                st = f(st, ps)
             return st
 
         out.append(composite)
@@ -545,20 +859,27 @@ _RUNNER_CACHE: collections.OrderedDict = collections.OrderedDict()
 _RUNNER_CACHE_MAX = 64   # mirrors evaluate._cached_run_fn's lru bound
 
 
-def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size):
+def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size,
+                 stream_tfs=None):
     """The pure per-seed segmented-scan program: segments unrolled at
     trace time, each a ``lax.scan`` through the scalar or batched data
     plane, with the pure state edits applied in between — no host
-    round-trips. Shared by the seed-vmapped runner below and the
-    grid-sweep fabric (sweep.py), which vmaps it over a flattened
+    round-trips. ``edits`` and the optional per-segment ``stream_tfs``
+    take the per-element ``ScenarioParams`` (payloads as data, DESIGN.md
+    §10). Shared by the seed-vmapped runner below and the grid-sweep
+    fabric (sweep.py), which vmaps it over a flattened
     (condition x seed) axis instead."""
+    tfs = stream_tfs if stream_tfs is not None else (None,) * len(seg_lens)
 
-    def one_seed(state: RouterState, xs, rmat, cmat):
+    def one_seed(state: RouterState, xs, rmat, cmat,
+                 params: ScenarioParams):
         traces, off = [], 0
-        for L, edit in zip(seg_lens, edits):
+        for L, edit, tf in zip(seg_lens, edits, tfs):
             if edit is not None:
-                state = edit(state)
+                state = edit(state, params)
             seg = (xs[off:off + L], rmat[off:off + L], cmat[off:off + L])
+            if tf is not None:
+                seg = tf(*seg, params)
             if batch_size is not None and batch_size > 1:
                 state, tr = router.run_stream_batched(
                     cfg, state, *seg, batch_size=batch_size)
@@ -574,20 +895,23 @@ def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size):
 
 def spec_body(cfg: RouterConfig, spec: ScenarioSpec,
               env: simulator.Environment, batch_size=None):
-    """``segment_body`` compiled from a spec (edits + segment lengths)."""
+    """``segment_body`` compiled from a spec (edits + segment lengths +
+    traced stream transforms for parameterized payloads)."""
     seg_lens = tuple(b - a for a, b in spec.segments)
-    return segment_body(cfg, seg_lens, _edit_fns(cfg, spec, env), batch_size)
+    return segment_body(cfg, seg_lens, _edit_fns(cfg, spec, env),
+                        batch_size, _stream_tfs(spec, env))
 
 
-def _make_runner(cfg: RouterConfig, seg_lens, edits, batch_size):
+def _make_runner(cfg: RouterConfig, spec: ScenarioSpec,
+                 env: simulator.Environment, batch_size):
     """One jitted, seed-vmapped program around ``segment_body``."""
-    body = segment_body(cfg, seg_lens, edits, batch_size)
+    body = spec_body(cfg, spec, env, batch_size)
 
-    def one_seed(state: RouterState, xs, rmat, cmat):
+    def one_seed(state: RouterState, xs, rmat, cmat, params):
         TRACE_COUNT[0] += 1       # moves only while tracing
-        return body(state, xs, rmat, cmat)
+        return body(state, xs, rmat, cmat, params)
 
-    return jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0)))
+    return jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0)))
 
 
 def _env_sig(env: simulator.Environment):
@@ -604,9 +928,11 @@ def compiled_runner(
 ):
     """Cached jitted runner for (config, spec, env rate card, batch size).
 
-    Budgets, priors and seeds are *data* (they live in the stacked
-    ``RouterState``), so sweeping them re-enters the same compiled
-    program — the retrace-per-phase of the hand-rolled benchmarks is gone.
+    Budgets, priors, seeds and ``Param`` payload values are *data* (they
+    live in the stacked ``RouterState`` / ``ScenarioParams`` operands),
+    so sweeping them re-enters the same compiled program — the
+    retrace-per-phase of the hand-rolled benchmarks is gone, and so is
+    the retrace-per-payload of concrete-valued spec families.
     """
     # Keyed on the statics projection: hyper-parameters are state leaves
     # (DESIGN.md §9), so configs differing only in (α, γ, ...) share one
@@ -614,8 +940,6 @@ def compiled_runner(
     key = (cfg.statics, spec_key(spec), _env_sig(env), batch_size)
 
     def make():
-        seg_lens = tuple(b - a for a, b in spec.segments)
-        return _make_runner(cfg, seg_lens, _edit_fns(cfg, spec, env),
-                            batch_size)
+        return _make_runner(cfg, spec, env, batch_size)
 
     return lru_get(_RUNNER_CACHE, key, make, _RUNNER_CACHE_MAX)

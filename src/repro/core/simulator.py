@@ -204,7 +204,14 @@ def with_price_multiplier(
     env: Environment, arm: int, multiplier: float
 ) -> Environment:
     """Cost drift: scale one arm's realised costs and rate card (e.g. the
-    Phase-2 Gemini cut to $0.10/M tokens is multiplier ~= 0.0067)."""
+    Phase-2 Gemini cut to $0.10/M tokens is multiplier ~= 0.0067).
+
+    Bit-compat contract (DESIGN.md §10): ``scenario._stream_tfs`` lowers a
+    ``Param`` multiplier to a traced f32 multiply of the gathered cost
+    slice, which must equal this numpy in-place ``*=`` exactly (NEP-50
+    promotes the python-float scalar to f32). Changing the formula here
+    without mirroring it there breaks the concrete-vs-Param bit-identity
+    pinned in tests/test_scenario.py::TestParamPayloads."""
     costs = env.costs.copy()
     costs[:, arm] *= multiplier
     p1k = env.prices_per_1k.copy()
@@ -221,7 +228,12 @@ def with_quality_shift(
 ) -> Environment:
     """Silent quality regression as a mean shift (Appendix G): per-prompt
     rewards shifted so the arm's mean equals ``target_mean`` while keeping
-    prompt-dependent variation, clipped to [0, 1]. Cost unchanged."""
+    prompt-dependent variation, clipped to [0, 1]. Cost unchanged.
+
+    Bit-compat contract (DESIGN.md §10): ``scenario._stream_tfs`` lowers a
+    ``Param`` target to ``clip(r - (base_mean - target), 0, 1)`` in traced
+    f32 against this same f32-accumulated column mean; the two lowerings
+    must stay in lockstep (tests/test_scenario.py::TestParamPayloads)."""
     rewards = env.rewards.copy()
     shift = rewards[:, arm].mean() - target_mean
     rewards[:, arm] = np.clip(rewards[:, arm] - shift, 0.0, 1.0)

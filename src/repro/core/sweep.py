@@ -31,11 +31,17 @@ one jitted, device-sharded call:
 Hyper-parameters are state leaves too (DESIGN.md §9): ``RouterState``
 carries a ``HyperParams`` pytree, so a whole (α, γ) grid stacks on the
 condition axis via ``hyper_edit``/``condition_edits`` — bench_knee's
-full (α x γ x budget x seed) selection grid is ONE fabric call. Knobs
-that remain *trace constants* — the ``Statics`` (``d``, ``max_arms``,
-``backend``, ``dt_max``, ``forced_pulls``) and the stream tensors'
-shapes — still cost one compile per value. DESIGN.md §7 tabulates which
-knobs stack.
+full (α x γ x budget x seed) selection grid is ONE fabric call. And
+scenario event *payloads* are data as well (DESIGN.md §10): a
+``ScenarioSpec`` whose payloads are ``scenario.Param`` references plus
+a ``scenario_params=`` stack (or per-condition ``param_edit`` entries)
+fuses a whole spec *family* — price cuts at several magnitudes,
+regressions to several quality targets — into one
+``run_scenario_grid`` call. Knobs that remain *trace constants* — the
+``Statics`` (``d``, ``max_arms``, ``backend``, ``dt_max``,
+``forced_pulls``), event times/slots and the stream tensors' shapes —
+still cost one compile per value. DESIGN.md §1/§7 tabulate which knobs
+stack.
 
 Per-condition results are bit-identical to the looped
 ``evaluate.run``-per-condition baseline (pinned in tests/test_sweep.py):
@@ -80,6 +86,9 @@ class GridResult:
     lams: np.ndarray     # (C, S, T)
     # Segment boundaries shared by every condition (scenario grids).
     bounds: Optional[tuple] = None
+    # Per-condition scenario payload values (name -> (C,)+payload_shape),
+    # recorded for reporting when a payload axis rides the grid.
+    params: Optional[dict] = None
 
     def __len__(self) -> int:
         return len(self.budgets)
@@ -94,6 +103,26 @@ class GridResult:
     def conditions(self):
         for i, b in enumerate(self.budgets):
             yield b, self.condition(i)
+
+
+def _check_grid_args(budgets, seeds, condition_edits):
+    """Explicit ValueErrors for degenerate grids — an empty axis or a
+    misaligned edit list would otherwise surface as a cryptic reshape /
+    vmap / mesh failure deep inside the fabric. Materializes (and
+    returns) the axes exactly once so one-shot iterables stay valid."""
+    budgets, seeds = tuple(budgets), tuple(seeds)
+    if not budgets:
+        raise ValueError(
+            "budgets is empty: the grid needs at least one condition")
+    if not seeds:
+        raise ValueError(
+            "seeds is empty: the grid needs at least one seed")
+    if condition_edits is not None and len(condition_edits) != len(budgets):
+        raise ValueError(
+            f"condition_edits has {len(condition_edits)} entries but the "
+            f"grid has {len(budgets)} conditions (one edit — or "
+            "None — per budget)")
+    return budgets, seeds
 
 
 def _flatten_grid(budgets, seeds):
@@ -138,10 +167,11 @@ def _tile_conditions(arr: Array, C: int, sh) -> Array:
     return jax.device_put(tiled, sh)
 
 
-def _shard_grid(states: RouterState, streams, stream_axes, C, devices):
-    """Place the flattened grid on a 1-D device mesh: state leaves and
-    condition-tiled streams split along the grid axis, shared streams
-    replicated."""
+def _shard_grid(states: RouterState, streams, stream_axes, C, devices,
+                params=None):
+    """Place the flattened grid on a 1-D device mesh: state leaves,
+    condition-tiled streams and per-element scenario-param leaves split
+    along the grid axis, shared streams replicated."""
     n = int(states.t.shape[0])
     mesh = mesh_lib.make_grid_mesh(n, devices)
     sh = mesh_lib.grid_sharding(mesh)
@@ -156,7 +186,9 @@ def _shard_grid(states: RouterState, streams, stream_axes, C, devices):
         streams = tuple(_tile_conditions(a, C, sh) for a in streams)
     else:
         streams = tuple(jax.device_put(a, rep) for a in streams)
-    return states, streams
+    if params is not None:
+        params = jax.tree.map(lambda l: jax.device_put(l, sh), params)
+    return states, streams, params
 
 
 def _apply_condition_edits(
@@ -227,10 +259,39 @@ def warmup_edit(cfg: RouterConfig, priors, n_eff: float):
     return edit
 
 
+def param_edit(**overrides):
+    """A condition edit pinning scenario payload leaves — the way a
+    *payload* axis (price multiplier, quality target, ...) joins a
+    scenario grid's fused condition axis (DESIGN.md §10), mirroring
+    ``hyper_edit`` for ``HyperParams``.
+
+    ``sweep.run_scenario_grid(cfg, spec, env, budgets, condition_edits=[
+        sweep.chain_edits(sweep.hyper_edit(alpha=a), sweep.param_edit(mult=m))
+        for a, m in cells])``
+
+    The state part is the identity: payload leaves are not
+    ``RouterState`` leaves but ``ScenarioParams`` operands, so
+    ``run_scenario_grid`` folds the per-condition overrides into the
+    stacked params instead (``run_grid`` has no scenario payloads and
+    rejects them).
+    """
+
+    def edit(st: RouterState) -> RouterState:
+        return st
+
+    # Normalize through ScenarioParams so payload kinds (floats, weight
+    # vectors, ArmPrior -> packed (d, d+1) leaves) behave identically to
+    # the scenario_params= path.
+    normalized = scenario_lib.ScenarioParams(**overrides)
+    edit.param_overrides = {n: normalized.get(n) for n in normalized.names}
+    return edit
+
+
 def chain_edits(*edits):
     """Compose condition edits left-to-right (``None`` entries skipped);
     returns None when nothing remains, matching ``condition_edits``'
-    no-op convention."""
+    no-op convention. ``param_edit`` payload overrides carried by the
+    inputs are merged (rightmost wins) onto the composite."""
     live = tuple(e for e in edits if e is not None)
     if not live:
         return None
@@ -242,6 +303,11 @@ def chain_edits(*edits):
             st = e(st)
         return st
 
+    merged = {}
+    for e in live:
+        merged.update(getattr(e, "param_overrides", {}))
+    if merged:
+        edit.param_overrides = merged
     return edit
 
 
@@ -279,6 +345,13 @@ def run_grid(
     ``devices`` defaults to ``jax.devices()``; the flattened C*S axis is
     sharded over the largest device count dividing it.
     """
+    budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
+    if condition_edits is not None and any(
+            getattr(e, "param_overrides", None) for e in condition_edits):
+        raise ValueError(
+            "param_edit pins scenario payload leaves; use it with "
+            "run_scenario_grid (run_grid evaluates plain streams with "
+            "no scenario events)")
     budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
     C, S = len(budgets), len(seeds)
     xs, rmat, cmat, stream_axes, env0 = evaluate.build_run_streams(
@@ -290,9 +363,8 @@ def run_grid(
         hyper=_expand_hyper(hyper, C, S),
     )
     if condition_edits is not None:
-        assert len(condition_edits) == C, (len(condition_edits), C)
         states = _apply_condition_edits(states, condition_edits, S)
-    states, streams = _shard_grid(
+    states, streams, _ = _shard_grid(
         states, (xs, rmat, cmat), stream_axes, C, devices)
 
     fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size)
@@ -317,6 +389,60 @@ _SCEN_CACHE: collections.OrderedDict = collections.OrderedDict()
 _SCEN_CACHE_MAX = 64
 
 
+def _merged_scenario_params(base, condition_edits, C: int, S: int):
+    """Fold per-condition ``param_edit`` overrides (riding
+    ``condition_edits``) into the base ``ScenarioParams``: any name
+    touched by an override becomes a (C,)-stacked leaf whose untouched
+    conditions fall back to the base leaf."""
+    over = [dict(getattr(e, "param_overrides", {}) or {})
+            for e in (condition_edits or ())]
+    names = set().union(*over) if over else set()
+    if not names:
+        return base
+    base_vals = dict(zip(base.names, (base.get(n) for n in base.names)))
+    merged = dict(base_vals)
+    for name in sorted(names):
+        stacked = []
+        for c in range(C):
+            if name in over[c]:
+                stacked.append(np.asarray(over[c][name], np.float32))
+                continue
+            if name not in base_vals:
+                raise ValueError(
+                    f"param_edit sets {name!r} for some conditions but "
+                    f"condition {c} has no override and scenario_params "
+                    "provides no base value")
+            v = np.asarray(base_vals[name])
+            if v.ndim and v.shape[0] == C * S and C != C * S:
+                raise ValueError(
+                    f"param_edit overrides {name!r} but the base leaf is "
+                    f"a pre-flattened ({C * S},) stack: a per-condition "
+                    "override of a per-element leaf is ambiguous — pass "
+                    f"a (C,) = ({C},) stacked base leaf instead")
+            # A base leaf already stacked per condition contributes its
+            # c-th entry; a shared leaf contributes itself.
+            stacked.append(v[c] if (v.ndim and v.shape[0] == C) else v)
+        merged[name] = np.stack(stacked)
+    return scenario_lib.ScenarioParams(**merged)
+
+
+def _expand_params(params, C: int, S: int):
+    """Stack param leaves onto the flattened condition-major (C*S,)
+    axis: (C,)-leading leaves repeat each entry S times (like budgets),
+    already-flat (C*S,)-leading leaves pass through, everything else
+    broadcasts to all grid elements."""
+    def ex(leaf):
+        a = np.asarray(leaf)
+        if a.ndim and a.shape[0] == C * S:
+            return jnp.asarray(a, jnp.float32)
+        if a.ndim and a.shape[0] == C and C != C * S:
+            return jnp.asarray(np.repeat(a, S, axis=0), jnp.float32)
+        return jnp.asarray(np.broadcast_to(a, (C * S,) + a.shape),
+                           jnp.float32)
+
+    return jax.tree.map(ex, params)
+
+
 def _cached_scenario_grid_fn(
     cfg: RouterConfig,
     spec: "scenario_lib.ScenarioSpec",
@@ -332,11 +458,11 @@ def _cached_scenario_grid_fn(
     def make():
         body = scenario_lib.spec_body(cfg, spec, env, batch_size)
 
-        def one(state, x, rm, cm):
+        def one(state, x, rm, cm, params):
             TRACE_COUNT[0] += 1       # moves only while tracing
-            return body(state, x, rm, cm)
+            return body(state, x, rm, cm, params)
 
-        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0)),
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, 0)),
                        donate_argnums=0)
 
     return scenario_lib.lru_get(_SCEN_CACHE, key, make, _SCEN_CACHE_MAX)
@@ -357,6 +483,7 @@ def run_scenario_grid(
     return_states: bool = False,
     hyper: Optional[HyperParams] = None,
     condition_edits: Optional[Sequence[Optional[Callable]]] = None,
+    scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
 ):
     """One multi-event scenario across a budget grid as one compiled,
     sharded call — per condition equivalent to ``evaluate.run_scenario``
@@ -365,10 +492,25 @@ def run_scenario_grid(
     A ``BudgetChange`` event in the spec overrides the stacked initial
     ceiling from its boundary onward, in every condition — the grid axis
     is the *initial* operating point.
+
+    ``scenario_params`` resolves ``Param`` payload references in the
+    spec (DESIGN.md §10): leaves may be scalars (shared), ``(C,)``
+    stacks aligned with ``budgets`` (a *payload* condition axis — the
+    way a whole spec family, e.g. price cuts at several magnitudes,
+    fuses into this one compiled grid), or pre-flattened ``(C*S,)``
+    stacks. Per-condition ``sweep.param_edit(...)`` entries on
+    ``condition_edits`` (composable with ``hyper_edit`` via
+    ``chain_edits``) are folded into the same stacked leaves.
     """
+    budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
     budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
     C, S = len(budgets), len(seeds)
-    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds)
+    params = _merged_scenario_params(
+        scenario_params if scenario_params is not None
+        else scenario_lib.ScenarioParams(), condition_edits, C, S)
+    params = scenario_lib.resolve_params(spec, params)
+    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
+                                                params=params)
     states = evaluate.make_states(
         cfg, env, flat_b, flat_s,
         priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
@@ -376,12 +518,18 @@ def run_scenario_grid(
         active_arms=spec.init_active, hyper=_expand_hyper(hyper, C, S),
     )
     if condition_edits is not None:
-        assert len(condition_edits) == C, (len(condition_edits), C)
         states = _apply_condition_edits(states, condition_edits, S)
-    states, streams = _shard_grid(states, (xs, rmat, cmat), 0, C, devices)
+    pstack = _expand_params(params, C, S)
+    states, streams, pstack = _shard_grid(
+        states, (xs, rmat, cmat), 0, C, devices, pstack)
 
     fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size)
-    finals, (arms, r, c, lam) = fn(states, *streams)
+    finals, (arms, r, c, lam) = fn(states, *streams, pstack)
+    cond_params = {
+        n: np.asarray(params.get(n))
+        for n in params.names
+        if np.ndim(params.get(n)) and np.shape(params.get(n))[0] == C
+    } or None
     res = GridResult(
         budgets=budgets, seeds=seeds,
         arms=np.asarray(arms).reshape(C, S, -1),
@@ -389,6 +537,7 @@ def run_scenario_grid(
         costs=np.asarray(c).reshape(C, S, -1),
         lams=np.asarray(lam).reshape(C, S, -1),
         bounds=spec.bounds,
+        params=cond_params,
     )
     if return_states:
         return res, finals

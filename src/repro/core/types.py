@@ -21,13 +21,13 @@ Configuration is split in two (DESIGN.md §9):
 
 ``RouterConfig`` remains the user-facing constructor: its static fields
 ARE the statics, and ``cfg.hyper`` is the default ``HyperParams`` seeded
-into ``init_state``. Legacy hyper kwargs (``RouterConfig(alpha=...)``)
-still work for one release behind a ``DeprecationWarning``.
+into ``init_state``. The pre-split flat hyper kwargs
+(``RouterConfig(alpha=...)``) were deprecated for one release and are
+now retired: passing one raises a ``TypeError`` naming the migration.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -170,10 +170,11 @@ class RouterConfig:
     """User-facing router configuration: ``Statics`` fields + the default
     ``HyperParams`` seeded into new states.
 
-    Hyper-parameters are constructed via ``hyper=HyperParams(...)``; the
-    pre-split flat kwargs (``RouterConfig(alpha=0.05)``) forward into the
-    default ``HyperParams`` under a ``DeprecationWarning`` for one
-    release. ``cfg.alpha`` etc. remain readable as properties.
+    Hyper-parameters are constructed via ``hyper=HyperParams(...)``. The
+    pre-split flat kwargs (``RouterConfig(alpha=0.05)``) — deprecated
+    since the §9 split — are retired: they raise a ``TypeError`` naming
+    the migration, and the old ``cfg.alpha`` read-through attributes
+    raise ``AttributeError`` pointing at ``cfg.hyper.alpha``.
     """
 
     d: int = 26
@@ -191,22 +192,17 @@ class RouterConfig:
         dt_max: int = 4096,
         backend: str = "jnp",
         hyper: Optional[HyperParams] = None,
-        **legacy,
+        **unknown,
     ):
-        bad = set(legacy) - set(HYPER_FIELDS)
-        if bad:
-            raise TypeError(f"unknown RouterConfig arguments: {sorted(bad)}")
-        if legacy:
-            if hyper is not None:
-                raise TypeError(
-                    "pass hyper=HyperParams(...) or flat hyper kwargs, "
-                    "not both")
-            warnings.warn(
-                "flat hyper-parameter kwargs on RouterConfig "
-                f"({sorted(legacy)}) are deprecated; pass "
-                "hyper=HyperParams(...) instead (DESIGN.md §9)",
-                DeprecationWarning, stacklevel=2)
-            hyper = HyperParams(**legacy)
+        stale = sorted(set(unknown) & set(HYPER_FIELDS))
+        if stale:
+            raise TypeError(
+                f"RouterConfig no longer accepts flat hyper-parameter "
+                f"kwargs ({stale}); pass hyper=HyperParams(...) instead "
+                "(DESIGN.md §9)")
+        if unknown:
+            raise TypeError(
+                f"unknown RouterConfig arguments: {sorted(unknown)}")
         object.__setattr__(self, "d", d)
         object.__setattr__(self, "max_arms", max_arms)
         object.__setattr__(self, "forced_pulls", forced_pulls)
@@ -229,15 +225,15 @@ class RouterConfig:
         return Statics(self.d, self.max_arms, self.forced_pulls,
                        self.dt_max, self.backend)
 
-
-def _mk_hyper_property(name: str):
-    return property(
-        lambda self: getattr(self.hyper, name),
-        doc=f"Read-through to ``hyper.{name}`` (pre-split compatibility).")
-
-
-for _name in HYPER_FIELDS:
-    setattr(RouterConfig, _name, _mk_hyper_property(_name))
+    def __getattr__(self, name: str):
+        # Retired read-through properties (cfg.alpha etc.): fail with the
+        # migration spelled out. AttributeError (not TypeError) so the
+        # hasattr/getattr-default protocol keeps working for probes.
+        if name in HYPER_FIELDS:
+            raise AttributeError(
+                f"RouterConfig.{name} was removed with the legacy shim; "
+                f"read cfg.hyper.{name} instead (DESIGN.md §9)")
+        raise AttributeError(name)
 
 
 @jax.tree_util.register_dataclass

@@ -41,8 +41,8 @@ class TestShermanMorrison:
 
     def test_repeated_updates_stay_consistent(self):
         cfg = RouterConfig(d=6, max_arms=4, hyper=HyperParams(gamma=0.99))
-        A = jnp.eye(6) * cfg.lambda0
-        A_inv = jnp.eye(6) / cfg.lambda0
+        A = jnp.eye(6) * cfg.hyper.lambda0
+        A_inv = jnp.eye(6) / cfg.hyper.lambda0
         b = jnp.zeros(6)
         for i in range(30):
             x = rand_x(i)
@@ -99,7 +99,7 @@ class TestPacer:
         p = st.pacer
         for _ in range(500):
             p = pacer.pacer_update(CFG.hyper, p, jnp.float32(100.0))
-        assert float(p.lam) <= CFG.lambda_bar + 1e-6
+        assert float(p.lam) <= CFG.hyper.lambda_bar + 1e-6
 
     def test_lambda_decays_when_underspending(self):
         st = mk_state(budget=1.0)

@@ -1,8 +1,8 @@
 """Hyper-parameters as data (DESIGN.md §9): the Statics/HyperParams
-split, the legacy RouterConfig shim, HyperParams as a state leaf through
-run/run_scenario/sweep, the HyperShift scenario event, the Pallas backend
-under the fabric's flattened vmap axis, and zero-retrace retuning of a
-live PortfolioServer."""
+split, the retired legacy RouterConfig shim, HyperParams as a state leaf
+through run/run_scenario/sweep, the HyperShift scenario event, the Pallas
+backend under the fabric's flattened vmap axis, and zero-retrace retuning
+of a live PortfolioServer."""
 import dataclasses
 import warnings
 
@@ -57,17 +57,21 @@ class TestConfigSplit:
             RouterConfig().statics
         assert RouterConfig(d=8).statics == Statics(d=8)
 
-    def test_legacy_kwargs_forward_with_deprecation(self):
-        with pytest.warns(DeprecationWarning, match="hyper=HyperParams"):
-            cfg = RouterConfig(max_arms=4, alpha=0.05, gamma=0.99)
-        assert cfg.hyper == HyperParams(alpha=0.05, gamma=0.99)
-        assert cfg.max_arms == 4
-        # read-through properties keep old call sites working
-        assert cfg.alpha == 0.05 and cfg.gamma == 0.99
-
-    def test_legacy_kwargs_and_hyper_conflict(self):
-        with pytest.raises(TypeError, match="not both"):
+    def test_legacy_kwargs_are_retired(self):
+        """The pre-split flat kwargs (deprecated since the §9 split) now
+        fail loudly with the migration spelled out."""
+        with pytest.raises(TypeError, match="hyper=HyperParams"):
+            RouterConfig(max_arms=4, alpha=0.05, gamma=0.99)
+        with pytest.raises(TypeError, match="hyper=HyperParams"):
             RouterConfig(alpha=0.05, hyper=HyperParams())
+
+    def test_read_through_properties_are_retired(self):
+        cfg = RouterConfig(hyper=HyperParams(alpha=0.05))
+        # AttributeError (not TypeError): hasattr probes must keep working
+        with pytest.raises(AttributeError, match="cfg.hyper.alpha"):
+            cfg.alpha
+        assert not hasattr(cfg, "alpha")
+        assert cfg.hyper.alpha == 0.05
 
     def test_unknown_kwarg_rejected(self):
         with pytest.raises(TypeError, match="unknown"):

@@ -164,7 +164,8 @@ class TestLinUCBScore:
         x = randn((6,))
         want = linucb.ucb_scores(
             cfg, cfg.hyper, theta, ainv, c_tilde, x, dt, lam)
-        pen = (cfg.lambda_c + lam) * c_tilde
+        pen = (cfg.hyper.lambda_c + lam) * c_tilde
         infl = jnp.ones((4,))
-        got = linucb_score(x[None], theta, ainv, pen, infl, alpha=cfg.alpha)
+        got = linucb_score(x[None], theta, ainv, pen, infl,
+                           alpha=cfg.hyper.alpha)
         np.testing.assert_allclose(got[0], want, rtol=2e-4, atol=2e-5)

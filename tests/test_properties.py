@@ -45,7 +45,7 @@ class TestPacerInvariants:
         for c in costs:
             p = pacer.pacer_update(CFG.hyper, p, jnp.float32(c))
             lam = float(p.lam)
-            assert 0.0 <= lam <= CFG.lambda_bar + 1e-6
+            assert 0.0 <= lam <= CFG.hyper.lambda_bar + 1e-6
 
     @given(budget=pos_f, lam=st.integers(1, 5000).map(lambda i: i / 1000.0))
     @settings(max_examples=30, deadline=None)
@@ -134,7 +134,7 @@ class TestRouterClosedLoop:
         assert ((arms >= 0) & (arms < 3)).all()
         assert np.isfinite(np.asarray(lam)).all()
         assert (np.asarray(lam) >= 0).all()
-        assert (np.asarray(lam) <= CFG.lambda_bar + 1e-5).all()
+        assert (np.asarray(lam) <= CFG.hyper.lambda_bar + 1e-5).all()
         for leaf in jax.tree.leaves(final):
             assert np.isfinite(np.asarray(leaf)).all()
 

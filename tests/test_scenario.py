@@ -1,6 +1,7 @@
 """Scenario engine: spec structure, stream compilation, exact equivalence
 with the hand-rolled host-loop protocols it replaced, the one-jitted-call
-(no retrace) contract, both data planes, and RunResult segment utilities."""
+(no retrace) contract, parameterized payloads (Param/ScenarioParams,
+DESIGN.md §10), both data planes, and RunResult segment utilities."""
 import dataclasses
 
 import jax
@@ -9,8 +10,8 @@ import pytest
 
 from repro.core import evaluate, pacer, registry, scenario, simulator
 from repro.core.scenario import (
-    AddArm, BudgetChange, DeleteArm, PriceChange, QualityShift, ScenarioSpec,
-    TrafficMixShift,
+    AddArm, BudgetChange, DeleteArm, HyperShift, Param, PriceChange,
+    QualityShift, ScenarioParams, ScenarioSpec, TrafficMixShift,
 )
 from repro.core.types import RouterConfig
 
@@ -280,6 +281,199 @@ class TestBothDataPlanes:
         # burn-in routes to the newcomer on both planes
         assert (scalar.segment(1).arms[:, :CFG.forced_pulls] == 3).all()
         assert (batched.segment(1).arms[:, :CFG.forced_pulls] == 3).all()
+
+
+def _assert_bitwise(a, b):
+    np.testing.assert_array_equal(a.arms, b.arms)
+    np.testing.assert_array_equal(a.rewards, b.rewards)
+    np.testing.assert_array_equal(a.costs, b.costs)
+    np.testing.assert_array_equal(a.lams, b.lams)
+
+
+class TestParamPayloads:
+    """Payloads as data (DESIGN.md §10): a ``Param`` payload resolved to
+    value v must reproduce the concrete-payload spec at v bit-for-bit,
+    and sweeping payload values must never retrace."""
+
+    def test_stream_payloads_match_concrete_bitwise(self, env):
+        """Silent price multiplier + quality target as traced stream
+        transforms == the numpy-baked concrete lowering, exactly."""
+        mk = lambda m, t: ScenarioSpec(horizon=120, events=(
+            PriceChange(40, GEMINI, m),
+            QualityShift(80, MISTRAL, t)), stream_seed_base=900)
+        concrete = evaluate.run_scenario(
+            CFG, mk(1 / 56, 0.72), env, 6.6e-4, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("mult"), Param("target")), env, 6.6e-4,
+            seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=1 / 56, target=0.72))
+        _assert_bitwise(concrete, param)
+
+    def test_hypershift_param_matches_concrete_bitwise(self, env):
+        mk = lambda g: ScenarioSpec(horizon=120, events=(
+            HyperShift(80, gamma=g),), stream_seed_base=901)
+        concrete = evaluate.run_scenario(
+            CFG, mk(0.9), env, 1.9e-3, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("g")), env, 1.9e-3, seeds=SEEDS,
+            scenario_params=ScenarioParams(g=0.9))
+        _assert_bitwise(concrete, param)
+
+    def test_budget_param_matches_host_loop_bitwise(self, env):
+        """A Param ceiling is an *operand*, exactly like the hand-rolled
+        host loop's vmapped ``set_budget`` — so the two agree bit-for-bit.
+        (A concrete BudgetChange payload is a trace constant: XLA folds
+        the pacer's division by it into a reciprocal multiply, 1 ulp off
+        either operand lowering — DESIGN.md §10.)"""
+        t1, T = 60, 140
+        seg1, seg2 = [], []
+        for s in SEEDS:
+            rng = np.random.default_rng(920 + s)
+            seg1.append(env.subset(rng.integers(0, env.n, t1)))
+            seg2.append(env.subset(rng.integers(0, env.n, T - t1)))
+        states = evaluate.make_states(CFG, env, 1.9e-3, SEEDS)
+        res1, states = evaluate.run(CFG, seg1, 1.9e-3, seeds=SEEDS,
+                                    states=states, shuffle=False,
+                                    return_states=True)
+        states = jax.vmap(lambda st: dataclasses.replace(
+            st, pacer=pacer.set_budget(st.pacer, 3.0e-4)))(states)
+        res2, _ = evaluate.run(CFG, seg2, 1.9e-3, seeds=SEEDS,
+                               states=states, shuffle=False,
+                               return_states=True)
+        old = evaluate.RunResult.concat([res1, res2])
+        spec = ScenarioSpec(horizon=T, events=(
+            BudgetChange(t1, Param("ceiling")),), stream_seed_base=920)
+        new = evaluate.run_scenario(
+            CFG, spec, env, 1.9e-3, seeds=SEEDS,
+            scenario_params=ScenarioParams(ceiling=3.0e-4))
+        _assert_bitwise(old, new)
+
+    def test_budget_param_close_to_concrete(self, env):
+        """Concrete vs Param ceiling: identical routing, lams within the
+        constant-folding ulp."""
+        mk = lambda b: ScenarioSpec(horizon=120, events=(
+            BudgetChange(40, b),), stream_seed_base=921)
+        concrete = evaluate.run_scenario(
+            CFG, mk(3.0e-4), env, 1.9e-3, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("ceiling")), env, 1.9e-3, seeds=SEEDS,
+            scenario_params=ScenarioParams(ceiling=3.0e-4))
+        np.testing.assert_array_equal(concrete.arms, param.arms)
+        np.testing.assert_array_equal(concrete.rewards, param.rewards)
+        np.testing.assert_array_equal(concrete.costs, param.costs)
+        np.testing.assert_allclose(concrete.lams, param.lams, atol=1e-6)
+
+    def test_recalibrate_param_matches_concrete_at_exact_mult(self, env):
+        """The Param recalibrate lowering is f32 (the concrete one keeps
+        the historical host-f64 math, 1 ulp apart in general); at a
+        power-of-two multiplier both are exact, so bits must agree."""
+        mk = lambda m: ScenarioSpec(horizon=120, events=(
+            PriceChange(40, GEMINI, m, recalibrate=True),),
+            stream_seed_base=902)
+        concrete = evaluate.run_scenario(CFG, mk(0.25), env, 6.6e-4,
+                                         seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("m")), env, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(m=0.25))
+        _assert_bitwise(concrete, param)
+
+    def test_add_arm_param_payloads(self, env4):
+        """n_eff / bias_reward as Params (values chosen so the f32 and
+        host-float lowerings round identically)."""
+        mk = lambda ne, br: ScenarioSpec(
+            horizon=120, events=(AddArm(40, 3, n_eff=ne, bias_reward=br),),
+            stream_seed_base=903, init_active=3)
+        concrete = evaluate.run_scenario(
+            CFG, mk(130.0, 0.5), env4, 6.6e-4, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("ne"), Param("bias")), env4, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(ne=130.0, bias=0.5))
+        _assert_bitwise(concrete, param)
+        # burn-in still lands on the newcomer through the param path
+        assert (param.segment(1).arms[:, :CFG.forced_pulls] == 3).all()
+
+    def test_add_arm_packed_prior_param(self, env4):
+        priors = evaluate.fit_warmup_priors(CFG, env4)
+        mk = lambda p: ScenarioSpec(
+            horizon=120, events=(AddArm(40, 3, prior=p, n_eff=100.0),),
+            stream_seed_base=904, init_active=3)
+        concrete = evaluate.run_scenario(
+            CFG, mk(priors[3]), env4, 6.6e-4, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, mk(Param("prior")), env4, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(prior=priors[3]))
+        _assert_bitwise(concrete, param)
+
+    def test_no_retrace_across_payload_values(self, env):
+        spec = ScenarioSpec(horizon=90, events=(
+            PriceChange(30, GEMINI, Param("mult")),
+            QualityShift(60, MISTRAL, Param("target"))),
+            stream_seed_base=905)
+        evaluate.run_scenario(
+            CFG, spec, env, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=0.1, target=0.7))
+        count = scenario.TRACE_COUNT[0]
+        evaluate.run_scenario(
+            CFG, spec, env, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=2.0, target=0.95))
+        assert scenario.TRACE_COUNT[0] == count, (
+            "payload values must be data, not structure")
+
+    def test_missing_and_extra_params_rejected(self, env):
+        spec = ScenarioSpec(horizon=60, events=(
+            PriceChange(30, GEMINI, Param("mult")),), stream_seed_base=906)
+        with pytest.raises(ValueError, match="mult"):
+            evaluate.run_scenario(CFG, spec, env, 6.6e-4, seeds=SEEDS)
+        with pytest.raises(ValueError, match="typo"):
+            evaluate.run_scenario(
+                CFG, spec, env, 6.6e-4, seeds=SEEDS,
+                scenario_params=ScenarioParams(mult=0.1, typo=1.0))
+
+    def test_param_names_collects_references(self):
+        spec = ScenarioSpec(horizon=100, events=(
+            PriceChange(20, 2, Param("b")),
+            HyperShift(40, alpha=Param("a")),
+            BudgetChange(60, Param("c"))))
+        assert spec.param_names == ("a", "b", "c")
+
+    def test_mix_weights_resolve_host_side(self, env):
+        # weights exactly representable in f32: the param leaf is f32,
+        # the concrete tuple is f64, and the draw must not depend on it
+        w = tuple(3.0 if f == 1 else 0.25 for f in range(9))
+        mk = lambda ws: ScenarioSpec(
+            horizon=400, events=(TrafficMixShift(200, ws),),
+            stream_seed_base=907)
+        concrete = evaluate.run_scenario(CFG, mk(w), env, 6.6e-4,
+                                         seeds=(0, 1))
+        param = evaluate.run_scenario(
+            CFG, mk(Param("mix")), env, 6.6e-4, seeds=(0, 1),
+            scenario_params=ScenarioParams(mix=np.asarray(w, np.float32)))
+        _assert_bitwise(concrete, param)
+
+    def test_stacked_mix_weights_rejected(self, env):
+        """Mix weights are structural (they change the prompt draw):
+        a per-condition stack must fail loudly."""
+        spec = ScenarioSpec(horizon=100, events=(
+            TrafficMixShift(50, Param("mix")),), stream_seed_base=908)
+        stacked = np.ones((2, 9), np.float32)
+        with pytest.raises(ValueError, match="structural"):
+            evaluate.run_scenario(
+                CFG, spec, env, 6.6e-4, seeds=(0,),
+                scenario_params=ScenarioParams(mix=stacked))
+
+    def test_param_multiplier_is_not_the_restore(self, env):
+        """A Param multiplier resolved to 1.0 multiplies by 1.0 (exact)
+        rather than popping the modifier — bits match the base run."""
+        base = evaluate.run_scenario(
+            CFG, ScenarioSpec(horizon=90, events=(
+                PriceChange(30, GEMINI, 1.0),), stream_seed_base=909),
+            env, 6.6e-4, seeds=SEEDS)
+        param = evaluate.run_scenario(
+            CFG, ScenarioSpec(horizon=90, events=(
+                PriceChange(30, GEMINI, Param("m")),), stream_seed_base=909),
+            env, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(m=1.0))
+        _assert_bitwise(base, param)
 
 
 class TestRunResultUtils:

@@ -1,7 +1,9 @@
 """Grid-sweep fabric: bit-for-bit equivalence with the looped
 per-condition baseline, the whole-grid-compiles-once contract, budget
-stacking in make_states, scenario grids, device sharding, and the
-RunResult.phase segment-structure fix that rides along."""
+stacking in make_states, scenario grids, payload-parameter grids
+(ScenarioParams on the condition axis, DESIGN.md §10), grid-argument
+guards, device sharding, and the RunResult.phase segment-structure fix
+that rides along."""
 import os
 import subprocess
 import sys
@@ -11,8 +13,10 @@ import numpy as np
 import pytest
 
 from repro.core import evaluate, simulator, sweep
-from repro.core.scenario import PriceChange, QualityShift, ScenarioSpec
-from repro.core.types import RouterConfig
+from repro.core.scenario import (
+    Param, PriceChange, QualityShift, ScenarioParams, ScenarioSpec,
+)
+from repro.core.types import HyperParams, RouterConfig
 from repro.launch import mesh as mesh_lib
 
 CFG = RouterConfig()
@@ -157,6 +161,197 @@ class TestScenarioGrid:
         res = evaluate.run_scenario(CFG, self.SPEC, env, BUDGETS[1],
                                     seeds=SEEDS, batch_size=16)
         _assert_bitwise(grid.condition(1), res)
+
+
+class TestScenarioParamGrid:
+    """Whole spec *families* on the condition axis: a (payload x budget
+    x seed) grid compiles ONCE and is bit-identical per condition to
+    looping ``run_scenario`` over the equivalent concrete-payload specs
+    (the ISSUE-5 acceptance grids)."""
+
+    MULTS = (1 / 56, 0.3, 2.0)
+    TARGETS = (0.6, 0.75, 0.9)
+    BUDGETS2 = (3.0e-4, 6.6e-4)
+
+    @staticmethod
+    def _price_spec(mult):
+        return ScenarioSpec(horizon=90, events=(
+            PriceChange(30, 2, mult), PriceChange(60, 2, 1.0)),
+            stream_seed_base=50, replay=((2, 0),))
+
+    @staticmethod
+    def _quality_spec(target):
+        return ScenarioSpec(horizon=90, events=(
+            QualityShift(30, 1, target), QualityShift(60, 1, None)),
+            stream_seed_base=51, replay=((2, 0),))
+
+    def _grid_axes(self, payloads):
+        b_flat = tuple(np.tile(self.BUDGETS2, len(payloads)))
+        p_flat = np.repeat(np.asarray(payloads, np.float32),
+                           len(self.BUDGETS2))
+        return b_flat, p_flat
+
+    def test_price_multiplier_grid_bitwise_single_trace(self, env):
+        b_flat, m_flat = self._grid_axes(self.MULTS)
+        before = sweep.TRACE_COUNT[0]
+        grid = sweep.run_scenario_grid(
+            CFG, self._price_spec(Param("mult")), env, b_flat, seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=m_flat))
+        assert sweep.TRACE_COUNT[0] == before + 1, (
+            "the whole (multiplier x budget x seed) family must compile "
+            "as one program")
+        for i, (m, b) in enumerate(zip(m_flat, b_flat)):
+            res = evaluate.run_scenario(
+                CFG, self._price_spec(float(m)), env, b, seeds=SEEDS)
+            _assert_bitwise(grid.condition(i), res)
+        np.testing.assert_allclose(grid.params["mult"], m_flat)
+
+    def test_quality_target_grid_bitwise_single_trace(self, env):
+        b_flat, t_flat = self._grid_axes(self.TARGETS)
+        before = sweep.TRACE_COUNT[0]
+        grid = sweep.run_scenario_grid(
+            CFG, self._quality_spec(Param("target")), env, b_flat,
+            seeds=SEEDS, scenario_params=ScenarioParams(target=t_flat))
+        assert sweep.TRACE_COUNT[0] == before + 1
+        for i, (t, b) in enumerate(zip(t_flat, b_flat)):
+            res = evaluate.run_scenario(
+                CFG, self._quality_spec(float(t)), env, b, seeds=SEEDS)
+            _assert_bitwise(grid.condition(i), res)
+
+    def test_new_payload_values_reenter_same_program(self, env):
+        b_flat, m_flat = self._grid_axes(self.MULTS)
+        spec = self._price_spec(Param("mult"))
+        sweep.run_scenario_grid(CFG, spec, env, b_flat, seeds=SEEDS,
+                                scenario_params=ScenarioParams(mult=m_flat))
+        before = sweep.TRACE_COUNT[0]
+        sweep.run_scenario_grid(
+            CFG, spec, env, b_flat, seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=2.0 * m_flat))
+        assert sweep.TRACE_COUNT[0] == before, (
+            "payload values are data; re-running must not retrace")
+
+    def test_param_edit_equals_stacked_leaves(self, env):
+        """Per-condition ``param_edit`` entries fold into the same
+        stacked leaves as an explicit (C,) ScenarioParams."""
+        spec = self._price_spec(Param("mult"))
+        budgets = (6.6e-4,) * len(self.MULTS)
+        a = sweep.run_scenario_grid(
+            CFG, spec, env, budgets, seeds=SEEDS,
+            scenario_params=ScenarioParams(
+                mult=np.asarray(self.MULTS, np.float32)))
+        b = sweep.run_scenario_grid(
+            CFG, spec, env, budgets, seeds=SEEDS,
+            condition_edits=[sweep.param_edit(mult=m) for m in self.MULTS])
+        for i in range(len(self.MULTS)):
+            _assert_bitwise(a.condition(i), b.condition(i))
+
+    def test_chained_hyper_and_param_edits(self, env):
+        """Satellite: ``chain_edits(hyper_edit(...), param_edit(...))``
+        puts an (alpha, payload) pair per condition on one fused grid,
+        bit-identical to looping run_scenario with the same knobs."""
+        cells = ((0.01, 1 / 56), (0.1, 0.3), (0.2, 2.0))
+        spec = self._price_spec(Param("mult"))
+        grid = sweep.run_scenario_grid(
+            CFG, spec, env, (6.6e-4,) * len(cells), seeds=SEEDS,
+            condition_edits=[
+                sweep.chain_edits(sweep.hyper_edit(alpha=a),
+                                  sweep.param_edit(mult=m))
+                for a, m in cells])
+        for i, (a, m) in enumerate(cells):
+            res = evaluate.run_scenario(
+                CFG, self._price_spec(m), env, 6.6e-4, seeds=SEEDS,
+                hyper=HyperParams(alpha=a))
+            _assert_bitwise(grid.condition(i), res)
+
+    def test_param_edit_rejected_on_plain_grid(self, env):
+        with pytest.raises(ValueError, match="run_scenario_grid"):
+            sweep.run_grid(CFG, env, (6.6e-4,), seeds=SEEDS,
+                           condition_edits=[sweep.param_edit(mult=0.5)])
+
+    def test_partial_param_edit_without_base_rejected(self, env):
+        spec = self._price_spec(Param("mult"))
+        with pytest.raises(ValueError, match="no base value"):
+            sweep.run_scenario_grid(
+                CFG, spec, env, (6.6e-4, 6.6e-4), seeds=SEEDS,
+                condition_edits=[sweep.param_edit(mult=0.5), None])
+
+    def test_partial_param_edit_with_base_fallback(self, env):
+        spec = self._price_spec(Param("mult"))
+        grid = sweep.run_scenario_grid(
+            CFG, spec, env, (6.6e-4, 6.6e-4), seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=0.3),
+            condition_edits=[sweep.param_edit(mult=2.0), None])
+        for i, m in enumerate((2.0, 0.3)):
+            res = evaluate.run_scenario(
+                CFG, self._price_spec(m), env, 6.6e-4, seeds=SEEDS)
+            _assert_bitwise(grid.condition(i), res)
+
+
+class TestGridGuards:
+    """Satellite: degenerate grid arguments fail with explicit
+    ValueErrors, not cryptic reshape/vmap/mesh errors."""
+
+    SPEC = ScenarioSpec(horizon=60, events=(QualityShift(30, 1, 0.7),),
+                        stream_seed_base=52)
+
+    def test_empty_budgets(self, env):
+        with pytest.raises(ValueError, match="budgets is empty"):
+            sweep.run_grid(CFG, env, (), seeds=SEEDS)
+        with pytest.raises(ValueError, match="budgets is empty"):
+            sweep.run_scenario_grid(CFG, self.SPEC, env, (), seeds=SEEDS)
+
+    def test_empty_seeds(self, env):
+        with pytest.raises(ValueError, match="seeds is empty"):
+            sweep.run_grid(CFG, env, BUDGETS, seeds=())
+        with pytest.raises(ValueError, match="seeds is empty"):
+            sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS, seeds=())
+
+    def test_mismatched_condition_edits(self, env):
+        with pytest.raises(ValueError, match="condition_edits"):
+            sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS,
+                           condition_edits=[None])
+        with pytest.raises(ValueError, match="condition_edits"):
+            sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS,
+                                    seeds=SEEDS, condition_edits=[None, None])
+
+
+class TestPriceChangeConcatStrict:
+    """Regression (satellite): a PriceChange protocol composes with
+    ``concat_environments``' strict rate-card check — the hand-rolled
+    three-phase stream must opt out explicitly (prices='first'), while
+    the engine's per-segment gather needs no concat at all, and the two
+    lowerings agree bit-for-bit."""
+
+    def test_strict_concat_rejects_drifted_phase(self, env):
+        drifted = simulator.with_price_multiplier(env, 2, 1 / 56)
+        with pytest.raises(ValueError, match="rate card"):
+            simulator.concat_environments((env, drifted, env))
+
+    def test_spec_matches_optout_hand_roll(self, env):
+        phase = 60
+        envs = []
+        for s in SEEDS:
+            rng = np.random.default_rng(3000 + s)
+            envs.append(simulator.three_phase_stream(
+                env,
+                lambda e: simulator.with_price_multiplier(e, 2, 1 / 56),
+                rng, phase_len=phase))   # uses prices='first' internally
+        old = evaluate.run(CFG, envs, 6.6e-4, seeds=SEEDS, shuffle=False)
+        spec = ScenarioSpec(horizon=3 * phase, events=(
+            PriceChange(phase, 2, 1 / 56),
+            PriceChange(2 * phase, 2, 1.0)),
+            stream_seed_base=3000, replay=((2, 0),))
+        new = evaluate.run_scenario(CFG, spec, env, 6.6e-4, seeds=SEEDS)
+        _assert_bitwise(old, new)
+        # and the same protocol as a *family*: the Param lowering agrees
+        pspec = ScenarioSpec(horizon=3 * phase, events=(
+            PriceChange(phase, 2, Param("mult")),
+            PriceChange(2 * phase, 2, 1.0)),
+            stream_seed_base=3000, replay=((2, 0),))
+        fam = evaluate.run_scenario(
+            CFG, pspec, env, 6.6e-4, seeds=SEEDS,
+            scenario_params=ScenarioParams(mult=1 / 56))
+        _assert_bitwise(old, fam)
 
 
 class TestDeviceSharding:
