@@ -84,7 +84,7 @@ def _cell_hyper(cells, reps=1):
 
 def score_grid_fused(t_adapt, use_priors, seeds, *, env=None, priors=None,
                      alphas=ALPHAS, gammas=GAMMAS, auc_budgets=AUC_BUDGETS,
-                     phase=PHASE, return_raw=False):
+                     phase=PHASE, return_raw=False, chunk_size=None):
     """The whole (alpha x gamma x budget x seed) selection grid as ONE
     compiled, device-sharded fabric call (plus one more for the Phase-2
     stress grid, whose stream shapes differ).
@@ -93,7 +93,13 @@ def score_grid_fused(t_adapt, use_priors, seeds, *, env=None, priors=None,
     ``HyperParams`` leaves, and each cell's gamma-derived warm start as a
     per-condition ``n_eff`` — both applied inside ``make_states``' single
     vmap (DESIGN.md §7/§9), so the host-side setup cost does not grow
-    with the number of cells."""
+    with the number of cells.
+
+    ``chunk_size`` bounds the live per-step working set of each fabric
+    call (sweep.run_grid's scan-over-chunks; results bit-identical):
+    the full AUC grid is 28 cells x 5 budgets x 10 seeds = 1400 live
+    elements, whose combined per-step state spills the CPU last-level
+    cache. Non-divisors are fitted per grid via ``sweep.fit_chunk``."""
     if env is None:
         env = benchmark().val
     if use_priors and priors is None:
@@ -108,10 +114,17 @@ def score_grid_fused(t_adapt, use_priors, seeds, *, env=None, priors=None,
     # consecutive conditions [i*nb, (i+1)*nb).
     nb = len(auc_budgets)
     budgets = [b for _ in cells for b in auc_budgets]
+
+    def fit(C):
+        if chunk_size is None:
+            return None
+        return sweep.fit_chunk(C * len(seeds), chunk_size)
+
     grid = sweep.run_grid(
         cfg, env, budgets, seeds=seeds,
         hyper=_cell_hyper(cells, reps=nb),
-        n_eff=np.repeat(n_effs, nb) if use_priors else 0.0, **kw)
+        n_eff=np.repeat(n_effs, nb) if use_priors else 0.0,
+        chunk_size=fit(len(budgets)), **kw)
 
     # Objective 2: Phase-2 reward under the Mistral failure, one
     # condition per cell over per-seed two-phase streams.
@@ -120,7 +133,7 @@ def score_grid_fused(t_adapt, use_priors, seeds, *, env=None, priors=None,
         cfg, envs, (PHASE2_BUDGET,) * len(cells), seeds=seeds,
         hyper=_cell_hyper(cells),
         n_eff=np.asarray(n_effs) if use_priors else 0.0,
-        shuffle=False, **kw)
+        shuffle=False, chunk_size=fit(len(cells)), **kw)
 
     results = []
     for i, (a, g) in enumerate(cells):
@@ -234,9 +247,12 @@ def score_grid_presplit(t_adapt, use_priors, seeds, **grid_kw):
     return results
 
 
-def run_baseline_gate(seeds, grid_kw, repeats=1):
+def run_baseline_gate(seeds, grid_kw, repeats=1, chunk=None):
     """Bit-identity gate + looped-vs-fused wall clock for the headline
-    (warmup, T_adapt=500) variant. Returns emit rows."""
+    (warmup, T_adapt=500) variant. With ``chunk``, additionally gates
+    the chunked fabric (bit-identical to unchunked) and records its
+    wall clock — the fix for the wide grid's cache-spilling per-step
+    working set. Returns emit rows."""
     rows = []
     n_cells = len(grid_kw["alphas"]) * len(grid_kw["gammas"])
     nb = len(grid_kw["auc_budgets"])
@@ -291,6 +307,21 @@ def run_baseline_gate(seeds, grid_kw, repeats=1):
     rows.append(["knee_speedup", f"{looped_warm / fused_warm:.2f}x",
                  f"cold {looped_cold / fused_cold:.2f}x; warm vs the "
                  "already-cache-sharing looped protocol"])
+
+    if chunk:
+        chunked_res = score_grid_fused(500.0, True, seeds,
+                                       chunk_size=chunk, **grid_kw)
+        assert chunked_res == fused_res, (
+            "chunked fabric diverged from the unchunked grid")
+        _clear_program_caches()
+        ch_cold, ch_warm = _time(
+            lambda: score_grid_fused(500.0, True, seeds, chunk_size=chunk,
+                                     **grid_kw), repeats)
+        rows.append(["knee_chunked_equivalence", "bit_identical",
+                     f"chunk_size={chunk} vs whole-grid-live fabric"])
+        rows.append(["knee_chunked_s", f"{ch_warm:.3f}",
+                     f"cold={ch_cold:.3f};chunk={chunk};"
+                     f"warm_vs_unchunked={fused_warm / ch_warm:.2f}x"])
     return rows
 
 
@@ -306,6 +337,9 @@ def main(seeds=None, argv=None):
                     help="warm-timing repeats for --baseline")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N CPU placeholder devices (before jax init)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="also gate + time the chunk_size=N fabric "
+                         "(bounded per-step working set; bit-identical)")
     args = ap.parse_args([] if argv is None else argv)
 
     if args.smoke:
@@ -328,7 +362,8 @@ def main(seeds=None, argv=None):
 
     rows = []
     if args.baseline or args.smoke:
-        rows.extend(run_baseline_gate(seeds, grid_kw, repeats=args.repeats))
+        rows.extend(run_baseline_gate(seeds, grid_kw, repeats=args.repeats,
+                                      chunk=args.chunk or None))
 
     for variant, use_priors in variants:
         res = score_grid_fused(500.0, use_priors, seeds, **grid_kw)

@@ -10,8 +10,21 @@ pipeline (hash-encode + PCA + route).
 Absolute numbers are container-CPU specific; the paper's *relative*
 claims (SM update advantage, d^2 scaling, sub-% share of inference
 latency) are the reproduction targets.
+
+The fused-step section (``--smoke`` or appended to a full run) gates and
+times the ``pallas_fused`` megakernel (DESIGN.md §11) against the
+looped score-kernel + XLA-update path and records the comparison —
+equivalence, zero-retrace, per-B wall clock, ``block_r`` autotune — to
+``benchmarks/results/fused_step.json`` (the CI ``fused-step`` job's
+artifact).
 """
 from __future__ import annotations
+
+import sys
+
+from benchmarks._devices import apply_devices_flag
+
+apply_devices_flag(sys.argv)  # must precede any jax import
 
 import time
 
@@ -21,6 +34,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import router
+from repro.core import types as types_lib
 from repro.core.types import HyperParams, RouterConfig, init_state
 
 N_CYCLES = 2000
@@ -182,7 +196,7 @@ def time_pallas_batch(n_requests=4096):
 # ---------------------------------------------------------------------------
 
 BATCH_SIZES = (1, 8, 64, 256)
-BACKENDS = ("jnp", "pallas")
+BACKENDS = ("jnp", "pallas", "pallas_fused")
 
 
 def time_batched_sweep(batch_sizes=BATCH_SIZES, backends=BACKENDS,
@@ -236,6 +250,112 @@ def backend_score_divergence(B=256, d=26, K=3, seed=0):
         jnp.float32(0.7))
 
 
+# ---------------------------------------------------------------------------
+# fused step megakernel: equivalence gates + looped-vs-fused wall clock
+# ---------------------------------------------------------------------------
+
+
+def _rand_block(rng, B, d, K=3):
+    X = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    R = jnp.asarray(rng.uniform(0.5, 1.0, (B, K)), jnp.float32)
+    C = jnp.asarray(rng.uniform(1e-5, 1e-3, (B, K)), jnp.float32)
+    return X, R, C
+
+
+def _warmed_state(d=26, K=3, blocks=4, seed=0):
+    """A state with non-trivial statistics (a few jnp-oracle blocks)."""
+    rng = np.random.default_rng(seed)
+    cfg = RouterConfig(d=d, max_arms=K, hyper=HyperParams(alpha=0.05))
+    prices = jnp.asarray([1e-4, 1e-3, 5.6e-3], jnp.float32)
+    state = init_state(cfg, prices, prices, budget=6.6e-4)
+    for _ in range(blocks):
+        X, R, C = _rand_block(rng, 16, d, K)
+        state, _ = router.step_batch(cfg, state, X, R, C)
+    return state, rng
+
+
+def fused_step_equivalence(B=256, d=26, seed=0):
+    """Fused megakernel vs jnp oracle on one warmed closed-loop block:
+    (arms identical?, max stats abs diff, max pacer abs diff)."""
+    state, rng = _warmed_state(d=d, seed=seed)
+    X, R, C = _rand_block(rng, B, d)
+    outs = {}
+    for bk in ("jnp", "pallas_fused"):
+        cfg = RouterConfig(d=d, max_arms=3, backend=bk,
+                           hyper=HyperParams(alpha=0.05))
+        outs[bk] = router.step_batch(cfg, state, X, R, C)
+    (sj, tj), (sf, tf) = outs["jnp"], outs["pallas_fused"]
+    arms_ok = bool(jnp.all(tj[0] == tf[0]))
+    stats = max(
+        float(jnp.max(jnp.abs(getattr(sj, n) - getattr(sf, n))))
+        for n in ("A", "A_inv", "b", "theta"))
+    pacer = max(float(jnp.abs(sj.pacer.lam - sf.pacer.lam)),
+                float(jnp.abs(sj.pacer.c_ema - sf.pacer.c_ema)))
+    return arms_ok, stats, pacer
+
+
+def fused_retrace_check(d=26, B=64, seed=0):
+    """New hyper values on a live fused-backend router must re-enter the
+    same compiled step (router.TRACE_COUNT stays flat)."""
+    state, rng = _warmed_state(d=d, seed=seed)
+    cfg = RouterConfig(d=d, max_arms=3, backend="pallas_fused",
+                       hyper=HyperParams(alpha=0.05))
+    cycle = jax.jit(lambda s, X, R, C: router.step_batch(cfg, s, X, R, C))
+    X, R, C = _rand_block(rng, B, d)
+    jax.block_until_ready(cycle(state, X, R, C)[0].A)       # compile
+    before = router.TRACE_COUNT[0]
+    retuned = types_lib.with_hyperparams(state, alpha=0.123, gamma=0.99,
+                                         eta=0.1)
+    jax.block_until_ready(cycle(retuned, X, R, C)[0].A)
+    return router.TRACE_COUNT[0] - before
+
+
+def fused_main(smoke: bool = False, repeats: int | None = None):
+    """Emit ``fused_step.json``: equivalence + retrace gates, per-B
+    looped-vs-fused wall clock, and the ``block_r`` autotune table."""
+    from repro.kernels import tune
+    rows = []
+
+    arms_ok, stats, pacer = fused_step_equivalence(B=256)
+    assert arms_ok, "fused megakernel picked different arms than the oracle"
+    assert stats <= 1e-4 and pacer <= 1e-4, (stats, pacer)
+    rows.append(["fused_equiv_arms_B256", "identical",
+                 "megakernel vs jnp oracle, warmed state"])
+    rows.append(["fused_equiv_stats_maxdiff", f"{stats:.2e}",
+                 "A/A_inv/b/theta after one B=256 block; contract <=1e-4"])
+    rows.append(["fused_equiv_pacer_maxdiff", f"{pacer:.2e}",
+                 "lam/c_ema after the in-kernel dual fold; contract <=1e-4"])
+
+    retraces = fused_retrace_check()
+    assert retraces == 0, f"fused step retraced on new hypers: {retraces}"
+    rows.append(["fused_retraces_on_new_hypers", "0",
+                 "alpha/gamma/eta retune re-enters the compiled megakernel"])
+
+    # Wall clock: the looped path (pallas score kernel + XLA update scan)
+    # vs the fused megakernel, full closed-loop step_batch cycle. Smoke
+    # trims the default reps, but an explicit --repeats wins either way:
+    # single-core CI hosts need a deeper best-of to shake scheduler noise.
+    reps = repeats if repeats is not None else (5 if smoke else 30)
+    sweep_t = time_batched_sweep(
+        backends=("jnp", "pallas", "pallas_fused"), reps=reps)
+    for B in BATCH_SIZES:
+        us_j = sweep_t[("jnp", B)][0]
+        us_l = sweep_t[("pallas", B)][0]
+        us_f = sweep_t[("pallas_fused", B)][0]
+        rows.append([f"step_B{B}_us_per_decision",
+                     f"jnp={us_j:.2f};looped={us_l:.2f};fused={us_f:.2f}",
+                     f"fused_vs_looped={us_l / us_f:.2f}x;"
+                     f"fused_vs_jnp={us_j / us_f:.2f}x"])
+
+    best, table = tune.autotune_block_r(
+        512 if smoke else 4096, 26, 3, repeats=2 if smoke else 3)
+    rows.append(["block_r_autotune_best", str(best),
+                 ";".join(f"br{k}={v * 1e3:.2f}ms"
+                          for k, v in sorted(table.items()))])
+    emit(rows, ["name", "value", "derived"], "fused_step")
+    return rows
+
+
 def main(quick: bool = False):
     rows = []
     n_prod = 200 if quick else 1000
@@ -281,5 +401,21 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
-    main(quick="--quick" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced reps (tier-1 CI smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fused-step gates + reduced-rep wall clock only, "
+                         "emits fused_step.json (CI fused-step job)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="warm-timing repeats for the fused-step section "
+                         "(default: 5 under --smoke/--quick, else 30)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N CPU placeholder devices (before jax init)")
+    args = ap.parse_args()
+    if args.smoke:
+        fused_main(smoke=True, repeats=args.repeats)
+    else:
+        main(quick=args.quick)
+        fused_main(smoke=args.quick, repeats=args.repeats)

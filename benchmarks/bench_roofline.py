@@ -1,6 +1,15 @@
 """§Roofline: tabulate the dry-run results (one row per arch x shape x
 mesh) with the three roofline terms, the dominant bottleneck, and the
-useful-FLOPs ratio. Reads benchmarks/results/dryrun/*.json."""
+useful-FLOPs ratio. Reads benchmarks/results/dryrun/*.json.
+
+Also emits the analytic arithmetic-intensity model for the fused step
+megakernel (DESIGN.md §11): fusing the whole per-block bandit body into
+one ``pallas_call`` leaves the FLOP count essentially unchanged but
+collapses the HBM traffic — the sufficient statistics are read and
+written ONCE per block instead of round-tripping per phase (and, in the
+update scan, per request) — so the kernel's FLOPs/byte rises toward the
+compute-bound regime as B grows.
+"""
 from __future__ import annotations
 
 import glob
@@ -10,8 +19,56 @@ import os
 from benchmarks.common import RESULTS_DIR, emit
 
 
-def main():
+def step_cost_model(B: int, K: int, d: int, fused: bool):
+    """(FLOPs, HBM bytes) for one closed-loop step-block (f32).
+
+    FLOPs count the same math either way — scoring (per-arm quadratic
+    form matmuls dominate), B Sherman-Morrison updates, theta refresh
+    (K matvecs fused — only the block-final theta is observable — vs B
+    per-request ones looped). Bytes model HBM traffic: the fused kernel
+    reads + writes the stats exactly once (aliased in/out, VMEM
+    resident); the looped path re-reads the inverses for scoring and
+    round-trips the chosen arm's (A, A_inv, b, theta) slabs through HBM
+    on every request of the update scan.
+    """
+    flops_score = 2 * B * K * d * d + 2 * B * K * d + 5 * B * K
+    flops_update = B * (4 * d * d       # gamma-decay A and A_inv
+                        + 2 * d * d     # + outer(x, x)
+                        + 2 * d * d     # A_inv @ x matvec
+                        + d * d + 2 * d  # - outer(Ax, Ax) / denom
+                        + 3 * d)        # b decay + r*x
+    flops_theta = (K if fused else B) * 2 * d * d
+    flops = flops_score + flops_update + flops_theta
+    stats = 4 * (2 * K * d * d + 2 * K * d + K)     # A, A_inv, b, theta, lu
+    streams = 4 * (B * d + 3 * B * K + 3 * B)       # X, R/C/noise, outputs
+    if fused:
+        bytes_ = 2 * stats + streams                # one read + one write
+    else:
+        score_read = 4 * (K * d * d + K * d)        # A_inv + theta again
+        upd_rw = 8 * B * (2 * d * d + 2 * d)        # per-request slab r/w
+        bytes_ = 2 * stats + score_read + upd_rw + streams
+    return flops, bytes_
+
+
+def fused_intensity_rows():
+    """Arithmetic-intensity table: fused megakernel vs looped path."""
     rows = []
+    for B, K, d in ((64, 3, 26), (256, 3, 26), (256, 8, 128)):
+        ff, bf = step_cost_model(B, K, d, fused=True)
+        fl, bl = step_cost_model(B, K, d, fused=False)
+        ai_f, ai_l = ff / bf, fl / bl
+        rows.append([
+            f"fused_step_intensity_B{B}_K{K}_d{d}",
+            f"{ai_f:.2f}",
+            f"flop_per_byte_looped={ai_l:.2f};gain={ai_f / ai_l:.2f}x;"
+            f"bytes_fused={bf / 1e3:.1f}KB;bytes_looped={bl / 1e3:.1f}KB;"
+            f"mflop={ff / 1e6:.2f}",
+        ])
+    return rows
+
+
+def main():
+    rows = fused_intensity_rows()
     paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "dryrun", "*.json")))
     if not paths:
         rows.append(["roofline", "no dryrun results",

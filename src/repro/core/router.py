@@ -18,6 +18,10 @@ Batched data plane (DESIGN.md §2): ``select_batch`` scores a (B, d) block
 of contexts against all arms in one backend call (jnp oracle or the
 Pallas ``linucb_score`` kernel, chosen by ``RouterConfig.backend``);
 ``update_batch`` applies a block of delayed feedback as one fused scan.
+With ``backend="pallas_fused"`` the closed-loop ``step_batch`` instead
+runs the whole block body — score, select, decay + Sherman-Morrison,
+pacer — as ONE Pallas megakernel (DESIGN.md §11) with the sufficient
+statistics VMEM-resident and aliased in/out.
 At gateway QPS this amortises the per-call dispatch overhead that
 dominates scalar routing, which is what makes the paper's µs-scale
 per-decision latency hold under load.
@@ -32,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as backend_lib
 from repro.core import linucb, pacer
-from repro.core.types import RouterConfig, RouterState
+from repro.core.types import PacerState, RouterConfig, RouterState
 
 Array = jax.Array
 
@@ -173,6 +177,34 @@ class BatchDecision(NamedTuple):
     forced: Array      # (B,) bool  — forced-exploration override fired
 
 
+def _tiebreak_noise(cfg: RouterConfig, hp, key: Array, B: int):
+    """B sequentially-chained tiebreak draws: key_i+1, sub_i = split(key_i),
+    so a block of B draws the same noise as B scalar selects. Returns
+    (advanced key, (B, K) noise). Shared by ``select_batch`` and the
+    fused step path so both consume the PRNG chain identically."""
+
+    def split_body(k, _):
+        k2, sub = jax.random.split(k)
+        return k2, sub
+
+    key, subs = jax.lax.scan(split_body, key, None, length=B)
+    noise = hp.tiebreak_scale * jax.vmap(
+        lambda s: jax.random.uniform(s, (cfg.max_arms,))
+    )(subs)                                                       # (B, K)
+    return key, noise
+
+
+def _forced_mask(state: RouterState, B: int):
+    """Forced-exploration burn-in for a block (§3.6/§4.5): the first
+    ``force_left`` requests route unconditionally to the newcomer.
+    Returns (idx (B,) i32, farm scalar i32, forced (B,) bool)."""
+    idx = jnp.arange(B, dtype=jnp.int32)
+    farm = jnp.clip(state.force_arm, 0)
+    forced = (idx < state.force_left) & (state.force_arm >= 0)
+    forced = forced & state.active[farm]
+    return idx, farm, forced
+
+
 def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
     """Algorithm 1 lines 3-15 for a (B, d) block of concurrent requests.
 
@@ -207,24 +239,11 @@ def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
         state.pacer.lam,
     )                                                             # (B, K)
 
-    # Sequentially-chained tiebreak keys: key_i+1, sub_i = split(key_i).
-    def split_body(k, _):
-        k2, sub = jax.random.split(k)
-        return k2, sub
-
-    key, subs = jax.lax.scan(split_body, state.key, None, length=B)
-    noise = hp.tiebreak_scale * jax.vmap(
-        lambda s: jax.random.uniform(s, (cfg.max_arms,))
-    )(subs)                                                       # (B, K)
+    key, noise = _tiebreak_noise(cfg, hp, state.key, B)
     masked = jnp.where(cand[None, :], scores + noise, NEG_INF)    # line 13
     arms = jnp.argmax(masked, axis=1).astype(jnp.int32)           # line 14
 
-    # Forced-exploration burn-in (§3.6/§4.5): the first ``force_left``
-    # requests of the block route unconditionally to the newcomer.
-    idx = jnp.arange(B, dtype=jnp.int32)
-    farm = jnp.clip(state.force_arm, 0)
-    forced = (idx < state.force_left) & (state.force_arm >= 0)
-    forced = forced & state.active[farm]
+    idx, farm, forced = _forced_mask(state, B)
     arms = jnp.where(forced, farm, arms)
 
     played_at = state.t + 1 + idx                                 # line 15
@@ -270,13 +289,60 @@ def update_batch(
     return dataclasses.replace(state, pacer=p)
 
 
+def _step_batch_fused(cfg: RouterConfig, backend, state: RouterState,
+                      X: Array, rewards: Array, costs: Array):
+    """The ``pallas_fused`` closed-loop block step (DESIGN.md §11).
+
+    Bookkeeping that needs the PRNG chain or host-side counters (tiebreak
+    noise, forced-exploration mask) stays here; the backend's
+    ``step_block`` megakernel does everything touching the sufficient
+    statistics. State reassembly mirrors ``select_batch`` +
+    ``update_batch`` exactly: same last_play scatter-max, same t += B,
+    same force_left decrement, same ``pacer.enabled`` gate.
+    """
+    TRACE_COUNT[0] += 1       # moves only while tracing (under jit)
+    B = X.shape[0]
+    key, noise = _tiebreak_noise(cfg, state.hyper, state.key, B)
+    idx, farm, forced = _forced_mask(state, B)
+    (A2, Ainv2, b2, theta2, lu2, arms, r, c, lam_k, cema_k) = (
+        backend.step_block(cfg, state, X, rewards, costs, noise, farm,
+                           forced))
+    enabled = state.pacer.enabled
+    p = PacerState(
+        lam=jnp.where(enabled, lam_k, state.pacer.lam),
+        c_ema=jnp.where(enabled, cema_k, state.pacer.c_ema),
+        budget=state.pacer.budget,
+        enabled=enabled,
+    )
+    played_at = state.t + 1 + idx                                 # line 15
+    new_state = dataclasses.replace(
+        state,
+        A=A2, A_inv=Ainv2, b=b2, theta=theta2, last_upd=lu2,
+        last_play=state.last_play.at[arms].max(played_at),
+        t=state.t + B,
+        force_left=state.force_left - jnp.sum(forced).astype(jnp.int32),
+        key=key,
+        pacer=p,
+    )
+    lam = jnp.full((B,), state.pacer.lam)   # block-decision-time dual
+    return new_state, (arms, r, c, lam)
+
+
 def step_batch(cfg: RouterConfig, state: RouterState, X: Array,
                rewards: Array, costs: Array):
     """One closed-loop block step against a (B, K) matrix environment:
     route the block, observe the chosen arms' (reward, cost), feed back.
 
     Returns (new_state, (arms, r, c, lam)) with per-request traces (B,).
+
+    A backend advertising ``fused_step`` (the ``pallas_fused``
+    megakernel) runs the whole body as one ``pallas_call``; otherwise the
+    block goes through ``select_batch`` + ``update_batch``. Both paths
+    hold the ``EQUIV_TOL`` contract against the jnp oracle.
     """
+    backend = backend_lib.get_backend(cfg.backend)
+    if getattr(backend, "fused_step", False):
+        return _step_batch_fused(cfg, backend, state, X, rewards, costs)
     B = X.shape[0]
     dec, state = select_batch(cfg, state, X)
     rows = jnp.arange(B)

@@ -26,7 +26,14 @@ one jitted, device-sharded call:
     as real accelerators do (dryrun.py's convention);
 
   * the state stack is donated to the compiled call, so the grid's
-    initial states never double-buffer.
+    initial states never double-buffer;
+
+  * a ``chunk_size`` knob (DESIGN.md §11) bounds how many grid elements
+    are live per stream step: the flat axis is scanned chunk-by-chunk
+    *inside* the one compiled program, so wide grids whose per-step
+    working set spills the last-level cache (the knee grid's N ~ 720
+    elements carry ~30 MB of live state) trade embarrassing parallelism
+    for locality without changing a single result bit.
 
 Hyper-parameters are state leaves too (DESIGN.md §9): ``RouterState``
 carries a ``HyperParams`` pytree, so a whole (α, γ) grid stacks on the
@@ -205,20 +212,84 @@ def _apply_condition_edits(
     return jax.tree.map(lambda *ls: jnp.concatenate(ls), *parts)
 
 
+def _n_chunks(n: int, chunk_size) -> int:
+    """Validate a ``chunk_size`` knob against the flattened grid size."""
+    if chunk_size is None:
+        return 1
+    chunk_size = int(chunk_size)
+    if chunk_size < 1 or n % chunk_size:
+        raise ValueError(
+            f"chunk_size={chunk_size}: must be a positive divisor of the "
+            f"flattened grid size C*S = {n} (sweep.fit_chunk picks one)")
+    return n // chunk_size
+
+
+def fit_chunk(n: int, chunk_size: int) -> int:
+    """The largest divisor of ``n`` that is <= ``chunk_size`` (always
+    >= 1) — the convenience for callers whose grid size is not known to
+    divide evenly (benchmarks sweeping N)."""
+    c = max(1, min(int(chunk_size), int(n)))
+    while n % c:
+        c -= 1
+    return c
+
+
+def _chunk_wrap(vm, n_chunks: int, scan_in):
+    """Scan-over-chunks wrapper for a flat-grid-axis vmapped program.
+
+    A wide grid's per-step working set is N x (per-element state), which
+    for the knee grid's N ~ 720 elements spills the CPU last-level cache
+    (~30 MB live vs ~24 MB L3; see benchmarks/results/knee.json). The
+    wrapper reshapes every (N, ...) operand to (n_chunks, N/n_chunks,
+    ...), runs the chunks *sequentially* under ``lax.scan`` and flattens
+    the stacked outputs back — the live set shrinks by n_chunks while
+    the whole grid stays ONE compiled program. vmap is elementwise over
+    the grid axis, so per-element math is untouched and results stay
+    bit-identical to the unchunked fabric (pinned in tests/test_sweep.py).
+    ``scan_in`` flags which trailing operands carry the grid axis
+    (chunked with the states) vs being shared across elements (closed
+    over, replicated to every chunk).
+    """
+    if n_chunks <= 1:
+        return vm
+
+    def chunked(states, *args):
+        def resh(leaf):
+            return leaf.reshape((n_chunks, -1) + leaf.shape[1:])
+
+        xs = (jax.tree.map(resh, states),) + tuple(
+            jax.tree.map(resh, a) if sc else None
+            for a, sc in zip(args, scan_in))
+        shared = tuple(a for a, sc in zip(args, scan_in) if not sc)
+
+        def body(carry, inp):
+            st, *chunk_args = inp
+            it = iter(shared)
+            call = [a if sc else next(it)
+                    for a, sc in zip(chunk_args, scan_in)]
+            return carry, vm(st, *call)
+
+        _, out = jax.lax.scan(body, None, xs)
+        return jax.tree.map(lambda l: l.reshape((-1,) + l.shape[2:]), out)
+
+    return chunked
+
+
 @functools.lru_cache(maxsize=64)
-def _cached_grid_fn(statics, stream_axes, batch_size):
+def _cached_grid_fn(statics, stream_axes, batch_size, n_chunks=1):
     """One jitted fabric program per (Statics, stream layout, data
-    plane); budgets, seeds, priors and hyper-parameters are data, so
-    every grid with the same shapes re-enters the same executable. The
-    state stack is donated."""
+    plane, chunking); budgets, seeds, priors and hyper-parameters are
+    data, so every grid with the same shapes re-enters the same
+    executable. The state stack is donated."""
     body = evaluate.stream_body(statics, batch_size)
 
     def one(state, x, rm, cm):
         TRACE_COUNT[0] += 1       # moves only while tracing
         return body(state, x, rm, cm)
 
+    vm = jax.vmap(one, in_axes=(0, stream_axes, stream_axes, stream_axes))
     return jax.jit(
-        jax.vmap(one, in_axes=(0, stream_axes, stream_axes, stream_axes)),
+        _chunk_wrap(vm, n_chunks, (stream_axes == 0,) * 3),
         donate_argnums=0,
     )
 
@@ -326,6 +397,7 @@ def run_grid(
     devices=None,
     return_states: bool = False,
     hyper: Optional[HyperParams] = None,
+    chunk_size: Optional[int] = None,
 ):
     """Evaluate a (budget x seed) grid as one compiled, sharded call.
 
@@ -344,6 +416,14 @@ def run_grid(
 
     ``devices`` defaults to ``jax.devices()``; the flattened C*S axis is
     sharded over the largest device count dividing it.
+
+    ``chunk_size`` (a divisor of C*S; ``sweep.fit_chunk`` picks one)
+    caps how many grid elements are *live* per stream step: the flat
+    axis is reshaped to (C*S / chunk_size, chunk_size) and scanned
+    chunk-by-chunk inside the same compiled program, shrinking the
+    per-step working set so wide grids stop spilling the last-level
+    cache (DESIGN.md §11). Results are bit-identical to the unchunked
+    fabric. ``None`` (default) keeps the whole grid live.
     """
     budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
     if condition_edits is not None and any(
@@ -367,7 +447,8 @@ def run_grid(
     states, streams, _ = _shard_grid(
         states, (xs, rmat, cmat), stream_axes, C, devices)
 
-    fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size)
+    fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size,
+                         _n_chunks(C * S, chunk_size))
     finals, (arms, r, c, lam) = fn(states, *streams)
     res = GridResult(
         budgets=budgets, seeds=seeds,
@@ -448,12 +529,14 @@ def _cached_scenario_grid_fn(
     spec: "scenario_lib.ScenarioSpec",
     env: Environment,
     batch_size,
+    n_chunks: int = 1,
 ):
     """Fabric program around the scenario engine's segmented-scan body,
     cached like ``scenario.compiled_runner`` (statics, spec, rate card,
-    batch size) — budgets, seeds and hyper-parameters stay data."""
+    batch size, chunking) — budgets, seeds and hyper-parameters stay
+    data."""
     key = (cfg.statics, scenario_lib.spec_key(spec),
-           scenario_lib._env_sig(env), batch_size)
+           scenario_lib._env_sig(env), batch_size, n_chunks)
 
     def make():
         body = scenario_lib.spec_body(cfg, spec, env, batch_size)
@@ -462,7 +545,8 @@ def _cached_scenario_grid_fn(
             TRACE_COUNT[0] += 1       # moves only while tracing
             return body(state, x, rm, cm, params)
 
-        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, 0, 0)),
+        vm = jax.vmap(one, in_axes=(0, 0, 0, 0, 0))
+        return jax.jit(_chunk_wrap(vm, n_chunks, (True,) * 4),
                        donate_argnums=0)
 
     return scenario_lib.lru_get(_SCEN_CACHE, key, make, _SCEN_CACHE_MAX)
@@ -484,6 +568,7 @@ def run_scenario_grid(
     hyper: Optional[HyperParams] = None,
     condition_edits: Optional[Sequence[Optional[Callable]]] = None,
     scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
+    chunk_size: Optional[int] = None,
 ):
     """One multi-event scenario across a budget grid as one compiled,
     sharded call — per condition equivalent to ``evaluate.run_scenario``
@@ -501,6 +586,10 @@ def run_scenario_grid(
     stacks. Per-condition ``sweep.param_edit(...)`` entries on
     ``condition_edits`` (composable with ``hyper_edit`` via
     ``chain_edits``) are folded into the same stacked leaves.
+
+    ``chunk_size`` scans the flattened grid chunk-by-chunk inside the
+    compiled program exactly as in ``run_grid`` (bit-identical results,
+    bounded per-step working set).
     """
     budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
     budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
@@ -523,7 +612,8 @@ def run_scenario_grid(
     states, streams, pstack = _shard_grid(
         states, (xs, rmat, cmat), 0, C, devices, pstack)
 
-    fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size)
+    fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size,
+                                  _n_chunks(C * S, chunk_size))
     finals, (arms, r, c, lam) = fn(states, *streams, pstack)
     cond_params = {
         n: np.asarray(params.get(n))

@@ -144,8 +144,9 @@ class Statics:
     max_arms: int = 8            # fixed registry capacity (K <= max_arms)
     forced_pulls: int = 20       # burn-in pulls for a hot-swapped arm, §4.5
     dt_max: int = 4096           # numerical clamp on forgetting exponents
-    backend: str = "jnp"         # batched scoring backend (DESIGN.md §2):
-                                 # "jnp" oracle or "pallas" TPU kernel
+    backend: str = "jnp"         # batched routing backend (DESIGN.md §2/§11):
+                                 # "jnp" oracle, "pallas" scoring kernel, or
+                                 # "pallas_fused" select+update megakernel
 
     def __post_init__(self):
         if self.d < 2:
@@ -156,9 +157,10 @@ class Statics:
             raise ValueError(f"forced_pulls={self.forced_pulls}: need >= 0")
         if self.dt_max < 1:
             raise ValueError(f"dt_max={self.dt_max}: need >= 1")
-        if self.backend not in ("jnp", "pallas"):
+        if self.backend not in ("jnp", "pallas", "pallas_fused"):
             raise ValueError(
-                f"backend={self.backend!r}: have ('jnp', 'pallas')")
+                f"backend={self.backend!r}: have "
+                "('jnp', 'pallas', 'pallas_fused')")
 
     @property
     def statics(self) -> "Statics":

@@ -65,12 +65,19 @@ def linucb_score_blocked(
 ):
     R, d = x.shape
     K = theta.shape[0]
-    block_r = min(block_r, R)
-    assert R % block_r == 0
+    block_r = max(1, min(block_r, R))
+    # Ragged batches (a partial gateway block, R not a block multiple)
+    # are padded up to the block boundary and sliced back off: padded
+    # rows score garbage in their own lanes only, so the first R rows
+    # are untouched.
+    pr = (-R) % block_r
+    if pr:
+        x = jnp.pad(x, [(0, pr), (0, 0)])
+    Rp = R + pr
     kernel = functools.partial(_score_kernel, num_arms=K)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(R // block_r,),
+        grid=(Rp // block_r,),
         in_specs=[
             pl.BlockSpec((block_r, d), lambda i: (i, 0)),
             pl.BlockSpec((K, d), lambda i: (0, 0)),
@@ -80,6 +87,7 @@ def linucb_score_blocked(
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_r, K), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((R, K), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Rp, K), jnp.float32),
         interpret=interpret,
     )(x, theta, ainv, pen, infl, alpha)
+    return out[:R]

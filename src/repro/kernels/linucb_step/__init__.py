@@ -1,0 +1,1 @@
+from repro.kernels.linucb_step.ops import linucb_step  # noqa: F401

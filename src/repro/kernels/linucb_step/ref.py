@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the fused step megakernel.
+
+Mirrors ``kernel._step_kernel`` op for op — same ``dot_general``
+contractions, same one-hot feedback gather, same ``fori_loop`` update
+order, same block-final theta refresh — so the interpret-mode kernel is
+BITWISE identical to this reference (pinned in tests/test_kernels.py).
+The repo's semantic oracle remains ``router.step_batch`` on the jnp
+backend; this file exists to pin the kernel's exact arithmetic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linucb_step.kernel import (
+    GAMMA_FLOOR, HYP_AEMA, HYP_ALPHA, HYP_ETA, HYP_GAMMA, HYP_LBAR, NEG_INF,
+)
+
+
+def linucb_step_ref(
+    A, A_inv, b, theta, last_upd,      # stats: (K,d,d) x2, (K,d) x2, (1,K)
+    x, rewards, costs, noise, forced,  # block: (Bp,d), (Bp,K) x3, (Bp,1)
+    cand, pen, infl, hypf, ints, pacer,  # (1,K) x3, (1,8), (1,2), (1,4)
+    *, num_valid: int, dt_max: int,
+):
+    """Same operands and returns as ``kernel.linucb_step_blocked``."""
+    K, d = b.shape
+    x = x.astype(jnp.float32)
+    theta = theta.astype(jnp.float32)
+    alpha = hypf[0, HYP_ALPHA].astype(jnp.float32)
+    exploit = jax.lax.dot_general(
+        x, theta, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    cols = []
+    for a in range(K):
+        t = jax.lax.dot_general(
+            x, A_inv[a].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        q = jnp.maximum((t * x).sum(axis=1), 0.0)
+        cols.append(q)
+    quad = jnp.stack(cols, axis=1)
+    v = quad / infl[0][None, :]
+    scores = exploit + alpha * jnp.sqrt(v) - pen[0][None, :]
+
+    masked = jnp.where(cand[0][None, :] > 0.0, scores + noise, NEG_INF)
+    arms = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    farm = ints[0, 1]
+    arms = jnp.where(forced[..., 0] > 0, farm, arms)
+
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, masked.shape, 1)
+              == arms[:, None]).astype(jnp.float32)
+    r_all = (rewards.astype(jnp.float32) * onehot).sum(axis=1)
+    c_all = (costs.astype(jnp.float32) * onehot).sum(axis=1)
+    rc = jnp.stack([r_all, c_all], axis=1)
+
+    t_sel = ints[0, 0]
+    gamma = jnp.clip(hypf[0, HYP_GAMMA].astype(jnp.float32),
+                     GAMMA_FLOOR, 1.0)
+    eta = hypf[0, HYP_ETA].astype(jnp.float32)
+    a_ema = hypf[0, HYP_AEMA].astype(jnp.float32)
+    lambda_bar = hypf[0, HYP_LBAR].astype(jnp.float32)
+    budget = pacer[0, 2].astype(jnp.float32)
+
+    def body(i, carry):
+        A, A_inv, b, lu, lam, c_ema = carry
+        arm = arms[i]
+        xi = x[i, :]
+        dtf = jnp.clip(t_sel - lu[0, arm], 0, dt_max).astype(jnp.float32)
+        g = jnp.power(gamma, dtf)
+        A_a = A[arm].astype(jnp.float32) * g + jnp.outer(xi, xi)
+        Ainv_a = A_inv[arm].astype(jnp.float32) / g
+        Ax = jax.lax.dot_general(
+            Ainv_a, xi, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        denom = 1.0 + (xi * Ax).sum()
+        Ainv_a = Ainv_a - jnp.outer(Ax, Ax) / denom
+        b_a = b[arm].astype(jnp.float32) * g + r_all[i] * xi
+        A = A.at[arm].set(A_a)
+        A_inv = A_inv.at[arm].set(Ainv_a)
+        b = b.at[arm].set(b_a)
+        lu = lu.at[0, arm].set(t_sel)
+        c_ema = (1.0 - a_ema) * c_ema + a_ema * c_all[i]
+        lam = jnp.clip(lam + eta * (c_ema / budget - 1.0), 0.0, lambda_bar)
+        return A, A_inv, b, lu, lam, c_ema
+
+    A, A_inv, b, last_upd, lam, c_ema = jax.lax.fori_loop(
+        0, num_valid, body,
+        (A.astype(jnp.float32), A_inv.astype(jnp.float32),
+         b.astype(jnp.float32), last_upd,
+         pacer[0, 0].astype(jnp.float32), pacer[0, 1].astype(jnp.float32)))
+    pacer_out = jnp.stack([lam, c_ema, budget, jnp.float32(0.0)])[None, :]
+
+    theta_out = jnp.stack([
+        jax.lax.dot_general(
+            A_inv[a], b[a], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        for a in range(K)
+    ])
+
+    return (A, A_inv, b, theta_out, last_upd, arms[:, None], rc, pacer_out)

@@ -90,7 +90,7 @@ class TestBackendEquivalence:
             backend_lib.get_backend("cuda")
 
 
-@pytest.mark.parametrize("bk", ["jnp", "pallas"])
+@pytest.mark.parametrize("bk", ["jnp", "pallas", "pallas_fused"])
 class TestSelectBatch:
     def test_b1_matches_scalar_select(self, bk):
         cfg = RouterConfig(d=8, max_arms=4, backend=bk)
@@ -390,7 +390,7 @@ def requests12():
 
 
 class TestBatchServing:
-    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
     def test_serve_batch_matches_sequential_serves(self, requests12, backend):
         """serve_batch == B sequential serves with deferred feedback,
         under a fixed key: same routing decisions, same final state."""

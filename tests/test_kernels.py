@@ -1,5 +1,7 @@
 """Per-kernel validation: shape/dtype sweeps against pure-jnp oracles,
 executed with interpret=True on CPU (TPU is the lowering target)."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,6 +15,9 @@ from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_sequential
 from repro.kernels.linucb_score.ops import linucb_score
 from repro.kernels.linucb_score.ref import linucb_score_ref
+from repro.kernels.linucb_score.kernel import linucb_score_blocked
+from repro.kernels.linucb_step.kernel import linucb_step_blocked
+from repro.kernels.linucb_step.ref import linucb_step_ref
 
 RNG = np.random.default_rng(42)
 
@@ -149,6 +154,28 @@ class TestLinUCBScore:
         got = linucb_score(x, theta, ainv, pen, infl, alpha=0.05, block_r=32)
         np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
 
+    @pytest.mark.parametrize("R,block_r", [(100, 32), (7, 256), (65, 64)])
+    def test_ragged_rows_blocked(self, R, block_r):
+        """Direct kernel-level call with R not a multiple of block_r:
+        rows are padded to the block boundary and sliced back (the old
+        ``assert R % block_r == 0`` rejected every partial gateway
+        block)."""
+        K, d = 3, 8
+        x = randn((R, d))
+        theta = randn((K, d)) * 0.1
+        M = RNG.standard_normal((K, d, d)) * 0.1
+        A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None] * 1.2
+        ainv = jnp.asarray(np.linalg.inv(A), jnp.float32)
+        pen = jnp.asarray(RNG.uniform(0, 1, (K,)), jnp.float32)
+        infl = jnp.asarray(RNG.uniform(0.005, 1.0, (K,)), jnp.float32)
+        out = linucb_score_blocked(
+            x, theta, ainv, pen[None, :], infl[None, :],
+            jnp.full((1, 1), 0.05, jnp.float32),
+            block_r=block_r, interpret=True)
+        assert out.shape == (R, K)
+        ref = linucb_score_ref(x, theta, ainv, pen, infl, 0.05)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+
     def test_matches_router_scores(self):
         """Kernel == the router's own per-request scoring math (Eq. 2)."""
         from repro.core import linucb
@@ -169,3 +196,208 @@ class TestLinUCBScore:
         got = linucb_score(x[None], theta, ainv, pen, infl,
                            alpha=cfg.hyper.alpha)
         np.testing.assert_allclose(got[0], want, rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused step megakernel (kernels/linucb_step, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _step_operands(B=24, K=3, d=10, seed=7):
+    """Raw pre-padded operands for the blocked fused kernel / its ref."""
+    rng = np.random.default_rng(seed)
+    M = rng.standard_normal((K, d, d)) * 0.1
+    A = np.einsum("kij,klj->kil", M, M) + np.eye(d)[None] * 1.2
+    A_inv = np.linalg.inv(A)
+    b = rng.standard_normal((K, d)) * 0.1
+    f32 = lambda a: jnp.asarray(a, jnp.float32)
+    return dict(
+        A=f32(A), A_inv=f32(A_inv), b=f32(b),
+        theta=f32(np.einsum("kij,kj->ki", A_inv, b)),
+        last_upd=jnp.asarray(rng.integers(0, 50, (1, K)), jnp.int32),
+        x=f32(rng.standard_normal((B, d))),
+        rewards=f32(rng.uniform(0, 1, (B, K))),
+        costs=f32(rng.uniform(0, 1e-3, (B, K))),
+        noise=f32(rng.uniform(0, 1e-7, (B, K))),
+        forced=jnp.asarray((np.arange(B) < 3)[:, None], jnp.int32),
+        cand=f32(np.array([[1.0] * K])),
+        pen=f32(rng.uniform(0, 0.5, (1, K))),
+        infl=f32(rng.uniform(0.01, 1.0, (1, K))),
+        hypf=f32([[0.05, 0.997, 0.05, 0.05, 5.0, 0.0, 0.0, 0.0]]),
+        ints=jnp.asarray([[60, 1]], jnp.int32),
+        pacer=f32([[0.2, 5e-4, 6.6e-4, 0.0]]),
+    )
+
+
+def _warmed(cfg, blocks=3, B=16, seed=0):
+    """A router state warmed with a few jnp-oracle blocks."""
+    from repro.core import router
+    from repro.core.types import init_state
+    rng = np.random.default_rng(seed)
+    K, d = cfg.max_arms, cfg.d
+    jcfg = RouterConfig(d=d, max_arms=K, backend="jnp", hyper=cfg.hyper)
+    prices = jnp.asarray(np.linspace(1e-4, 5.6e-3, K), jnp.float32)
+    state = init_state(jcfg, prices, prices, budget=6.6e-4,
+                       key=jax.random.PRNGKey(3))
+    for _ in range(blocks):
+        X, R, C = _rand_env_block(rng, B, d, K)
+        state, _ = router.step_batch(jcfg, state, X, R, C)
+    return state, rng
+
+
+def _rand_env_block(rng, B, d, K):
+    X = jnp.asarray(rng.standard_normal((B, d)), jnp.float32)
+    R = jnp.asarray(rng.uniform(0.5, 1.0, (B, K)), jnp.float32)
+    C = jnp.asarray(rng.uniform(1e-5, 1e-3, (B, K)), jnp.float32)
+    return X, R, C
+
+
+from repro.core.types import RouterConfig, HyperParams  # noqa: E402
+
+
+class TestLinUCBStepFused:
+    def test_interpret_bitwise_vs_ref(self):
+        """Interpret-mode kernel output is BITWISE equal to ref.py."""
+        ops = _step_operands()
+        got = linucb_step_blocked(
+            ops["A"], ops["A_inv"], ops["b"], ops["theta"],
+            ops["last_upd"], ops["x"], ops["rewards"], ops["costs"],
+            ops["noise"], ops["forced"], ops["cand"], ops["pen"],
+            ops["infl"], ops["hypf"], ops["ints"], ops["pacer"],
+            num_valid=20, dt_max=4096, interpret=True)
+        # The ref must go through jit: interpret-mode pallas evaluates the
+        # kernel as one compiled XLA program, and eager op-by-op dispatch
+        # reassociates the final theta matvec by one ulp.
+        ref = jax.jit(functools.partial(
+            linucb_step_ref, num_valid=20, dt_max=4096))
+        want = ref(
+            ops["A"], ops["A_inv"], ops["b"], ops["theta"],
+            ops["last_upd"], ops["x"], ops["rewards"], ops["costs"],
+            ops["noise"], ops["forced"], ops["cand"], ops["pen"],
+            ops["infl"], ops["hypf"], ops["ints"], ops["pacer"])
+        assert len(got) == len(want) == 8
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("B", [1, 13, 64, 256])
+    def test_step_batch_matches_oracle(self, B):
+        """Closed-loop fused block == jnp oracle: arms bitwise, stats and
+        pacer within the 1e-4 contract (odd B exercises pad_b)."""
+        from repro.core import router
+        cfg_j = RouterConfig(d=12, max_arms=4, backend="jnp",
+                             hyper=HyperParams(alpha=0.05))
+        cfg_f = RouterConfig(d=12, max_arms=4, backend="pallas_fused",
+                             hyper=HyperParams(alpha=0.05))
+        state, rng = _warmed(cfg_j)
+        X, R, C = _rand_env_block(rng, B, 12, 4)
+        sj, tj = router.step_batch(cfg_j, state, X, R, C)
+        sf, tf = router.step_batch(cfg_f, state, X, R, C)
+        np.testing.assert_array_equal(np.asarray(tj[0]), np.asarray(tf[0]))
+        np.testing.assert_array_equal(np.asarray(tj[1]), np.asarray(tf[1]))
+        for n in ("A", "A_inv", "b", "theta"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(sj, n)), np.asarray(getattr(sf, n)),
+                atol=1e-4, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(sj.last_upd),
+                                      np.asarray(sf.last_upd))
+        np.testing.assert_array_equal(np.asarray(sj.last_play),
+                                      np.asarray(sf.last_play))
+        assert abs(float(sj.pacer.lam - sf.pacer.lam)) <= 1e-4
+        assert abs(float(sj.pacer.c_ema - sf.pacer.c_ema)) <= 1e-4
+        assert int(sj.t) == int(sf.t)
+        np.testing.assert_array_equal(np.asarray(sj.key),
+                                      np.asarray(sf.key))
+
+    def test_pacer_disabled_frozen(self):
+        """enabled=False must freeze (lam, c_ema) through the fused path
+        exactly as the per-step gate does."""
+        import dataclasses
+        from repro.core import router
+        cfg = RouterConfig(d=8, max_arms=3, backend="pallas_fused")
+        state, rng = _warmed(RouterConfig(d=8, max_arms=3))
+        state = dataclasses.replace(
+            state, pacer=dataclasses.replace(
+                state.pacer, enabled=jnp.asarray(False)))
+        X, R, C = _rand_env_block(rng, 32, 8, 3)
+        s2, _ = router.step_batch(cfg, state, X, R, C)
+        assert float(s2.pacer.lam) == float(state.pacer.lam)
+        assert float(s2.pacer.c_ema) == float(state.pacer.c_ema)
+
+    def test_forced_exploration_burnin(self):
+        """The first force_left requests divert to the forced arm."""
+        import dataclasses
+        from repro.core import router
+        cfg = RouterConfig(d=8, max_arms=3, backend="pallas_fused")
+        state, rng = _warmed(RouterConfig(d=8, max_arms=3))
+        state = dataclasses.replace(
+            state, force_arm=jnp.asarray(2, jnp.int32),
+            force_left=jnp.asarray(5, jnp.int32))
+        X, R, C = _rand_env_block(rng, 16, 8, 3)
+        s2, (arms, _, _, _) = router.step_batch(cfg, state, X, R, C)
+        assert np.all(np.asarray(arms[:5]) == 2)
+        assert int(s2.force_left) == 0
+
+    def test_end_to_end_evaluate_run(self):
+        """evaluate.run on the fused backend tracks the jnp oracle."""
+        from repro.core import evaluate, simulator
+        b = simulator.make_benchmark(
+            seed=0, splits={"train": 64, "val": 16, "test": 96})
+        res = {}
+        for bk in ("jnp", "pallas_fused"):
+            cfg = RouterConfig(backend=bk)
+            res[bk] = evaluate.run(cfg, b.test, 6.6e-4, seeds=(0, 1),
+                                   batch_size=8)
+        agree = float((res["jnp"].arms == res["pallas_fused"].arms).mean())
+        assert agree > 0.99, agree
+        assert abs(res["jnp"].mean_reward
+                   - res["pallas_fused"].mean_reward) < 1e-3
+
+    def test_stacked_hyper_vmap_grid(self):
+        """The fused kernel under the fabric's flattened (condition x
+        seed) vmap axis with stacked (alpha, gamma) HyperParams."""
+        from repro.core import simulator, sweep
+        b = simulator.make_benchmark(
+            seed=0, splits={"train": 64, "val": 16, "test": 96})
+        hyp = HyperParams(alpha=np.asarray([0.01, 0.05, 0.1], np.float32),
+                          gamma=np.asarray([0.99, 0.997, 1.0], np.float32))
+        budgets = (1.0e-4, 6.6e-4, 1.9e-3)
+        grids = {}
+        for bk in ("jnp", "pallas_fused"):
+            cfg = RouterConfig(backend=bk)
+            grids[bk] = sweep.run_grid(cfg, b.test, budgets, seeds=(0, 1),
+                                       batch_size=8, hyper=hyp)
+        np.testing.assert_array_equal(grids["jnp"].arms,
+                                      grids["pallas_fused"].arms)
+        np.testing.assert_allclose(grids["jnp"].lams,
+                                   grids["pallas_fused"].lams, atol=1e-4)
+
+    def test_zero_retrace_on_new_hypers(self):
+        """Retuning every hyper leaf re-enters the compiled fused step."""
+        from repro.core import router, types
+        cfg = RouterConfig(d=8, max_arms=3, backend="pallas_fused")
+        state, rng = _warmed(RouterConfig(d=8, max_arms=3))
+        X, R, C = _rand_env_block(rng, 16, 8, 3)
+        cycle = jax.jit(
+            lambda s, x, r, c: router.step_batch(cfg, s, x, r, c))
+        jax.block_until_ready(cycle(state, X, R, C)[0].A)
+        before = router.TRACE_COUNT[0]
+        retuned = types.with_hyperparams(
+            state, alpha=0.2, gamma=0.95, eta=0.1, alpha_ema=0.2,
+            lambda_bar=3.0)
+        jax.block_until_ready(cycle(retuned, X, R, C)[0].A)
+        assert router.TRACE_COUNT[0] == before
+
+    def test_donation_aliasing(self):
+        """Donating the state to a jitted fused step releases the input
+        stats buffers (the aliasing contract end-to-end)."""
+        from repro.core import router
+        cfg = RouterConfig(d=8, max_arms=3, backend="pallas_fused")
+        state, rng = _warmed(RouterConfig(d=8, max_arms=3))
+        X, R, C = _rand_env_block(rng, 16, 8, 3)
+        cycle = jax.jit(
+            lambda s, x, r, c: router.step_batch(cfg, s, x, r, c),
+            donate_argnums=0)
+        s2, _ = cycle(state, X, R, C)
+        jax.block_until_ready(s2.A)
+        assert state.A.is_deleted()
+        assert s2.A.shape == (3, 8, 8)

@@ -431,3 +431,60 @@ class TestPhaseBounds:
         assert sliced.bounds == (0, 30, 60, 75)
         np.testing.assert_array_equal(
             sliced.segment(1).arms, res.segment(1).arms)
+
+
+class TestChunkedFabric:
+    """chunk_size: scan-over-condition-chunks inside the one compiled
+    grid program (DESIGN.md §11). Bit-identical to the unchunked fabric
+    for plain and scenario grids, single trace, divisor guard."""
+
+    def test_chunked_grid_bitwise(self, env):
+        full = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS)
+        for chunk in (1, 3, 9):
+            got = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS,
+                                 chunk_size=chunk)
+            _assert_bitwise(got, full)
+
+    def test_chunked_batched_plane_bitwise(self, env):
+        full = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS,
+                              batch_size=16)
+        got = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS,
+                             batch_size=16, chunk_size=3)
+        _assert_bitwise(got, full)
+
+    def test_chunked_fused_backend_bitwise(self, env):
+        cfg = RouterConfig(backend="pallas_fused")
+        full = sweep.run_grid(cfg, env, BUDGETS, seeds=SEEDS,
+                              batch_size=16)
+        got = sweep.run_grid(cfg, env, BUDGETS, seeds=SEEDS,
+                             batch_size=16, chunk_size=3)
+        _assert_bitwise(got, full)
+
+    def test_chunked_scenario_grid_bitwise(self, env):
+        spec = TestScenarioGrid.SPEC
+        full = sweep.run_scenario_grid(CFG, spec, env, BUDGETS,
+                                       seeds=SEEDS)
+        got = sweep.run_scenario_grid(CFG, spec, env, BUDGETS,
+                                      seeds=SEEDS, chunk_size=3)
+        _assert_bitwise(got, full)
+        assert got.bounds == spec.bounds
+
+    def test_chunked_single_trace(self, env):
+        sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS, chunk_size=3)
+        before = sweep.TRACE_COUNT[0]
+        sweep.run_grid(CFG, env, (2e-4, 5e-4, 2e-3), seeds=SEEDS,
+                       chunk_size=3)
+        assert sweep.TRACE_COUNT[0] == before, "chunked fabric retraced"
+
+    def test_non_divisor_chunk_rejected(self, env):
+        with pytest.raises(ValueError, match="divisor"):
+            sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS, chunk_size=4)
+        with pytest.raises(ValueError, match="divisor"):
+            sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS, chunk_size=0)
+
+    def test_fit_chunk(self):
+        assert sweep.fit_chunk(720, 100) == 90
+        assert sweep.fit_chunk(9, 4) == 3
+        assert sweep.fit_chunk(9, 100) == 9
+        assert sweep.fit_chunk(7, 3) == 1
+        assert sweep.fit_chunk(12, 12) == 12
