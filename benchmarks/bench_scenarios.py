@@ -312,6 +312,160 @@ def param_grid(smoke: bool = False, repeats: int = 2):
     return rows
 
 
+# Scenario Monte Carlo (--mc-grid): randomized event *times* and
+# horizons over one spec, all timelines ONE fused call (DESIGN.md §12).
+# The spec mixes three event types — a silent price shock, a silent
+# quality regression and an operator budget cut — whose arrival steps
+# (and the effective horizon) are drawn uniformly per timeline.
+MC_SEED = 11
+MC_PROBE = 16   # looped-baseline sample: bit-identity gate + timing
+
+
+def _mc_spec(T):
+    return ScenarioSpec(
+        horizon=T,
+        events=(
+            PriceChange(T // 3, GEMINI, 1 / 56),
+            QualityShift(T // 2, MISTRAL, 0.70),
+            BudgetChange(2 * T // 3, BUDGET_TIGHT),
+        ),
+        stream_seed_base=7200)
+
+
+def mc_grid(smoke: bool = False, n_timelines: int = 1024, repeats: int = 2):
+    """Scenario Monte Carlo over randomized timelines: N sampled
+    (event-times, horizon) draws of one spec run as ONE compiled call,
+    gated bit-identical against looping ``run_scenario`` over the
+    concrete retimed specs, then timed looped-vs-fused.
+
+    The looped baseline pays one compile PER timeline (times are trace
+    constants on that path), so at N=1024 it is hours of XLA time; it is
+    measured on a ``MC_PROBE``-timeline sample and extrapolated linearly
+    to N (fair: the runner LRU holds 64 programs, so at N=1024 every
+    looped timeline recompiles). Both the measured probe numbers and the
+    at-scale extrapolation are recorded."""
+    from repro.core import montecarlo
+
+    if smoke:
+        b = simulator.make_benchmark(
+            seed=0, splits={"train": 256, "val": 32, "test": 200})
+        env, T, N = b.test, 120, 12
+        probe, repeats = N, 1
+    else:
+        env, T, N = benchmark().test, 240, n_timelines
+        probe = MC_PROBE
+    spec, budget, seeds = _mc_spec(T), BUDGETS["moderate"], (0,)
+    tls = montecarlo.sample_timelines(
+        spec, N, seed=MC_SEED, horizons=(3 * T // 4, T))
+    kw = dict(seeds=seeds, n_eff=N_EFF)
+
+    def fused(timelines=tls):
+        return sweep.run_scenario_grid(
+            PARETO_CFG, spec, env, [budget] * len(timelines),
+            timelines=timelines, **kw)
+
+    rows = []
+    # --- gates before any timing ---------------------------------------
+    # (1) ONE compile for the whole Monte Carlo,
+    before = sweep.TRACE_COUNT[0]
+    grid = fused()
+    assert sweep.TRACE_COUNT[0] == before + 1, (
+        "Monte Carlo grid must compile as ONE program")
+    # (2) resampled timelines (same grid shape) re-enter with zero
+    # retraces,
+    resampled = montecarlo.sample_timelines(
+        spec, N, seed=MC_SEED + 1, horizons=(3 * T // 4, T))
+    fused(resampled)
+    assert sweep.TRACE_COUNT[0] == before + 1, (
+        "new event times must be data, not structure")
+    rows.append(["mc_grid_compile_once", "1",
+                 f"N={N};resample_retraces=0"])
+    # (3) every probed timeline bit-identical to its looped baseline.
+    idx = np.linspace(0, N - 1, probe).astype(int)
+    for i in idx:
+        ref = evaluate.run_scenario(
+            PARETO_CFG, scenario.retime(spec, tls[i]), env, budget, **kw)
+        res = grid.condition(int(i))
+        np.testing.assert_array_equal(ref.arms, res.arms)
+        np.testing.assert_array_equal(ref.rewards, res.rewards)
+        np.testing.assert_array_equal(ref.costs, res.costs)
+        np.testing.assert_array_equal(ref.lams, res.lams)
+    rows.append(["mc_grid_bit_identity", "bit_identical",
+                 f"{probe}/{N} timelines gated vs looped run_scenario"])
+
+    # --- looped-vs-fused wall clock ------------------------------------
+    probe_tls = [tls[i] for i in idx]
+
+    def looped():
+        return [evaluate.run_scenario(
+                    PARETO_CFG, scenario.retime(spec, tl), env, budget,
+                    **kw)
+                for tl in probe_tls]
+
+    _clear_scenario_caches()
+    looped_cold, looped_warm = _time(looped, repeats)
+    _clear_scenario_caches()
+    fused_cold, fused_warm = _time(fused, repeats)
+    scale = N / probe
+    looped_cold_scaled = looped_cold * scale
+    speedup_cold = looped_cold_scaled / fused_cold
+    import jax
+    rows.append(["mc_grid_looped_probe_s", f"{looped_warm:.3f}",
+                 f"cold={looped_cold:.3f};probe={probe}"])
+    rows.append(["mc_grid_fused_s", f"{fused_warm:.3f}",
+                 f"cold={fused_cold:.3f};N={N};"
+                 f"devices={len(jax.devices())}"])
+    rows.append(["mc_grid_cold_speedup", f"{speedup_cold:.1f}x",
+                 f"looped cold extrapolated x{scale:.0f} to N={N}: "
+                 f"{looped_cold_scaled:.1f}s vs fused {fused_cold:.3f}s"])
+    rows.append(["mc_grid_warm_speedup",
+                 f"{looped_warm * scale / fused_warm:.1f}x",
+                 f"looped warm extrapolated x{scale:.0f}"])
+    if not smoke:
+        assert speedup_cold >= 5.0, (
+            f"fused must win cold by >=5x at N={N}: got {speedup_cold:.1f}x")
+
+    # --- percentile bands (the numbers replacing the paper's single-
+    # timeline point estimates) -----------------------------------------
+    mc = montecarlo.MonteCarloResult(
+        grid=grid, timelines=tls, budget=budget,
+        **_mc_metrics(grid, tls, spec, budget))
+    bands = mc.bands((5, 25, 50, 75, 95))
+    lag = bands["adaptation_lag"]
+    rows.append(["mc_grid_adaptation_lag_p50",
+                 ";".join(f"{v:.0f}" for v in lag["p50"]),
+                 f"p5={lag['p5']};p95={lag['p95']};per event"])
+    rows.append(["mc_grid_quality_lift_p50",
+                 f"{bands['quality_lift']['p50']:.4f}",
+                 f"p5={bands['quality_lift']['p5']:.4f};"
+                 f"p95={bands['quality_lift']['p95']:.4f}"])
+    rows.append(["mc_grid_compliance_p50",
+                 f"{bands['budget_compliance']['p50']:.3f}",
+                 f"p5={bands['budget_compliance']['p5']:.3f};"
+                 f"p95={bands['budget_compliance']['p95']:.3f}"])
+    emit(rows, ["name", "value", "derived"], "scenario_mc", derived=bands)
+    return rows
+
+
+def _mc_metrics(grid, tls, spec, budget):
+    """Per-timeline metric arrays from an already-run MC grid (avoids a
+    second fused call just to reuse ``run_monte_carlo``)."""
+    from repro.core import montecarlo
+    E = len(spec.events)
+    lags = np.empty((len(tls), E))
+    lifts = np.empty(len(tls))
+    comp = np.empty(len(tls))
+    for i, tl in enumerate(tls):
+        res = grid.condition(i)
+        for j, t in enumerate(tl.event_ts):
+            lags[i, j] = montecarlo.adaptation_lag(res, t)
+        segs = [res.segment(j) for j in range(res.n_segments)]
+        nonempty = [s for s in segs if s.arms.shape[1] > 0]
+        lifts[i] = nonempty[-1].mean_reward - nonempty[0].mean_reward
+        comp[i] = res.mean_cost / budget
+    return dict(lags=lags, lifts=lifts, compliance=comp)
+
+
 def smoke():
     """CI smoke: every event type in one tiny spec, both data planes."""
     bench = simulator.make_benchmark(
@@ -356,10 +510,18 @@ if __name__ == "__main__":
     ap.add_argument("--param-grid", action="store_true",
                     help="fused (payload x budget x seed) spec families "
                          "with bit-identity gate + looped-vs-fused timing")
+    ap.add_argument("--mc-grid", action="store_true",
+                    help="scenario Monte Carlo over randomized timelines "
+                         "(one fused call, bit-identity gate, percentile "
+                         "bands); with --smoke, a 12-timeline CI job")
+    ap.add_argument("--timelines", type=int, default=1024,
+                    help="Monte Carlo sample size for --mc-grid")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N CPU placeholder devices (before jax init)")
     args = ap.parse_args()
-    if args.param_grid:
+    if args.mc_grid:
+        mc_grid(smoke=args.smoke, n_timelines=args.timelines)
+    elif args.param_grid:
         param_grid(smoke=args.smoke)
     elif args.smoke:
         smoke()

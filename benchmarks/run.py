@@ -26,6 +26,8 @@ BENCHES = [
     ("scenario_grid", "Scenario x budget matrices via the sweep fabric"),
     ("scenario_param_grid",
      "Fused (payload x budget x seed) spec families, looped-vs-fused"),
+    ("scenario_mc",
+     "Scenario Monte Carlo: randomized timelines as one fused call"),
     ("sweep", "Sweep fabric: looped-vs-fabric grid wall clock"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
@@ -42,7 +44,8 @@ def main(argv=None) -> None:
     import importlib
     # Entries whose module or entrypoint differs from bench_{name}.main().
     MODULES = {"scenario_grid": "scenarios",
-               "scenario_param_grid": "scenarios"}
+               "scenario_param_grid": "scenarios",
+               "scenario_mc": "scenarios"}
     failures = []
     for name, desc in BENCHES:
         if args.only and name not in args.only:
@@ -59,6 +62,8 @@ def main(argv=None) -> None:
                                 else tuple(range(20)))
             elif name == "scenario_param_grid":
                 mod.param_grid(smoke=args.quick)
+            elif name == "scenario_mc":
+                mod.mc_grid(smoke=args.quick)
             elif args.quick and name in ("pareto", "cost_drift",
                                          "degradation", "onboarding",
                                          "warmup", "prior_mismatch",

@@ -29,10 +29,19 @@ from repro.core.scenario import (  # noqa: F401
     BudgetChange,
     DeleteArm,
     HyperShift,
+    Param,
     PriceChange,
     QualityShift,
+    ScenarioParams,
     ScenarioSpec,
+    Timeline,
     TrafficMixShift,
+    retime,
+)
+from repro.core.montecarlo import (  # noqa: F401
+    MonteCarloResult,
+    run_monte_carlo,
+    sample_timelines,
 )
 from repro.core.sweep import (  # noqa: F401
     GridResult,

@@ -75,8 +75,16 @@ class RunResult:
         return 1 if self.bounds is None else len(self.bounds) - 1
 
     def segment(self, j: int) -> "RunResult":
-        """Slice to scenario segment ``j`` (between event boundaries)."""
-        assert self.bounds is not None, "run has no segment boundaries"
+        """Slice to scenario segment ``j`` (between event boundaries).
+        Bounds are *effective*: a padded timeline run's boundaries stop
+        at the element's horizon, so segment slices never read padding
+        rows. Out-of-range indices raise ValueError."""
+        if self.bounds is None:
+            raise ValueError("run has no segment boundaries")
+        if not 0 <= j < self.n_segments:
+            raise ValueError(
+                f"segment index {j} out of range: run has "
+                f"{self.n_segments} segments (bounds={self.bounds})")
         return self.phase(self.bounds[j], self.bounds[j + 1])
 
     @classmethod
@@ -336,6 +344,7 @@ def run_scenario(
     return_states: bool = False,
     hyper: Optional[HyperParams] = None,
     scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
+    timeline: Optional["scenario_lib.Timeline"] = None,
 ):
     """Run a declarative ``ScenarioSpec`` over ``env`` as ONE jitted,
     seed-vmapped segmented-scan call (scenario.py).
@@ -352,19 +361,51 @@ def run_scenario(
     spec with new values re-enters the compiled program with zero
     retraces. Leaves are scalars shared by every seed (or per-seed
     ``(len(seeds),)`` stacks).
+
+    ``timeline`` moves the spec's event *times* (and optionally shrinks
+    the effective horizon, padding the scan) through the masked timeline
+    runner (DESIGN.md §12): bit-identical to running the concrete
+    retimed spec, but every Timeline of one spec shares ONE compiled
+    program — new event times re-enter with zero retraces. Traces and
+    bounds come back trimmed to the effective horizon.
     """
     params = scenario_lib.resolve_params(spec, scenario_params)
-    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
-                                                params=params)
+    full = params.updated(**scenario_lib.auto_param_values(spec))
     states = make_states(
         cfg, env, budget, seeds,
         priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
         active_arms=spec.init_active, hyper=hyper,
     )
+    if timeline is not None:
+        rspec = scenario_lib.retime(spec, timeline)
+        scenario_lib.validate_timeline_alignment(
+            rspec, batch_size, spec.horizon)
+        xs, rmat, cmat = scenario_lib.build_streams(
+            cfg, rspec, env, seeds, params=params, pad_to=spec.horizon)
+        run_fn = scenario_lib.compiled_timeline_runner(
+            cfg, spec, env, batch_size)
+        S, E = len(seeds), len(spec.events)
+        ev = jnp.broadcast_to(
+            jnp.asarray([e.t for e in rspec.events], jnp.int32), (S, E))
+        hz = jnp.full((S,), rspec.horizon, jnp.int32)
+        finals, (arms, r, c, lam) = run_fn(
+            states, xs, rmat, cmat,
+            scenario_lib.broadcast_params(full, S), ev, hz)
+        h = rspec.horizon
+        res = RunResult(
+            arms=np.asarray(arms)[:, :h], rewards=np.asarray(r)[:, :h],
+            costs=np.asarray(c)[:, :h], lams=np.asarray(lam)[:, :h],
+            bounds=rspec.bounds,
+        )
+        if return_states:
+            return res, finals
+        return res
+    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
+                                                params=params)
     run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size)
     finals, (arms, r, c, lam) = run_fn(
         states, xs, rmat, cmat,
-        scenario_lib.broadcast_params(params, len(seeds)))
+        scenario_lib.broadcast_params(full, len(seeds)))
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
         costs=np.asarray(c), lams=np.asarray(lam),

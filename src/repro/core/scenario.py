@@ -212,6 +212,11 @@ def resolve_params(
     every referenced name must be provided and (for typo safety) every
     provided name must be referenced."""
     params = params if params is not None else ScenarioParams()
+    reserved = [n for n in params.names if n.startswith(_AUTO_PREFIX)]
+    if reserved:
+        raise ValueError(
+            f"param names {reserved} use the reserved {_AUTO_PREFIX!r} "
+            "prefix (auto-lifted concrete payloads)")
     want, have = set(spec.param_names), set(params.names)
     if want - have:
         raise ValueError(
@@ -471,6 +476,153 @@ def spec_key(spec: ScenarioSpec):
 
 
 # ---------------------------------------------------------------------------
+# Auto-lifted payloads: concrete values as ScenarioParams operands
+# ---------------------------------------------------------------------------
+
+# Concrete BudgetChange / PriceChange payloads are auto-lifted onto
+# synthetic ScenarioParams leaves (one per event index) so the concrete
+# and Param lowerings share one program AND one set of float ops — the
+# DESIGN.md §10 1-ulp fine print is gone: a concrete payload is an
+# operand, never an XLA constant that folds differently.
+_AUTO_PREFIX = "__auto"
+
+
+def _auto_name(i: int) -> str:
+    return f"{_AUTO_PREFIX}{i}"
+
+
+def auto_param_values(spec: ScenarioSpec) -> Dict[str, np.ndarray]:
+    """Synthetic param leaves for the spec's concrete operand payloads:
+    every concrete ``PriceChange.multiplier`` (the reprice edit and any
+    dependent ``AddArm`` pricing read it as a traced operand) and every
+    concrete ``BudgetChange.budget``. Values are time-independent, so
+    the same scalars serve every retimed ``Timeline`` of the spec."""
+    out: Dict[str, np.ndarray] = {}
+    for i, e in enumerate(spec.events):
+        if isinstance(e, PriceChange) and not isinstance(e.multiplier, Param):
+            out[_auto_name(i)] = np.float32(e.multiplier)
+        elif isinstance(e, BudgetChange) and not isinstance(e.budget, Param):
+            out[_auto_name(i)] = np.float32(e.budget)
+    return out
+
+
+def _budget_ref(spec: ScenarioSpec, i: int) -> Param:
+    e = spec.events[i]
+    return e.budget if isinstance(e.budget, Param) else Param(_auto_name(i))
+
+
+def _mult_ref(spec: ScenarioSpec, i: int) -> Param:
+    e = spec.events[i]
+    return (e.multiplier if isinstance(e.multiplier, Param)
+            else Param(_auto_name(i)))
+
+
+def _inforce_price_ref(spec: ScenarioSpec, i: int) -> Optional[Param]:
+    """The payload reference for the price multiplier in force on
+    ``spec.events[i].slot`` at that AddArm's boundary: the last same-arm
+    ``PriceChange`` with ``t <= events[i].t`` (every event at the same
+    boundary applies; listed order breaks ties, matching
+    ``_segment_mods``). None when no PriceChange ever touched the slot
+    (base price exactly)."""
+    e = spec.events[i]
+    win = None
+    for j, ev in enumerate(spec.events):
+        if (isinstance(ev, PriceChange) and ev.arm == e.slot
+                and ev.t <= e.t):
+            if win is None or (ev.t, j) >= win[:2]:
+                win = (ev.t, j)
+    return None if win is None else _mult_ref(spec, win[1])
+
+
+# Sentinel replacing operand / stream-data payload values in runner
+# cache keys: a concrete silent price or quality value is baked into the
+# *stream* tensors, and a concrete budget / recalibrate multiplier is an
+# auto-lifted *operand* — neither appears in the traced program, so
+# specs differing only in those values share one compiled runner.
+_LIFTED = "<lifted>"
+
+
+def _key_event(e: Event, mask_times: bool = False):
+    t = 0 if mask_times else e.t
+    if isinstance(e, PriceChange):
+        m = e.multiplier
+        if not isinstance(m, Param) and m != 1.0:
+            m = _LIFTED   # concrete 1.0 restore stays structural
+        return ("PriceChange", t, e.arm, _hashable(m), e.recalibrate)
+    if isinstance(e, QualityShift):
+        tm = e.target_mean
+        if tm is not None and not isinstance(tm, Param):
+            tm = _LIFTED  # concrete target: stream data (None restores)
+        return ("QualityShift", t, e.arm, _hashable(tm))
+    if isinstance(e, BudgetChange):
+        b = e.budget if isinstance(e.budget, Param) else _LIFTED
+        return ("BudgetChange", t, _hashable(b))
+    # AddArm / DeleteArm / HyperShift / TrafficMixShift payloads stay
+    # structural (concrete values are trace constants or host-side).
+    return (type(e).__name__, t) + tuple(
+        _hashable(getattr(e, f.name))
+        for f in dataclasses.fields(e) if f.name != "t")
+
+
+def runner_spec_key(spec: ScenarioSpec, mask_times: bool = False):
+    """The part of a spec that shapes the traced runner program. Operand
+    and stream-data payload values are masked (``_key_event``); with
+    ``mask_times`` the event times and rng/stream knobs are masked too —
+    the timeline runner's contract that event times, like payloads, are
+    data (the horizon stays: it is the padded scan length T_max)."""
+    if mask_times:
+        return ("timeline", spec.horizon,
+                tuple(_key_event(e, True) for e in spec.events))
+    return ("concrete", spec.horizon,
+            tuple(_key_event(e) for e in spec.events))
+
+
+# ---------------------------------------------------------------------------
+# Timeline: event times & horizon as data
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline:
+    """Retimed event steps (aligned with ``spec.events``, listed order)
+    plus an optional effective horizon ``<= spec.horizon`` — the *data*
+    half of a scenario's timing. ``retime(spec, tl)`` produces the
+    equivalent concrete spec; the masked timeline runner instead feeds
+    ``event_ts``/``horizon`` in as traced operands, so every Timeline of
+    one spec shares ONE compiled program (DESIGN.md §12)."""
+
+    event_ts: Tuple[int, ...]
+    horizon: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "event_ts", tuple(int(t) for t in self.event_ts))
+        if self.horizon is not None:
+            object.__setattr__(self, "horizon", int(self.horizon))
+
+
+def retime(spec: ScenarioSpec, tl: Timeline) -> ScenarioSpec:
+    """The concrete spec equivalent to running ``spec`` under ``tl`` —
+    the host-side half of the timeline path (stream building, bounds)
+    and the looped baseline the masked runner is bit-identical to.
+    Invalid timelines (times outside [0, horizon), rng-mode segment
+    mismatches, Add/Delete reorderings) fail this spec's own
+    validation."""
+    if len(tl.event_ts) != len(spec.events):
+        raise ValueError(
+            f"Timeline has {len(tl.event_ts)} event times but the spec "
+            f"has {len(spec.events)} events")
+    h = spec.horizon if tl.horizon is None else tl.horizon
+    if not 1 <= h <= spec.horizon:
+        raise ValueError(
+            f"Timeline horizon {h} must be in [1, spec.horizon="
+            f"{spec.horizon}] (spec.horizon is the padded scan length)")
+    events = tuple(dataclasses.replace(e, t=t)
+                   for e, t in zip(spec.events, tl.event_ts))
+    return dataclasses.replace(spec, horizon=h, events=events)
+
+
+# ---------------------------------------------------------------------------
 # Stream compilation (host-side numpy)
 # ---------------------------------------------------------------------------
 
@@ -688,6 +840,7 @@ def build_streams(
     env: simulator.Environment,
     seeds: Sequence[int],
     params: Optional[ScenarioParams] = None,
+    pad_to: Optional[int] = None,
 ):
     """Lower the spec to stacked (S, T, d) / (S, T, max_arms) tensors.
 
@@ -699,15 +852,20 @@ def build_streams(
     traffic-mix weights are the exception: they are resolved host-side
     here (structural — they change the prompt draw itself).
 
+    ``pad_to`` pads the time axis out to T_max steps (zero contexts /
+    rewards, 1e9 costs) for the masked timeline runner — padding rows
+    are computed on but never observed (trace masked, state frozen).
+
     Cached (bounded LRU) on (spec, padding, seeds, env content, resolved
     mix weights): benchmark sweeps re-run the same spec across router
     configs, budgets and payload values, and the host-side gather +
     device put is the expensive part.
     """
     assert env.k <= cfg.max_arms, (env.k, cfg.max_arms)
+    assert pad_to is None or pad_to >= spec.horizon, (pad_to, spec.horizon)
     _validate_state_events(spec, env.k)
     mix_values = _host_mix_values(spec, params)
-    cache_key = (spec_key(spec), cfg.max_arms,
+    cache_key = (spec_key(spec), cfg.max_arms, pad_to,
                  tuple(int(s) for s in seeds), _env_content_sig(env),
                  tuple((nm, v.tobytes()) for nm, v in mix_values.items()))
 
@@ -733,6 +891,14 @@ def build_streams(
                     [r, np.zeros((len(r), pad), np.float32)], 1)
                 c = np.concatenate(
                     [c, np.full((len(c), pad), 1e9, np.float32)], 1)
+            extra = 0 if pad_to is None else pad_to - len(x)
+            if extra:
+                x = np.concatenate(
+                    [x, np.zeros((extra,) + x.shape[1:], x.dtype)])
+                r = np.concatenate(
+                    [r, np.zeros((extra, r.shape[1]), np.float32)])
+                c = np.concatenate(
+                    [c, np.full((extra, c.shape[1]), 1e9, np.float32)])
             xs.append(x), rs.append(r), cs.append(c)
         return (
             jnp.asarray(np.stack(xs)),
@@ -748,59 +914,76 @@ def build_streams(
 # ---------------------------------------------------------------------------
 
 
-def _scaled_price(base_preq: float, base_p1k: float, mult,
+def _scaled_price(base_preq: float, base_p1k: float, mult: Param,
                   params: ScenarioParams):
-    """(price_per_req, price_per_1k) scaled by ``mult``. A concrete
-    multiplier keeps the historical host-float (f64) lowering
-    byte-for-byte; a ``Param`` multiplier is an f32 traced multiply
-    (may differ from the concrete lowering by 1 ulp — DESIGN.md §10)."""
-    if isinstance(mult, Param):
-        m = params.get(mult.name)
-        return jnp.float32(base_preq) * m, jnp.float32(base_p1k) * m
-    return base_preq * mult, base_p1k * mult
+    """(price_per_req, price_per_1k) scaled by a payload reference —
+    always an f32 operand multiply: concrete multipliers are auto-lifted
+    onto ``__auto{i}`` leaves, so the concrete and ``Param`` lowerings
+    are the same program and the same bits."""
+    m = params.get(mult.name)
+    return jnp.float32(base_preq) * m, jnp.float32(base_p1k) * m
 
 
-def _one_edit(cfg: RouterConfig, e: Event, env: simulator.Environment,
-              mods: _SegmentMods):
-    """Lower one state event to a pure (RouterState, ScenarioParams) ->
-    RouterState fn (``Param`` payloads resolve from the traced leaves).
-    Closures capture per-arm price *scalars*, never ``env`` itself — the
-    bounded runner caches would otherwise pin whole Environments."""
+def _add_arm_fn(cfg: RouterConfig, spec: ScenarioSpec, i: int,
+                env: simulator.Environment):
+    """Lower ``spec.events[i]`` (an AddArm) to an edit taking the
+    *resolved in-force price multiplier* as a traced scalar — the caller
+    supplies it (statically selected for the concrete path, folded from
+    traced event times for the timeline path)."""
+    e = spec.events[i]
+    assert e.slot < env.k, (
+        f"AddArm slot {e.slot} has no environment columns (k={env.k})")
+    preq0 = float(env.prices_per_req[e.slot])
+    p1k0 = float(env.prices_per_1k[e.slot])
+
+    def add(st, ps, m):
+        preq = jnp.float32(preq0) if m is None else jnp.float32(preq0) * m
+        p1k = jnp.float32(p1k0) if m is None else jnp.float32(p1k0) * m
+        prior = e.prior
+        if isinstance(prior, Param):
+            prior = _unpack_prior(ps.get(prior.name), cfg.d)
+        return registry.add_arm(
+            cfg, st, e.slot, preq, p1k,
+            prior=prior, n_eff=_resolve(e.n_eff, ps),
+            bias_reward=_resolve(e.bias_reward, ps),
+            forced_exploration=e.forced_exploration)
+
+    return add
+
+
+def _one_edit(cfg: RouterConfig, spec: ScenarioSpec, i: int,
+              env: simulator.Environment):
+    """Lower state event ``spec.events[i]`` to a pure (RouterState,
+    ScenarioParams) -> RouterState fn. Every float payload — concrete or
+    ``Param`` — resolves from the traced params leaves (concrete values
+    ride auto-lifted ``__auto{i}`` leaves), so payload values never
+    appear in the program. Closures capture per-arm price *scalars*,
+    never ``env`` itself — the bounded runner caches would otherwise pin
+    whole Environments."""
+    e = spec.events[i]
     if isinstance(e, PriceChange):
         if not e.recalibrate:
             return None
         preq0 = float(env.prices_per_req[e.arm])
         p1k0 = float(env.prices_per_1k[e.arm])
+        ref = _mult_ref(spec, i)
 
         def reprice(st, ps):
-            preq, p1k = _scaled_price(preq0, p1k0, e.multiplier, ps)
+            preq, p1k = _scaled_price(preq0, p1k0, ref, ps)
             return registry.set_price(cfg, st, e.arm, preq, p1k)
 
         return reprice
     if isinstance(e, AddArm):
-        assert e.slot < env.k, (
-            f"AddArm slot {e.slot} has no environment columns (k={env.k})")
-        mult = dict(mods.price_mults).get(e.slot, 1.0)
-        preq0 = float(env.prices_per_req[e.slot])
-        p1k0 = float(env.prices_per_1k[e.slot])
-
-        def add(st, ps):
-            preq, p1k = _scaled_price(preq0, p1k0, mult, ps)
-            prior = e.prior
-            if isinstance(prior, Param):
-                prior = _unpack_prior(ps.get(prior.name), cfg.d)
-            return registry.add_arm(
-                cfg, st, e.slot, preq, p1k,
-                prior=prior, n_eff=_resolve(e.n_eff, ps),
-                bias_reward=_resolve(e.bias_reward, ps),
-                forced_exploration=e.forced_exploration)
-
-        return add
+        add = _add_arm_fn(cfg, spec, i, env)
+        ref = _inforce_price_ref(spec, i)
+        return lambda st, ps: add(
+            st, ps, None if ref is None else ps.get(ref.name))
     if isinstance(e, DeleteArm):
         return lambda st, ps: registry.delete_arm(cfg, st, e.slot)
     if isinstance(e, BudgetChange):
+        ref = _budget_ref(spec, i)
         return lambda st, ps: dataclasses.replace(
-            st, pacer=pacer_lib.set_budget(st.pacer, _resolve(e.budget, ps)))
+            st, pacer=pacer_lib.set_budget(st.pacer, ps.get(ref.name)))
     if isinstance(e, HyperShift):
         ov = e.overrides()
         if not ov:
@@ -814,14 +997,13 @@ def _edit_fns(cfg: RouterConfig, spec: ScenarioSpec,
               env: simulator.Environment):
     """Per-segment composite edit applied before the segment's first
     request (None when the boundary carries no state events)."""
-    mods = _segment_mods(spec)
     out = []
-    for j, (start, _) in enumerate(spec.segments):
+    for start, _ in spec.segments:
         fns = []
-        for e in spec.events:   # listed order within a boundary
+        for i, e in enumerate(spec.events):  # listed order at a boundary
             if e.t != start or not isinstance(e, _STATE_EVENTS):
                 continue
-            f = _one_edit(cfg, e, env, mods[j])
+            f = _one_edit(cfg, spec, i, env)
             if f is not None:
                 fns.append(f)
         if not fns:
@@ -835,6 +1017,189 @@ def _edit_fns(cfg: RouterConfig, spec: ScenarioSpec,
 
         out.append(composite)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Timeline lowering: the padded masked scan (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def validate_timeline_alignment(rspec: ScenarioSpec, batch_size,
+                                t_max: int) -> None:
+    """The batched data plane consumes uniform B-blocks, so a timeline's
+    event times, effective horizon and the padded scan length must all be
+    multiples of B — then every block is entirely live or entirely
+    padding and block boundaries coincide with the concrete path's
+    segment blocks (bit-identity). Timelines are host-concrete, so this
+    is a plain host check."""
+    if batch_size is None or batch_size <= 1:
+        return
+    bad = sorted({e.t for e in rspec.events if e.t % batch_size})
+    if bad or rspec.horizon % batch_size or t_max % batch_size:
+        raise ValueError(
+            f"timeline is not aligned to batch_size={batch_size}: event "
+            f"times {bad or '[]'}, horizon {rspec.horizon}, padded length "
+            f"{t_max} must all be multiples of the block size")
+
+
+def _timeline_stream_tfs(spec: ScenarioSpec, env: simulator.Environment):
+    """The timeline-path counterpart of ``_stream_tfs``: one transform
+    over the full padded (T_max, ...) tensors, masking each ``Param``
+    price/quality payload to its traced in-force window [t_i, end_i)
+    where end_i is the next same-(kind, arm) event in time (listed order
+    breaks ties — matching ``_segment_mods``) or the element's horizon.
+    Same f32 ops on in-force rows as the per-segment transforms, rows
+    outside untouched — so live steps are bit-identical to the concrete
+    retimed spec. None when the spec has no Param stream payloads."""
+    pmult = tuple((i, e.arm, e.multiplier.name)
+                  for i, e in enumerate(spec.events)
+                  if isinstance(e, PriceChange)
+                  and isinstance(e.multiplier, Param))
+    qual = tuple((i, e.arm, e.target_mean.name)
+                 for i, e in enumerate(spec.events)
+                 if isinstance(e, QualityShift)
+                 and isinstance(e.target_mean, Param))
+    if not pmult and not qual:
+        return None
+    base_mean = {arm: env.rewards[:, arm].mean() for _, arm, _ in qual}
+    by_kind = {
+        "p": [(j, e.arm) for j, e in enumerate(spec.events)
+              if isinstance(e, PriceChange)],
+        "q": [(j, e.arm) for j, e in enumerate(spec.events)
+              if isinstance(e, QualityShift)],
+    }
+
+    def window(i, arm, kind, ev_ts, horizon):
+        end = horizon
+        for j, arm_j in by_kind[kind]:
+            if j == i or arm_j != arm:
+                continue
+            later = (ev_ts[j] > ev_ts[i]) if j < i else (ev_ts[j] >= ev_ts[i])
+            end = jnp.where(later, jnp.minimum(end, ev_ts[j]), end)
+        return end
+
+    def tf(xs, rmat, cmat, params, ev_ts, horizon):
+        steps = jnp.arange(rmat.shape[0], dtype=jnp.int32)
+        for i, arm, name in qual:
+            end = window(i, arm, "q", ev_ts, horizon)
+            m = (steps >= ev_ts[i]) & (steps < end)
+            shift = jnp.float32(base_mean[arm]) - params.get(name)
+            col = jnp.clip(rmat[:, arm] - shift, 0.0, 1.0)
+            rmat = rmat.at[:, arm].set(jnp.where(m, col, rmat[:, arm]))
+        for i, arm, name in pmult:
+            end = window(i, arm, "p", ev_ts, horizon)
+            m = (steps >= ev_ts[i]) & (steps < end)
+            scaled = cmat[:, arm] * params.get(name)
+            cmat = cmat.at[:, arm].set(jnp.where(m, scaled, cmat[:, arm]))
+        return xs, rmat, cmat
+
+    return tf
+
+
+def _timeline_edits(cfg: RouterConfig, spec: ScenarioSpec,
+                    env: simulator.Environment):
+    """State events lowered for traced activation: a list of ``(i, fn)``
+    with ``fn(state, params, ev_ts) -> state``, fired by the scan body
+    under ``lax.cond(ev_ts[i] == t)``. An ``AddArm``'s in-force price
+    multiplier — a *time-dependent* quantity — is folded from the traced
+    event times (last same-arm PriceChange with ``t_j <= t_add``, listed
+    order breaking ties), reading the same auto-lifted / ``Param``
+    leaves as the concrete path's static selection."""
+    out = []
+    for i, e in enumerate(spec.events):
+        if not isinstance(e, _STATE_EVENTS):
+            continue
+        if isinstance(e, AddArm):
+            add = _add_arm_fn(cfg, spec, i, env)
+            cands = tuple(
+                (j, _mult_ref(spec, j)) for j, ev in enumerate(spec.events)
+                if isinstance(ev, PriceChange) and ev.arm == e.slot)
+
+            def fn(st, ps, ev_ts, _i=i, _add=add, _cands=cands):
+                cur_t = jnp.int32(-1)
+                m = jnp.float32(1.0)
+                for j, ref in _cands:   # ascending j: (t, j) lex max
+                    applies = (ev_ts[j] <= ev_ts[_i]) & (ev_ts[j] >= cur_t)
+                    m = jnp.where(applies, ps.get(ref.name), m)
+                    cur_t = jnp.where(applies, ev_ts[j], cur_t)
+                return _add(st, ps, m)
+
+            out.append((i, fn))
+            continue
+        f = _one_edit(cfg, spec, i, env)
+        if f is not None:
+            out.append((i, lambda st, ps, ev_ts, _f=f: _f(st, ps)))
+    return tuple(out)
+
+
+def timeline_body(cfg: RouterConfig, spec: ScenarioSpec,
+                  env: simulator.Environment, batch_size=None):
+    """The per-element masked-scan program: ONE ``lax.scan`` over the
+    padded T_max steps with event times and the horizon as traced
+    operands. Per step: state edits fire under ``lax.cond(ev_ts[i] ==
+    t)`` in listed order, the router steps, and a ``live = t < horizon``
+    select freezes the state and zeroes the trace on padding (arm -1,
+    r/c/lam 0) — so the PRNG chain, pacer and stats advance exactly as
+    the concrete retimed spec's program on live steps, bit for bit.
+    Shared by the seed-vmapped runner and the sweep fabric's timeline
+    grid, which vmaps it over a flattened (condition x seed) axis."""
+    edits = _timeline_edits(cfg, spec, env)
+    tf = _timeline_stream_tfs(spec, env)
+    B = batch_size if batch_size is not None and batch_size > 1 else None
+
+    def one_elem(state: RouterState, xs, rmat, cmat,
+                 params: ScenarioParams, ev_ts, horizon):
+        if tf is not None:
+            xs, rmat, cmat = tf(xs, rmat, cmat, params, ev_ts, horizon)
+        T = xs.shape[0]
+
+        def apply_edits(st, t0):
+            for i, fn in edits:
+                st = jax.lax.cond(
+                    ev_ts[i] == t0,
+                    lambda s, _fn=fn: _fn(s, params, ev_ts),
+                    lambda s: s, st)
+            return st
+
+        def step_masked(step_fn, s, t0, x, rv, cv, pad_arm):
+            s = apply_edits(s, t0)
+            s2, (arm, r, c, lam) = step_fn(s, x, rv, cv)
+            live = t0 < horizon
+            tr = (jnp.where(live, arm, pad_arm),
+                  jnp.where(live, r, jnp.float32(0.0)),
+                  jnp.where(live, c, jnp.float32(0.0)),
+                  jnp.where(live, lam, jnp.float32(0.0)))
+            s2 = jax.tree.map(lambda n, o: jnp.where(live, n, o), s2, s)
+            return s2, tr
+
+        if B is None:
+            def body(s, inp):
+                t0, x, rv, cv = inp
+                return step_masked(
+                    lambda *a: router.step(cfg, *a), s, t0, x, rv, cv,
+                    jnp.int32(-1))
+
+            steps = jnp.arange(T, dtype=jnp.int32)
+            return jax.lax.scan(body, state, (steps, xs, rmat, cmat))
+
+        nb = T // B
+
+        def block(s, inp):
+            t0, xb, rb, cb = inp
+            # Alignment (validate_timeline_alignment) makes each block
+            # entirely live or entirely padding, edits at block starts.
+            return step_masked(
+                lambda *a: router.step_batch(cfg, *a), s, t0, xb, rb, cb,
+                jnp.full((B,), -1, jnp.int32))
+
+        t0s = jnp.arange(nb, dtype=jnp.int32) * B
+        state, trace = jax.lax.scan(
+            block, state,
+            (t0s, xs.reshape(nb, B, -1), rmat.reshape(nb, B, -1),
+             cmat.reshape(nb, B, -1)))
+        return state, jax.tree.map(lambda a: a.reshape(nb * B), trace)
+
+    return one_elem
 
 
 # ---------------------------------------------------------------------------
@@ -936,10 +1301,45 @@ def compiled_runner(
     """
     # Keyed on the statics projection: hyper-parameters are state leaves
     # (DESIGN.md §9), so configs differing only in (α, γ, ...) share one
-    # compiled runner.
-    key = (cfg.statics, spec_key(spec), _env_sig(env), batch_size)
+    # compiled runner. Operand / stream-data payload values are masked
+    # from the spec part (``runner_spec_key``): concrete payloads are
+    # auto-lifted, so a spec family differing only in values shares one
+    # runner too.
+    key = (cfg.statics, runner_spec_key(spec), _env_sig(env), batch_size)
 
     def make():
         return _make_runner(cfg, spec, env, batch_size)
+
+    return lru_get(_RUNNER_CACHE, key, make, _RUNNER_CACHE_MAX)
+
+
+def _make_timeline_runner(cfg: RouterConfig, spec: ScenarioSpec,
+                          env: simulator.Environment, batch_size):
+    body = timeline_body(cfg, spec, env, batch_size)
+
+    def one_elem(state, xs, rmat, cmat, params, ev_ts, horizon):
+        TRACE_COUNT[0] += 1       # moves only while tracing
+        return body(state, xs, rmat, cmat, params, ev_ts, horizon)
+
+    return jax.jit(jax.vmap(one_elem, in_axes=(0,) * 7))
+
+
+def compiled_timeline_runner(
+    cfg: RouterConfig,
+    spec: ScenarioSpec,
+    env: simulator.Environment,
+    batch_size: Optional[int] = None,
+):
+    """Cached jitted masked-scan runner: like ``compiled_runner`` but
+    event times and the effective horizon are traced ``(E,)`` / scalar
+    i32 operands on the vmapped axis (``spec`` contributes only its
+    event *structure* and T_max = ``spec.horizon``), so every
+    ``Timeline`` of a spec — every event placement, every padded
+    horizon — re-enters ONE compiled program with zero retraces."""
+    key = (cfg.statics, runner_spec_key(spec, mask_times=True),
+           _env_sig(env), batch_size)
+
+    def make():
+        return _make_timeline_runner(cfg, spec, env, batch_size)
 
     return lru_get(_RUNNER_CACHE, key, make, _RUNNER_CACHE_MAX)

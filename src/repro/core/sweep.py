@@ -96,15 +96,24 @@ class GridResult:
     # Per-condition scenario payload values (name -> (C,)+payload_shape),
     # recorded for reporting when a payload axis rides the grid.
     params: Optional[dict] = None
+    # Timeline grids: per-condition *effective* bounds / horizons — the
+    # (C, S, T) arrays are padded to T_max, and ``condition(i)`` trims to
+    # horizons[i] so downstream slicing never reads padding rows.
+    cond_bounds: Optional[tuple] = None
+    horizons: Optional[tuple] = None
 
     def __len__(self) -> int:
         return len(self.budgets)
 
     def condition(self, i: int) -> evaluate.RunResult:
-        """Slice one condition to the standard multi-seed ``RunResult``."""
+        """Slice one condition to the standard multi-seed ``RunResult``
+        (timeline grids: trimmed to the condition's effective horizon,
+        with that condition's own segment bounds)."""
+        h = None if self.horizons is None else self.horizons[i]
+        b = self.bounds if self.cond_bounds is None else self.cond_bounds[i]
         return evaluate.RunResult(
-            arms=self.arms[i], rewards=self.rewards[i],
-            costs=self.costs[i], lams=self.lams[i], bounds=self.bounds,
+            arms=self.arms[i][:, :h], rewards=self.rewards[i][:, :h],
+            costs=self.costs[i][:, :h], lams=self.lams[i][:, :h], bounds=b,
         )
 
     def conditions(self):
@@ -175,10 +184,11 @@ def _tile_conditions(arr: Array, C: int, sh) -> Array:
 
 
 def _shard_grid(states: RouterState, streams, stream_axes, C, devices,
-                params=None):
+                params=None, extras=()):
     """Place the flattened grid on a 1-D device mesh: state leaves,
-    condition-tiled streams and per-element scenario-param leaves split
-    along the grid axis, shared streams replicated."""
+    condition-tiled streams, per-element scenario-param leaves and any
+    ``extras`` (per-element timeline operands) split along the grid
+    axis, shared streams replicated."""
     n = int(states.t.shape[0])
     mesh = mesh_lib.make_grid_mesh(n, devices)
     sh = mesh_lib.grid_sharding(mesh)
@@ -190,12 +200,17 @@ def _shard_grid(states: RouterState, streams, stream_axes, C, devices,
     # one. Copy to uniquify — a few MB next to the grid compute.
     states = jax.tree.map(lambda l: jnp.array(l, copy=True), states)
     if stream_axes == 0:
-        streams = tuple(_tile_conditions(a, C, sh) for a in streams)
+        # Pre-stacked per-element streams pass through; per-seed (S,...)
+        # streams are condition-tiled.
+        streams = tuple(
+            jax.device_put(a, sh) if a.shape[0] == n
+            else _tile_conditions(a, C, sh) for a in streams)
     else:
         streams = tuple(jax.device_put(a, rep) for a in streams)
     if params is not None:
         params = jax.tree.map(lambda l: jax.device_put(l, sh), params)
-    return states, streams, params
+    extras = tuple(jax.device_put(a, sh) for a in extras)
+    return states, streams, params, extras
 
 
 def _apply_condition_edits(
@@ -444,7 +459,7 @@ def run_grid(
     )
     if condition_edits is not None:
         states = _apply_condition_edits(states, condition_edits, S)
-    states, streams, _ = _shard_grid(
+    states, streams, _, _ = _shard_grid(
         states, (xs, rmat, cmat), stream_axes, C, devices)
 
     fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size,
@@ -532,10 +547,10 @@ def _cached_scenario_grid_fn(
     n_chunks: int = 1,
 ):
     """Fabric program around the scenario engine's segmented-scan body,
-    cached like ``scenario.compiled_runner`` (statics, spec, rate card,
-    batch size, chunking) — budgets, seeds and hyper-parameters stay
-    data."""
-    key = (cfg.statics, scenario_lib.spec_key(spec),
+    cached like ``scenario.compiled_runner`` (statics, payload-masked
+    spec structure, rate card, batch size, chunking) — budgets, seeds,
+    hyper-parameters and payload values stay data."""
+    key = (cfg.statics, scenario_lib.runner_spec_key(spec),
            scenario_lib._env_sig(env), batch_size, n_chunks)
 
     def make():
@@ -550,6 +565,82 @@ def _cached_scenario_grid_fn(
                        donate_argnums=0)
 
     return scenario_lib.lru_get(_SCEN_CACHE, key, make, _SCEN_CACHE_MAX)
+
+
+def _cached_timeline_grid_fn(
+    cfg: RouterConfig,
+    spec: "scenario_lib.ScenarioSpec",
+    env: Environment,
+    batch_size,
+    n_chunks: int = 1,
+):
+    """Fabric program around the masked timeline scan
+    (``scenario.timeline_body``): event times and horizons are two more
+    per-element operands, so every timeline assignment — every Monte
+    Carlo draw — re-enters ONE compiled, device-sharded program."""
+    key = (cfg.statics, scenario_lib.runner_spec_key(spec, mask_times=True),
+           scenario_lib._env_sig(env), batch_size, n_chunks)
+
+    def make():
+        body = scenario_lib.timeline_body(cfg, spec, env, batch_size)
+
+        def one(state, x, rm, cm, params, ev_ts, horizon):
+            TRACE_COUNT[0] += 1       # moves only while tracing
+            return body(state, x, rm, cm, params, ev_ts, horizon)
+
+        vm = jax.vmap(one, in_axes=(0,) * 7)
+        return jax.jit(_chunk_wrap(vm, n_chunks, (True,) * 6),
+                       donate_argnums=0)
+
+    return scenario_lib.lru_get(_SCEN_CACHE, key, make, _SCEN_CACHE_MAX)
+
+
+def _normalize_timelines(timelines, C: int, S: int):
+    """One shared Timeline, a (C,) per-condition sequence, or a (C*S,)
+    per-element sequence -> (tuple of timelines, per_condition flag)."""
+    if isinstance(timelines, scenario_lib.Timeline):
+        return (timelines,) * C, True
+    tls = tuple(timelines)
+    for tl in tls:
+        if not isinstance(tl, scenario_lib.Timeline):
+            raise ValueError(f"timelines entries must be Timeline, got "
+                             f"{type(tl).__name__}")
+    if len(tls) == C:
+        return tls, True
+    if len(tls) == C * S:
+        return tls, False
+    raise ValueError(
+        f"timelines must be one Timeline, ({C},) per condition or "
+        f"({C * S},) per element; got {len(tls)}")
+
+
+def _timeline_grid_operands(cfg, spec, env, tls, per_cond, seeds, flat_s,
+                            params, batch_size):
+    """Host-side lowering of a timeline axis: per-timeline retimed specs
+    (validated), padded stream stacks concatenated along the flat grid
+    axis, and the (N, E) / (N,) traced timing operands."""
+    t_max, E = spec.horizon, len(spec.events)
+    rspecs = [scenario_lib.retime(spec, tl) for tl in tls]
+    for r_ in rspecs:
+        scenario_lib.validate_timeline_alignment(r_, batch_size, t_max)
+    if per_cond:
+        parts = [scenario_lib.build_streams(cfg, r_, env, seeds,
+                                            params=params, pad_to=t_max)
+                 for r_ in rspecs]
+        rep = len(seeds)
+    else:
+        parts = [scenario_lib.build_streams(cfg, r_, env, (flat_s[i],),
+                                            params=params, pad_to=t_max)
+                 for i, r_ in enumerate(rspecs)]
+        rep = 1
+    streams = tuple(
+        np.concatenate([np.asarray(p[j]) for p in parts]) for j in range(3))
+    ev = np.repeat(
+        np.asarray([[e.t for e in r_.events] for r_ in rspecs],
+                   np.int32).reshape(len(rspecs), E), rep, axis=0)
+    hz = np.repeat(
+        np.asarray([r_.horizon for r_ in rspecs], np.int32), rep)
+    return rspecs, streams, ev, hz
 
 
 def run_scenario_grid(
@@ -569,6 +660,7 @@ def run_scenario_grid(
     condition_edits: Optional[Sequence[Optional[Callable]]] = None,
     scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
     chunk_size: Optional[int] = None,
+    timelines=None,
 ):
     """One multi-event scenario across a budget grid as one compiled,
     sharded call — per condition equivalent to ``evaluate.run_scenario``
@@ -590,6 +682,18 @@ def run_scenario_grid(
     ``chunk_size`` scans the flattened grid chunk-by-chunk inside the
     compiled program exactly as in ``run_grid`` (bit-identical results,
     bounded per-step working set).
+
+    ``timelines`` puts the spec's event *times* and effective horizon on
+    the condition axis (DESIGN.md §12): one shared
+    ``scenario.Timeline``, a ``(C,)`` per-condition sequence, or a
+    ``(C*S,)`` per-element sequence. The grid then runs through the
+    masked timeline fabric — every element bit-identical to
+    ``evaluate.run_scenario`` on its concrete retimed spec, every
+    timeline assignment re-entering ONE compiled program (the scenario
+    Monte Carlo substrate). Per-condition timelines record effective
+    ``cond_bounds``/``horizons`` on the result so ``condition(i)`` trims
+    padding; composes with ``condition_edits``/``scenario_params``/
+    ``chunk_size`` and both data planes unchanged.
     """
     budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
     budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
@@ -598,8 +702,7 @@ def run_scenario_grid(
         scenario_params if scenario_params is not None
         else scenario_lib.ScenarioParams(), condition_edits, C, S)
     params = scenario_lib.resolve_params(spec, params)
-    xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
-                                                params=params)
+    full = params.updated(**scenario_lib.auto_param_values(spec))
     states = evaluate.make_states(
         cfg, env, flat_b, flat_s,
         priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
@@ -608,13 +711,31 @@ def run_scenario_grid(
     )
     if condition_edits is not None:
         states = _apply_condition_edits(states, condition_edits, S)
-    pstack = _expand_params(params, C, S)
-    states, streams, pstack = _shard_grid(
-        states, (xs, rmat, cmat), 0, C, devices, pstack)
-
-    fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size,
-                                  _n_chunks(C * S, chunk_size))
-    finals, (arms, r, c, lam) = fn(states, *streams, pstack)
+    pstack = _expand_params(full, C, S)
+    cond_bounds = horizons = None
+    if timelines is None:
+        xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
+                                                    params=params)
+        states, streams, pstack, _ = _shard_grid(
+            states, (xs, rmat, cmat), 0, C, devices, pstack)
+        fn = _cached_scenario_grid_fn(cfg, spec, env, batch_size,
+                                      _n_chunks(C * S, chunk_size))
+        finals, (arms, r, c, lam) = fn(states, *streams, pstack)
+        bounds = spec.bounds
+    else:
+        tls, per_cond = _normalize_timelines(timelines, C, S)
+        rspecs, host_streams, ev, hz = _timeline_grid_operands(
+            cfg, spec, env, tls, per_cond, seeds, flat_s, params,
+            batch_size)
+        states, streams, pstack, (ev, hz) = _shard_grid(
+            states, host_streams, 0, C, devices, pstack, extras=(ev, hz))
+        fn = _cached_timeline_grid_fn(cfg, spec, env, batch_size,
+                                      _n_chunks(C * S, chunk_size))
+        finals, (arms, r, c, lam) = fn(states, *streams, pstack, ev, hz)
+        bounds = None
+        if per_cond:
+            cond_bounds = tuple(r_.bounds for r_ in rspecs)
+            horizons = tuple(r_.horizon for r_ in rspecs)
     cond_params = {
         n: np.asarray(params.get(n))
         for n in params.names
@@ -626,8 +747,10 @@ def run_scenario_grid(
         rewards=np.asarray(r).reshape(C, S, -1),
         costs=np.asarray(c).reshape(C, S, -1),
         lams=np.asarray(lam).reshape(C, S, -1),
-        bounds=spec.bounds,
+        bounds=bounds,
         params=cond_params,
+        cond_bounds=cond_bounds,
+        horizons=horizons,
     )
     if return_states:
         return res, finals

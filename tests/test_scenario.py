@@ -322,9 +322,8 @@ class TestParamPayloads:
     def test_budget_param_matches_host_loop_bitwise(self, env):
         """A Param ceiling is an *operand*, exactly like the hand-rolled
         host loop's vmapped ``set_budget`` — so the two agree bit-for-bit.
-        (A concrete BudgetChange payload is a trace constant: XLA folds
-        the pacer's division by it into a reciprocal multiply, 1 ulp off
-        either operand lowering — DESIGN.md §10.)"""
+        (Concrete payloads are auto-lifted through the same operand path,
+        so this holds for them too — DESIGN.md §10.)"""
         t1, T = 60, 140
         seg1, seg2 = [], []
         for s in SEEDS:
@@ -348,9 +347,12 @@ class TestParamPayloads:
             scenario_params=ScenarioParams(ceiling=3.0e-4))
         _assert_bitwise(old, new)
 
-    def test_budget_param_close_to_concrete(self, env):
-        """Concrete vs Param ceiling: identical routing, lams within the
-        constant-folding ulp."""
+    def test_budget_param_matches_concrete_bitwise(self, env):
+        """Concrete vs Param ceiling: bit-identical everywhere. The
+        concrete payload is auto-lifted onto the same ``ScenarioParams``
+        operand path (``__auto`` leaves), so XLA can no longer
+        constant-fold the pacer's division differently — the 1-ulp
+        fine print of the old §10 is gone."""
         mk = lambda b: ScenarioSpec(horizon=120, events=(
             BudgetChange(40, b),), stream_seed_base=921)
         concrete = evaluate.run_scenario(
@@ -358,24 +360,31 @@ class TestParamPayloads:
         param = evaluate.run_scenario(
             CFG, mk(Param("ceiling")), env, 1.9e-3, seeds=SEEDS,
             scenario_params=ScenarioParams(ceiling=3.0e-4))
-        np.testing.assert_array_equal(concrete.arms, param.arms)
-        np.testing.assert_array_equal(concrete.rewards, param.rewards)
-        np.testing.assert_array_equal(concrete.costs, param.costs)
-        np.testing.assert_allclose(concrete.lams, param.lams, atol=1e-6)
+        _assert_bitwise(concrete, param)
 
-    def test_recalibrate_param_matches_concrete_at_exact_mult(self, env):
-        """The Param recalibrate lowering is f32 (the concrete one keeps
-        the historical host-f64 math, 1 ulp apart in general); at a
-        power-of-two multiplier both are exact, so bits must agree."""
+    def test_recalibrate_param_matches_concrete_any_mult(self, env):
+        """Concrete recalibrate multipliers share the Param path's f32
+        operand lowering (auto-lift), so bits agree at ANY multiplier —
+        not just the power-of-two carve-out the old fine print needed."""
         mk = lambda m: ScenarioSpec(horizon=120, events=(
             PriceChange(40, GEMINI, m, recalibrate=True),),
             stream_seed_base=902)
-        concrete = evaluate.run_scenario(CFG, mk(0.25), env, 6.6e-4,
-                                         seeds=SEEDS)
-        param = evaluate.run_scenario(
-            CFG, mk(Param("m")), env, 6.6e-4, seeds=SEEDS,
-            scenario_params=ScenarioParams(m=0.25))
-        _assert_bitwise(concrete, param)
+        for mult in (0.25, 1 / 56, 0.3):
+            concrete = evaluate.run_scenario(CFG, mk(mult), env, 6.6e-4,
+                                             seeds=SEEDS)
+            param = evaluate.run_scenario(
+                CFG, mk(Param("m")), env, 6.6e-4, seeds=SEEDS,
+                scenario_params=ScenarioParams(m=mult))
+            _assert_bitwise(concrete, param)
+
+    def test_auto_prefix_reserved(self, env):
+        """User params may not squat on the auto-lift namespace."""
+        spec = ScenarioSpec(horizon=60, events=(
+            BudgetChange(30, Param("__auto0")),), stream_seed_base=922)
+        with pytest.raises(ValueError, match="reserved"):
+            evaluate.run_scenario(
+                CFG, spec, env, 1.9e-3, seeds=(0,),
+                scenario_params=ScenarioParams(__auto0=3.0e-4))
 
     def test_add_arm_param_payloads(self, env4):
         """n_eff / bias_reward as Params (values chosen so the f32 and
@@ -497,8 +506,15 @@ class TestRunResultUtils:
         assert r.bounds == (0, 4, 10, 18)
 
     def test_segment_requires_bounds(self):
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="no segment boundaries"):
             self._mk(0, 10).segment(0)
+
+    def test_segment_index_out_of_range(self):
+        r = evaluate.RunResult.concat([self._mk(0, 10), self._mk(10, 25)])
+        with pytest.raises(ValueError, match="out of range"):
+            r.segment(2)
+        with pytest.raises(ValueError, match="out of range"):
+            r.segment(-1)
 
 
 class TestConcatEnvironmentsRateCard:
