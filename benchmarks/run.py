@@ -29,6 +29,8 @@ BENCHES = [
     ("scenario_mc",
      "Scenario Monte Carlo: randomized timelines as one fused call"),
     ("sweep", "Sweep fabric: looped-vs-fabric grid wall clock"),
+    ("gateway",
+     "Serving gateway: decoupled-plane decisions/sec + select p95"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
 ]
@@ -64,6 +66,8 @@ def main(argv=None) -> None:
                 mod.param_grid(smoke=args.quick)
             elif name == "scenario_mc":
                 mod.mc_grid(smoke=args.quick)
+            elif name == "gateway":
+                mod.main(smoke=args.quick)
             elif args.quick and name in ("pareto", "cost_drift",
                                          "degradation", "onboarding",
                                          "warmup", "prior_mismatch",

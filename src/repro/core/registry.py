@@ -19,6 +19,15 @@ only ``state`` leaves are batched), so control-plane events compose under
 ``jax.vmap`` over seeds and can be baked into a jitted program — the
 scenario engine (scenario.py) applies them between ``lax.scan`` segments
 inside one compiled simulation.
+
+Under the serving gateway (DESIGN.md §13) these ops are *control-plane*
+writes: they touch both the learner's leaves (slot statistics) and the
+selection plane's view (``active``, prices, forced-exploration), so a
+live deployment must apply them through
+``RouterGateway.apply_control`` — atomically w.r.t. in-flight selection
+and published as a new snapshot — never by mutating a state the planes
+are already reading. ``free_slot`` is the host-side slot scan for that
+path.
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import ArmPrior, RouterConfig, RouterState, log_normalized_cost
 from repro.core import warmup as warmup_lib
@@ -145,3 +155,13 @@ def num_active(state: RouterState):
     if isinstance(n, jax.core.Tracer):
         return n
     return int(n)
+
+
+def free_slot(state: RouterState) -> Optional[int]:
+    """Lowest inactive slot, or None when the registry is at capacity.
+
+    Host-side (one device sync) — this is the control-plane slot scan
+    for onboarding a model through the gateway publish path; it is NOT
+    jit-safe (a traced ``active`` has no concrete free slot)."""
+    inactive = np.flatnonzero(~np.asarray(state.active))
+    return int(inactive[0]) if inactive.size else None

@@ -29,6 +29,7 @@ per-decision latency hold under load.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -388,3 +389,27 @@ def run_stream_batched(cfg: RouterConfig, state: RouterState, xs: Array,
             lambda a, b: jnp.concatenate([a, b]), trace, tail
         )
     return state, trace
+
+
+# ---------------------------------------------------------------------------
+# Statics-keyed compiled entry points (DESIGN.md §9/§13).
+#
+# Hyper-parameters are state leaves, so the ONLY trace identity of the
+# block functions is ``cfg.statics`` (plus the block shape, which jit
+# itself caches on). Caching the jitted callables at module level —
+# rather than per server/gateway instance, as the serving layer used to —
+# means every gateway, benchmark and test that shares a ``Statics`` value
+# shares one compiled program: constructing a second server costs zero
+# retraces, which the gateway's TRACE_COUNT assertions rely on.
+
+@functools.lru_cache(maxsize=None)
+def jit_select_batch(statics):
+    """Compiled ``select_batch`` for one ``Statics`` value."""
+    return jax.jit(lambda s, X: select_batch(statics, s, X))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_update_batch(statics):
+    """Compiled ``update_batch`` for one ``Statics`` value."""
+    return jax.jit(
+        lambda s, arms, X, r, c: update_batch(statics, s, arms, X, r, c))

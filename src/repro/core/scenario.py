@@ -910,6 +910,152 @@ def build_streams(
 
 
 # ---------------------------------------------------------------------------
+# Vectorized timeline stream stacks (the N >> 1e4 Monte Carlo rebuild)
+# ---------------------------------------------------------------------------
+
+
+def timeline_streams_vectorizable(spec: ScenarioSpec) -> bool:
+    """Whether the cross-timeline fast path applies to ``spec``.
+
+    The vectorized rebuild draws each seed's prompt indices ONCE over
+    the full padded horizon and reuses that draw for every timeline.
+    That is exact only when the per-timeline draw is a plain sequential
+    ``integers`` stream from the shared per-seed generator — numpy's
+    ``Generator.integers`` has the prefix/concatenation property that
+    per-segment draws of lengths (L1, L2, ...) equal one draw of
+    sum(L_j) split at the boundaries. Permutation mode, replayed
+    segments, per-segment seeds and traffic-mix reweighting all break
+    that correspondence (different generators, or draws whose *content*
+    depends on segment boundaries), so those specs fall back to the
+    per-timeline ``build_streams`` loop.
+    """
+    return (spec.mode == "iid" and not spec.replay
+            and spec.segment_seeds is None
+            and not any(isinstance(e, TrafficMixShift) for e in spec.events))
+
+
+def build_timeline_streams(
+    cfg: RouterConfig,
+    spec: ScenarioSpec,
+    env: simulator.Environment,
+    rspecs: Sequence[ScenarioSpec],
+    seed_groups: Sequence[Sequence[int]],
+    params: Optional[ScenarioParams] = None,
+    pad_to: Optional[int] = None,
+):
+    """Stacked (N_flat, T, ...) streams for a whole timeline axis.
+
+    ``rspecs`` are the retimed specs of one base ``spec`` (one per
+    timeline); ``seed_groups[i]`` lists the seeds whose rows follow
+    timeline ``i`` (the flat grid order: all of timeline 0's seeds, then
+    timeline 1's, ...). Equivalent to concatenating per-timeline
+    ``build_streams`` calls — bit-for-bit, asserted in tests — but the
+    host work is batched across timelines:
+
+      * ONE rng draw per seed over the padded horizon (instead of one
+        generator + per-segment draws per (timeline, seed)), valid by
+        the ``integers`` prefix property (``timeline_streams_
+        vectorizable``);
+      * ONE transformed env per *distinct* ``_SegmentMods`` across all
+        timelines (retimings permute a handful of payload settings, so
+        V distinct variants service N >> V timelines);
+      * per timeline, a variant-of-step index vector turns the segment
+        structure into data, and one fancy gather per (timeline, seed)
+        block replaces the per-segment concatenate.
+
+    This was the N >> 1e4 scenario-Monte-Carlo bottleneck flagged in
+    DESIGN.md §12. Ineligible specs (see ``timeline_streams_
+    vectorizable``) take the per-timeline loop below — same contract,
+    same cache.
+    """
+    N = len(rspecs)
+    assert N == len(seed_groups) and N > 0, (N, len(seed_groups))
+    T = pad_to if pad_to is not None else spec.horizon
+    cache_key = (
+        "timeline-stack", spec_key(spec), cfg.max_arms, pad_to,
+        tuple((r_.horizon, tuple(e.t for e in r_.events)) for r_ in rspecs),
+        tuple(tuple(int(s) for s in g) for g in seed_groups),
+        _env_content_sig(env),
+        tuple((nm, v.tobytes())
+              for nm, v in _host_mix_values(spec, params).items()),
+    )
+
+    def make_fallback():
+        parts = [build_streams(cfg, r_, env, tuple(g), params=params,
+                               pad_to=pad_to)
+                 for r_, g in zip(rspecs, seed_groups)]
+        return tuple(
+            jnp.concatenate([p[j] for p in parts]) for j in range(3))
+
+    if not timeline_streams_vectorizable(spec):
+        return lru_get(_STREAM_CACHE, cache_key, make_fallback,
+                       _STREAM_CACHE_MAX)
+
+    def make():
+        k, n, d = env.k, env.n, env.contexts.shape[1]
+        assert k <= cfg.max_arms, (k, cfg.max_arms)
+        pad = cfg.max_arms - k
+        ctx = np.ascontiguousarray(env.contexts)
+        heff = np.asarray([r_.horizon for r_ in rspecs], np.int64)
+        assert int(heff.max()) <= T, (int(heff.max()), T)
+
+        # One full-horizon index draw per seed, shared by every timeline.
+        uniq = sorted({int(s) for g in seed_groups for s in g})
+        idx_full = {
+            s: np.random.default_rng(spec.stream_seed_base + s)
+            .integers(0, n, size=T)
+            for s in uniq
+        }
+
+        # One transformed env per distinct segment-settings value.
+        variants: Dict[_SegmentMods, int] = {}
+        rew_list, cost_list = [], []
+        vt = np.zeros((N, T), np.int64)   # variant in force at each step
+        for i, r_ in enumerate(rspecs):
+            _validate_state_events(r_, k)
+            vids = []
+            for m in _segment_mods(r_):
+                if m not in variants:
+                    variants[m] = len(variants)
+                    e = _transformed_env(env, m)
+                    rew_list.append(np.asarray(e.rewards, np.float32))
+                    cost_list.append(np.asarray(e.costs, np.float32))
+                vids.append(variants[m])
+            lens = [b - a for a, b in r_.segments]
+            vt[i, :heff[i]] = np.repeat(vids, lens)
+        REW = np.stack(rew_list)          # (V, n, k)
+        COST = np.stack(cost_list)
+        if pad:
+            REW = np.concatenate(
+                [REW, np.zeros((len(REW), n, pad), np.float32)], 2)
+            COST = np.concatenate(
+                [COST, np.full((len(COST), n, pad), 1e9, np.float32)], 2)
+
+        total = sum(len(g) for g in seed_groups)
+        xs = np.zeros((total, T, d), ctx.dtype)
+        rs = np.zeros((total, T, cfg.max_arms), np.float32)
+        cs = np.full((total, T, cfg.max_arms), 1e9, np.float32)
+        row = 0
+        for i in range(N):
+            S = len(seed_groups[i])
+            if not S:
+                continue
+            idx = np.stack([idx_full[int(s)] for s in seed_groups[i]])
+            h = int(heff[i])
+            # one gather per block; steps >= h stay at the padding
+            # values (zero contexts/rewards, 1e9 costs)
+            xs[row:row + S, :h] = ctx[idx[:, :h]]
+            v = vt[i, None, :h]
+            rs[row:row + S, :h] = REW[v, idx[:, :h]]
+            cs[row:row + S, :h] = COST[v, idx[:, :h]]
+            row += S
+        return (jnp.asarray(xs), jnp.asarray(rs, jnp.float32),
+                jnp.asarray(cs, jnp.float32))
+
+    return lru_get(_STREAM_CACHE, cache_key, make, _STREAM_CACHE_MAX)
+
+
+# ---------------------------------------------------------------------------
 # State-edit compilation (pure jnp, vmap-safe over seeds)
 # ---------------------------------------------------------------------------
 

@@ -623,18 +623,18 @@ def _timeline_grid_operands(cfg, spec, env, tls, per_cond, seeds, flat_s,
     rspecs = [scenario_lib.retime(spec, tl) for tl in tls]
     for r_ in rspecs:
         scenario_lib.validate_timeline_alignment(r_, batch_size, t_max)
+    # Batched cross-timeline rebuild (one rng draw per seed + one gather
+    # per block; falls back internally to the per-timeline loop for
+    # replay/permutation/mix/per-segment-seed specs). Bit-identical to
+    # concatenating per-timeline build_streams calls.
     if per_cond:
-        parts = [scenario_lib.build_streams(cfg, r_, env, seeds,
-                                            params=params, pad_to=t_max)
-                 for r_ in rspecs]
+        seed_groups = [tuple(int(s) for s in seeds)] * len(rspecs)
         rep = len(seeds)
     else:
-        parts = [scenario_lib.build_streams(cfg, r_, env, (flat_s[i],),
-                                            params=params, pad_to=t_max)
-                 for i, r_ in enumerate(rspecs)]
+        seed_groups = [(int(flat_s[i]),) for i in range(len(rspecs))]
         rep = 1
-    streams = tuple(
-        np.concatenate([np.asarray(p[j]) for p in parts]) for j in range(3))
+    streams = scenario_lib.build_timeline_streams(
+        cfg, spec, env, rspecs, seed_groups, params=params, pad_to=t_max)
     ev = np.repeat(
         np.asarray([[e.t for e in r_.events] for r_ in rspecs],
                    np.int32).reshape(len(rspecs), E), rep, axis=0)

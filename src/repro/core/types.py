@@ -276,6 +276,30 @@ class RouterState:
     hyper: HyperParams  # live (α, γ, λ_c, ...) — f32 leaves, retunable
 
 
+# Plane ownership of RouterState leaves (gateway double-buffering,
+# DESIGN.md §13). ``select_batch`` writes only SELECT_LEAVES (dispatch
+# bookkeeping); ``update_batch`` writes only LEARN_LEAVES (sufficient
+# statistics + pacer). The partitions are disjoint, so a learner can
+# compute on a grabbed state while the select plane advances, and the
+# publish step merges LEARN_LEAVES back without clobbering either side.
+# Control-plane ops (registry add/delete, set_budget, set_hyperparams)
+# write CONTROL_LEAVES (and sometimes force_left) and must serialize
+# against both planes — the gateway takes its state lock for those.
+LEARN_LEAVES = ("A", "A_inv", "b", "theta", "last_upd", "pacer")
+SELECT_LEAVES = ("t", "last_play", "key", "force_left")
+CONTROL_LEAVES = ("active", "price", "c_tilde", "force_arm", "hyper")
+
+
+def merge_learn_leaves(select_side: "RouterState",
+                       learn_side: "RouterState") -> "RouterState":
+    """The gateway publish merge: LEARN_LEAVES from the learner's output,
+    everything else (select bookkeeping + control plane) from the live
+    select-side state. Pure; safe under jit."""
+    return dataclasses.replace(
+        select_side,
+        **{n: getattr(learn_side, n) for n in LEARN_LEAVES})
+
+
 def with_hyperparams(
     state: RouterState,
     hyper: Optional[HyperParams] = None,

@@ -2,8 +2,13 @@
 
 Stands up a ParetoBandit-routed portfolio of (reduced) assigned
 architectures — one budget arm, one SSM arm, one frontier arm — and
-streams synthetic requests through the closed loop. ``--dry-run`` lowers
-the FULL decode configs on the production mesh instead.
+streams synthetic requests through the closed loop via the serving
+gateway (DESIGN.md §13): requests enter through the micro-batch
+admission window (``--window``), feedback is applied by learner ticks
+every ``--publish-every`` windows, and the run ends with the gateway's
+telemetry (Prometheus text with ``--prom``) plus an optional state
+snapshot (``--snapshot PATH``). ``--dry-run`` lowers the FULL decode
+configs on the production mesh instead.
 """
 from __future__ import annotations
 
@@ -17,6 +22,14 @@ def main(argv=None):
     ap.add_argument("--budget", type=float, default=6.6e-4)
     ap.add_argument("--arch", action="append", default=None,
                     help="portfolio member (repeatable); default trio")
+    ap.add_argument("--window", type=int, default=8,
+                    help="micro-batch admission window size")
+    ap.add_argument("--publish-every", type=int, default=1,
+                    help="learner tick cadence, in routed windows")
+    ap.add_argument("--snapshot", default=None,
+                    help="save the final router snapshot here (.npz)")
+    ap.add_argument("--prom", action="store_true",
+                    help="print the Prometheus telemetry scrape")
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     args = ap.parse_args(argv)
@@ -57,8 +70,30 @@ def main(argv=None):
     server = PortfolioServer(models, whitener, budget=args.budget,
                              router_cfg=RouterConfig(max_arms=8),
                              max_new_tokens=4)
-    results = [server.serve(r)
-               for r in make_request_stream(args.requests, seed=11)]
+    # Gateway loop: admission windows of --window requests; feedback is
+    # deferred to the learner plane and applied by a learn_tick every
+    # --publish-every windows (cadence 1 == the synchronous fold).
+    stream = list(make_request_stream(args.requests, seed=11))
+    results, backlog, windows = [], [], 0
+    for i in range(0, len(stream), args.window):
+        window = stream[i:i + args.window]
+        served = server.serve_batch(window, defer_feedback=True)
+        results.extend(served)
+        backlog.extend(served)
+        windows += 1
+        if windows % args.publish_every == 0:
+            server.feedback_batch(
+                [r.request_id for r in backlog],
+                np.asarray([r.arm for r in backlog]),
+                np.asarray([r.reward for r in backlog]),
+                np.asarray([r.cost for r in backlog]))
+            backlog = []
+    if backlog:
+        server.feedback_batch(
+            [r.request_id for r in backlog],
+            np.asarray([r.arm for r in backlog]),
+            np.asarray([r.reward for r in backlog]),
+            np.asarray([r.cost for r in backlog]))
     reward = np.mean([r.reward for r in results])
     cost = np.mean([r.cost for r in results])
     traffic = {m.name: 0 for m in models}
@@ -67,7 +102,16 @@ def main(argv=None):
     print(f"\nserved {len(results)} requests: reward {reward:.3f}, "
           f"cost ${cost:.2e}/req ({cost / args.budget:.2f}x ceiling)")
     print("traffic:", traffic)
-    print(f"lambda_t = {float(server.state.pacer.lam):.3f}")
+    m = server.metrics()
+    print(f"lambda_t = {m['lam']:.3f}  snapshot v{m['snapshot_version']:.0f}"
+          f"  route p50/p95 = {m['route_p50_us']:.1f}/"
+          f"{m['route_p95_us']:.1f} µs/dec"
+          f"  pulls = {[round(m[f'pull_rate_{k}'], 3) for k in range(3)]}")
+    if args.snapshot:
+        snap = server.gateway.save(args.snapshot)
+        print(f"snapshot v{snap.version} (t={snap.step}) -> {args.snapshot}")
+    if args.prom:
+        print(server.prometheus_text())
 
 
 if __name__ == "__main__":

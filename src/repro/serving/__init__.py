@@ -1,1 +1,3 @@
 from repro.serving.engine import PortfolioServer, ServedModel, SimulatedJudge  # noqa: F401
+from repro.serving.gateway import MicroBatcher, RouterGateway  # noqa: F401
+from repro.serving.telemetry import Telemetry  # noqa: F401

@@ -11,11 +11,15 @@ Rewards come from a pluggable judge. Offline we ship ``SimulatedJudge``
 in production the same interface is an async LLM-judge callback, which is
 why the router caches context vectors at route time (§3.1/§3.6).
 
-``serve_batch`` is the gateway-QPS data plane (DESIGN.md §2): one
-``select_batch`` call routes the whole request block through the
-configured scoring backend (jnp oracle or the Pallas kernel), generation
-is grouped by chosen arm, and the block's feedback is one fused
-``update_batch``. ``serve`` is its B = 1 case.
+``serve_batch`` is the gateway-QPS data plane (DESIGN.md §2/§13): the
+block is routed through ``RouterGateway.route_block`` — one
+``select_batch`` call against the live double-buffered state, with the
+snapshot version recorded per request — generation is grouped by chosen
+arm, and the block's feedback is enqueued to the learner plane and
+applied by an immediate ``learn_tick`` (publish cadence 1, which makes
+the wrapper bit-identical to the old synchronous fold). ``serve`` is
+its B = 1 case. Deployments that want the decoupled cadence drive
+``self.gateway`` (submit/poll/learn_tick) directly.
 """
 from __future__ import annotations
 
@@ -28,7 +32,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import registry as registry_lib
-from repro.core import router as router_lib
 from repro.core.costs import ArmPricing
 from repro.core.features import PCAWhitener, hash_encode, hash_encode_batch
 from repro.core.types import (
@@ -37,7 +40,7 @@ from repro.core.types import (
 )
 from repro.models import decode_step, init_model, prefill_forward
 from repro.models.config import ModelConfig
-from repro.serving.feedback_store import InMemoryFeedbackStore
+from repro.serving.gateway import RouterGateway
 from repro.serving.sampler import sample_token
 from repro.serving.tokenizer import HashTokenizer
 
@@ -168,34 +171,40 @@ class PortfolioServer:
         self.judge = judge or SimulatedJudge(seed)
         self.max_new_tokens = max_new_tokens
         self.models: List[Optional[ServedModel]] = [None] * self.cfg.max_arms
-        # Batched data plane (DESIGN.md §2): the scalar path is the B=1
-        # case of the same jitted block functions (retraced per block
-        # shape; gateway batch sizes are few and stable).
-        self._select_batch = jax.jit(
-            lambda s, X: router_lib.select_batch(self.cfg, s, X))
-        self._update_batch = jax.jit(
-            lambda s, a, X, r, c: router_lib.update_batch(
-                self.cfg, s, a, X, r, c))
         self._tokenizers: Dict[str, HashTokenizer] = {}  # per-model cache
         self._gen_key = jax.random.PRNGKey(seed ^ 0x5EED)
         prices_req = np.full(self.cfg.max_arms, 1e9, np.float32)
         prices_1k = np.full(self.cfg.max_arms, 1e9, np.float32)
         active = np.zeros(self.cfg.max_arms, bool)
-        self.state: RouterState = init_state(
+        state: RouterState = init_state(
             self.cfg, prices_req, prices_1k, budget,
             key=jax.random.PRNGKey(seed), active=jnp.asarray(active),
         )
-        # context cache for async feedback (§3.6): in-memory default,
-        # SQLiteFeedbackStore for durable multi-worker deployments.
-        # Explicit None check: a just-constructed store is empty, and
-        # ``len() == 0`` makes it falsy — ``or`` would silently discard it.
-        self._ctx_cache = (InMemoryFeedbackStore() if feedback_store is None
-                           else feedback_store)
-        # Late/duplicate/unknown rewards are skipped, not raised on — the
-        # async path faces redelivery and replay; operators watch this.
-        self.dropped_feedback = 0
+        # The gateway (DESIGN.md §13) owns the double-buffered state, the
+        # statics-keyed compiled block functions, the feedback store
+        # (context cache for async rewards, §3.6 — in-memory default,
+        # SQLiteFeedbackStore for durable multi-worker deployments) and
+        # the telemetry counters that used to be ad-hoc attributes here.
+        self.gateway = RouterGateway(self.cfg, state, store=feedback_store)
         for i, m in enumerate(models):
             self.add_model(m, slot=i, forced_exploration=False)
+
+    # The live router state and the drop counter read through to the
+    # gateway — kept as properties so every pre-gateway caller
+    # (tests, examples, benchmarks) keeps working unchanged.
+    @property
+    def state(self) -> RouterState:
+        return self.gateway.live_state
+
+    @property
+    def dropped_feedback(self) -> int:
+        # Late/duplicate/unknown rewards are skipped, not raised on — the
+        # async path faces redelivery and replay; operators watch this.
+        return self.gateway.telemetry.counter("dropped_feedback")
+
+    @property
+    def _ctx_cache(self):
+        return self.gateway.store
 
     # -- portfolio management (hot swap, §3.6) ------------------------------
     def add_model(self, model: ServedModel, slot: Optional[int] = None,
@@ -205,22 +214,29 @@ class PortfolioServer:
                 i for i, m in enumerate(self.models)
                 if m is None and not bool(self.state.active[i])
             )
+        # Model first, state second: the instant the publish lands, a
+        # concurrent selection may route to the slot, and the model must
+        # already be behind it.
         self.models[slot] = model
-        self.state = registry_lib.add_arm(
-            self.cfg, self.state, slot,
+        self.gateway.apply_control(lambda s: registry_lib.add_arm(
+            self.cfg, s, slot,
             model.pricing.price_per_req, model.pricing.price_per_1k,
             n_eff=n_eff or None, forced_exploration=forced_exploration,
-        )
+        ))
         return slot
 
     def remove_model(self, slot: int) -> None:
+        # State first, model second — mirror image of add_model: retire
+        # the arm through the publish path so no post-publish selection
+        # can route here, then drop the model object.
+        self.gateway.apply_control(
+            lambda s: registry_lib.delete_arm(self.cfg, s, slot))
         self.models[slot] = None
-        self.state = registry_lib.delete_arm(self.cfg, self.state, slot)
 
     def set_budget(self, budget: float) -> None:
         from repro.core import pacer
-        self.state = dataclasses.replace(
-            self.state, pacer=pacer.set_budget(self.state.pacer, budget))
+        self.gateway.apply_control(lambda s: dataclasses.replace(
+            s, pacer=pacer.set_budget(s.pacer, budget)))
 
     def set_hyperparams(self, hyper: Optional[HyperParams] = None,
                         **overrides) -> HyperParams:
@@ -235,7 +251,8 @@ class PortfolioServer:
         range-validated (ValueError) before they touch the state.
         Returns the now-live concrete ``HyperParams``.
         """
-        self.state = with_hyperparams(self.state, hyper=hyper, **overrides)
+        self.gateway.apply_control(
+            lambda s: with_hyperparams(s, hyper=hyper, **overrides))
         return self.hyperparams()
 
     def hyperparams(self) -> HyperParams:
@@ -246,18 +263,16 @@ class PortfolioServer:
         })
 
     def metrics(self) -> Dict[str, float]:
-        """Operator counters: feedback-store depth (contexts awaiting
-        rewards), total dropped feedback (unknown/duplicate/retired-arm),
-        and entries aged out by the store TTL (never-arriving rewards)."""
-        store = self._ctx_cache
-        if hasattr(store, "sweep_expired"):
-            store.sweep_expired()   # fold aged-out entries into the count
-        return {
-            "store_depth": int(len(store)),
-            "store_ttl_s": getattr(store, "ttl", None),
-            "dropped_feedback": int(self.dropped_feedback),
-            "expired_feedback": int(getattr(store, "expired_total", 0)),
-        }
+        """Operator metrics, all floats (the typed contract — a TTL-less
+        store reports ``store_ttl_s = -1.0``, never ``None``): the legacy
+        feedback counters (store depth, dropped/expired feedback) plus
+        the gateway telemetry — per-arm pull rates, p50/p95 route
+        latency, pacer dual, queue/window gauges, snapshot version."""
+        return self.gateway.metrics()
+
+    def prometheus_text(self) -> str:
+        """Prometheus exposition-format scrape of the same telemetry."""
+        return self.gateway.prometheus_text()
 
     # -- request path -------------------------------------------------------
     def featurize(self, prompt: str) -> jnp.ndarray:
@@ -305,18 +320,15 @@ class PortfolioServer:
         t0 = time.perf_counter()
         B = len(requests)
         X = self.featurize_batch([r["prompt"] for r in requests])
-        X_np = np.asarray(X)
 
-        r0 = time.perf_counter()
-        dec, self.state = self._select_batch(self.state, X)
-        arms = np.asarray(dec.arms)
-        route_us = (time.perf_counter() - r0) * 1e6 / B  # per decision
-        # Cache (context, routed arm) at route time: the store is the
-        # async source of truth, so late feedback can omit the arm (§3.1).
-        for r, x, a in zip(requests, X_np, arms):
-            self._ctx_cache.put(r["id"], x, int(a))
-
-        lam = float(dec.lam)
+        # One select_batch through the gateway's selection plane; the
+        # (context, routed arm, snapshot version) triple is cached in the
+        # feedback store at route time — the async source of truth, so
+        # late feedback can omit the arm (§3.1).
+        routed = self.gateway.route_block([r["id"] for r in requests], X)
+        arms = routed.arms
+        route_us = routed.route_us
+        lam = routed.lam
         rewards = np.zeros(B, np.float32)
         costs = np.zeros(B, np.float32)
         results: List[Optional[ServeResult]] = [None] * B
@@ -371,40 +383,8 @@ class PortfolioServer:
         """
         if not len(request_ids):
             return
-        if arms is None:
-            arms = np.full(len(request_ids), -1, np.int64)
-        arms = np.asarray(arms, np.int64)
-        rewards = np.asarray(rewards, np.float32)
-        costs = np.asarray(costs, np.float32)
-        # Length mismatch is a programmer error, not bad-id noise: zip
-        # would silently drop the tail without counting it. (ValueError,
-        # not assert — the gateway may run under python -O.)
-        if not (len(arms) == len(rewards) == len(costs)
-                == len(request_ids)):
-            raise ValueError(
-                "feedback_batch length mismatch: "
-                f"{len(request_ids)} ids, {len(arms)} arms, "
-                f"{len(rewards)} rewards, {len(costs)} costs")
-        active = np.asarray(self.state.active)  # one host sync, not B
-        kept_X, kept_a, kept_r, kept_c = [], [], [], []
-        for rid, a, rw, co in zip(request_ids, arms, rewards, costs):
-            hit = self._ctx_cache.pop(rid)
-            if hit is None:          # unknown, duplicate, or replayed id
-                self.dropped_feedback += 1
-                continue
-            x, cached_arm = hit
-            arm = int(a) if a >= 0 else cached_arm
-            if not (0 <= arm < self.cfg.max_arms and bool(active[arm])):
-                self.dropped_feedback += 1   # e.g. arm retired in flight
-                continue
-            kept_X.append(x), kept_a.append(arm)
-            kept_r.append(rw), kept_c.append(co)
-        if not kept_a:
-            return
-        self.state = self._update_batch(
-            self.state,
-            jnp.asarray(kept_a, jnp.int32),
-            jnp.asarray(np.stack(kept_X), jnp.float32),
-            jnp.asarray(kept_r, jnp.float32),
-            jnp.asarray(kept_c, jnp.float32),
-        )
+        # Resolution, validation and drop accounting live in the
+        # gateway's learner plane; the immediate tick (publish cadence 1)
+        # reproduces the old inline update exactly.
+        if self.gateway.enqueue_feedback(request_ids, arms, rewards, costs):
+            self.gateway.learn_tick()

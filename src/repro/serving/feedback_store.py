@@ -13,6 +13,12 @@ treated as absent — ``pop`` deletes it and counts it in
 ``expired_total`` — and ``sweep_expired()`` bulk-evicts for periodic
 housekeeping. ``PortfolioServer.metrics()`` exports depth / drop /
 expiry counters for operators.
+
+Each entry also carries the router-state snapshot ``version`` the
+request was routed under (gateway double-buffering, DESIGN.md §13), so
+feedback arriving after later publishes can be attributed: ``pop``
+keeps its original ``(ctx, arm)`` signature for existing callers, and
+``pop_record`` returns ``(ctx, arm, version)`` for the gateway.
 """
 from __future__ import annotations
 
@@ -36,31 +42,72 @@ class InMemoryFeedbackStore:
                  clock: Callable[[], float] = time.monotonic):
         # insertion-ordered: puts are timestamped monotonically, so the
         # expired prefix is always at the front and sweeps are O(expired)
-        self._d: "collections.OrderedDict[int, Tuple[np.ndarray, int, float]]" = (
+        self._d: "collections.OrderedDict[int, Tuple[np.ndarray, int, float, int]]" = (
             collections.OrderedDict())
         self._lock = threading.Lock()
         self.ttl = ttl
         self._clock = clock
         self.expired_total = 0
 
-    def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
+    def put(self, request_id: int, context: np.ndarray, arm: int,
+            version: int = 0) -> None:
         now = self._clock()
         with self._lock:
             self._d[request_id] = (
-                np.asarray(context, np.float32), int(arm), now)
+                np.asarray(context, np.float32), int(arm), now, int(version))
             self._d.move_to_end(request_id)  # re-put keeps time order
             self._sweep_locked(now)
 
+    def put_block(self, request_ids, contexts: np.ndarray, arms,
+                  version: int = 0) -> None:
+        """Batched ``put``: one lock round-trip for a whole routed block
+        (the gateway's select-plane hot path)."""
+        now = self._clock()
+        ctxs = np.asarray(contexts, np.float32)
+        v = int(version)
+        with self._lock:
+            for rid, x, a in zip(request_ids, ctxs, arms):
+                self._d[rid] = (x, int(a), now, v)
+                self._d.move_to_end(rid)
+            self._sweep_locked(now)
+
     def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
+        rec = self.pop_record(request_id)
+        return None if rec is None else rec[:2]
+
+    def pop_record(
+        self, request_id: int
+    ) -> Optional[Tuple[np.ndarray, int, int]]:
+        """Like ``pop`` but also returns the snapshot version the request
+        was routed under (0 for pre-gateway writers)."""
         with self._lock:
             hit = self._d.pop(request_id, None)
             if hit is None:
                 return None
-            ctx, arm, ts = hit
+            ctx, arm, ts, version = hit
             if self.ttl is not None and self._clock() - ts > self.ttl:
                 self.expired_total += 1   # reward arrived after the TTL
                 return None
-            return ctx, arm
+            return ctx, arm, version
+
+    def pop_block(self, request_ids):
+        """Batched ``pop_record``: one lock round-trip, one record (or
+        None for unknown/expired ids) per requested id, in order."""
+        out = []
+        with self._lock:
+            now = self._clock()
+            for rid in request_ids:
+                hit = self._d.pop(rid, None)
+                if hit is None:
+                    out.append(None)
+                    continue
+                ctx, arm, ts, version = hit
+                if self.ttl is not None and now - ts > self.ttl:
+                    self.expired_total += 1
+                    out.append(None)
+                else:
+                    out.append((ctx, arm, version))
+        return out
 
     def sweep_expired(self) -> int:
         """Evict every aged-out entry; returns how many were dropped."""
@@ -73,7 +120,7 @@ class InMemoryFeedbackStore:
         if self.ttl is None:
             return
         while self._d:
-            rid, (_, _, ts) = next(iter(self._d.items()))
+            rid, (_, _, ts, _) = next(iter(self._d.items()))
             if now - ts <= self.ttl:
                 break
             del self._d[rid]
@@ -104,7 +151,8 @@ class SQLiteFeedbackStore:
             " context BLOB NOT NULL,"
             " dim INTEGER NOT NULL,"
             " arm INTEGER NOT NULL,"
-            " created_at REAL NOT NULL DEFAULT 0)"
+            " created_at REAL NOT NULL DEFAULT 0,"
+            " version INTEGER NOT NULL DEFAULT 0)"
         )
         # Migrate pre-TTL databases (no created_at column) in place.
         # Legacy rows are stamped with the migration time, NOT 0: a
@@ -119,22 +167,80 @@ class SQLiteFeedbackStore:
                 "DEFAULT 0")
             self._conn.execute("UPDATE ctx SET created_at = ?",
                                (float(self._clock()),))
+        # Pre-gateway databases lack the snapshot-version column; the
+        # DEFAULT 0 ("routed before versioning") is already the right
+        # stamp for legacy rows, so no UPDATE pass is needed.
+        if "version" not in cols:
+            self._conn.execute(
+                "ALTER TABLE ctx ADD COLUMN version INTEGER NOT NULL "
+                "DEFAULT 0")
         self._conn.commit()
 
-    def put(self, request_id: int, context: np.ndarray, arm: int) -> None:
+    def put(self, request_id: int, context: np.ndarray, arm: int,
+            version: int = 0) -> None:
         c = np.asarray(context, np.float32)
         with self._lock:
             self._conn.execute(
-                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?)",
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?)",
                 (int(request_id), c.tobytes(), c.size, int(arm),
-                 float(self._clock())),
+                 float(self._clock()), int(version)),
+            )
+            self._conn.commit()
+
+    def put_block(self, request_ids, contexts: np.ndarray, arms,
+                  version: int = 0) -> None:
+        """Batched ``put``: one transaction for a whole routed block."""
+        ctxs = np.asarray(contexts, np.float32)
+        now, v = float(self._clock()), int(version)
+        with self._lock:
+            self._conn.executemany(
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?)",
+                [(int(rid), x.tobytes(), x.size, int(a), now, v)
+                 for rid, x, a in zip(request_ids, ctxs, arms)],
             )
             self._conn.commit()
 
     def pop(self, request_id: int) -> Optional[Tuple[np.ndarray, int]]:
+        rec = self.pop_record(request_id)
+        return None if rec is None else rec[:2]
+
+    def pop_block(self, request_ids):
+        """Batched ``pop_record``: one SELECT + one DELETE per block,
+        one record (or None) per requested id, in order."""
+        ids = [int(r) for r in request_ids]
+        rows = []
+        with self._lock:
+            # chunked IN lists stay under SQLITE_MAX_VARIABLE_NUMBER
+            for lo in range(0, len(ids), 500):
+                chunk = ids[lo:lo + 500]
+                marks = ",".join("?" * len(chunk))
+                rows += self._conn.execute(
+                    f"SELECT request_id, context, dim, arm, created_at,"
+                    f" version FROM ctx WHERE request_id IN ({marks})",
+                    chunk).fetchall()
+                self._conn.execute(
+                    f"DELETE FROM ctx WHERE request_id IN ({marks})", chunk)
+            self._conn.commit()
+            now = self._clock()
+            by_id = {}
+            for rid, blob, dim, arm, created, version in rows:
+                if (self.ttl is not None
+                        and now - float(created) > self.ttl):
+                    self.expired_total += 1
+                    continue
+                by_id[rid] = (
+                    np.frombuffer(blob, np.float32, count=dim).copy(),
+                    int(arm), int(version))
+        return [by_id.get(rid) for rid in ids]
+
+    def pop_record(
+        self, request_id: int
+    ) -> Optional[Tuple[np.ndarray, int, int]]:
+        """Like ``pop`` but also returns the snapshot version the request
+        was routed under (0 for pre-gateway rows)."""
         with self._lock:
             row = self._conn.execute(
-                "SELECT context, dim, arm, created_at FROM ctx "
+                "SELECT context, dim, arm, created_at, version FROM ctx "
                 "WHERE request_id = ?",
                 (int(request_id),),
             ).fetchone()
@@ -144,12 +250,13 @@ class SQLiteFeedbackStore:
                 "DELETE FROM ctx WHERE request_id = ?", (int(request_id),)
             )
             self._conn.commit()
-            blob, dim, arm, created = row
+            blob, dim, arm, created, version = row
             if (self.ttl is not None
                     and self._clock() - float(created) > self.ttl):
                 self.expired_total += 1   # reward arrived after the TTL
                 return None
-        return np.frombuffer(blob, np.float32, count=dim).copy(), int(arm)
+        return (np.frombuffer(blob, np.float32, count=dim).copy(),
+                int(arm), int(version))
 
     def sweep_expired(self) -> int:
         """Evict every aged-out row; returns how many were dropped."""

@@ -1,0 +1,374 @@
+"""Serving gateway: admission, selection plane, learner plane (§13).
+
+The synchronous ``PortfolioServer.serve_batch`` monolith becomes three
+layers with one state-publication point between them:
+
+  * ``MicroBatcher`` — admission: collects requests into a time/size
+    bounded window; a full window (or an expired deadline) flushes as
+    one block into the batched data plane.
+  * selection plane — ``route_block``: scores a block with ONE
+    ``select_batch`` call against the live state, whose sufficient
+    statistics are exactly the last *published* snapshot (the learner is
+    the only writer of ``types.LEARN_LEAVES``), caches (context, arm,
+    snapshot version) in the feedback store, and records telemetry. The
+    request path never runs an update.
+  * learner plane — ``enqueue_feedback`` + ``learn_tick``: feedback
+    blocks accumulate off the request path; a tick folds them through
+    ``update_batch`` on a grabbed state *outside* the state lock, then
+    atomically merges the learned leaves back and publishes a new
+    versioned snapshot through the ``core.statehandle.StateHandle``.
+
+Correctness under concurrency rests on the ``RouterState`` leaf
+partition (``types.LEARN_LEAVES`` vs ``SELECT_LEAVES``): selection and
+learning write disjoint leaves, so the publish merge is conflict-free
+no matter how many blocks routed while the learner computed. Control
+ops (hot-swap add/remove, budget, hyper retune) write both planes'
+leaves; they run under the state lock and bump a *control epoch* — a
+learner tick that grabbed state before a control op lands discards its
+result and retries, so a warm-started arm's statistics can never be
+clobbered by an in-flight update computed against the pre-swap state.
+
+Run the same stream through ``route_block`` + a ``learn_tick`` after
+every block (publish cadence 1) and the gateway is bit-identical to the
+old synchronous path — the pinning test of DESIGN.md §13 — because at
+that cadence grab/merge degenerates to the sequential select/update
+fold. Zero retraces across publishes come from the statics-keyed
+compiled entry points (``router.jit_select_batch``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import router as router_lib
+from repro.core import statehandle
+from repro.core.statehandle import Snapshot, StateHandle
+from repro.core.types import RouterConfig, RouterState, merge_learn_leaves
+from repro.serving.feedback_store import InMemoryFeedbackStore
+from repro.serving.telemetry import Telemetry
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteResult:
+    """One routed block: slot choices + the snapshot version they were
+    scored under (recorded in the feedback store per request)."""
+
+    request_ids: Tuple[int, ...]
+    arms: np.ndarray       # (B,) i64 chosen slots
+    lam: float             # pacer dual at decision time
+    version: int           # snapshot version the block was scored under
+    route_us: float        # per-decision route latency (µs)
+    forced: np.ndarray     # (B,) bool forced-exploration dispatches
+
+
+class MicroBatcher:
+    """Admission window: size- and time-bounded request collection.
+
+    ``submit`` returns a flushed window when it fills to ``max_batch``;
+    ``poll`` flushes a partial window whose deadline (first admission +
+    ``max_wait_s``) has expired; ``drain`` flushes unconditionally. The
+    clock is injectable for tests."""
+
+    def __init__(self, max_batch: int = 64, max_wait_s: float = 0.002,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError(f"max_batch={max_batch}: need >= 1")
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._ids: List[int] = []
+        self._rows: List[np.ndarray] = []
+        self._opened_at: Optional[float] = None
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def submit(self, request_id: int, context: np.ndarray
+               ) -> Optional[Tuple[List[int], np.ndarray]]:
+        with self._lock:
+            if self._opened_at is None:
+                self._opened_at = self._clock()
+            self._ids.append(int(request_id))
+            self._rows.append(np.asarray(context, np.float32))
+            if len(self._ids) >= self.max_batch:
+                return self._flush_locked()
+            return None
+
+    def poll(self) -> Optional[Tuple[List[int], np.ndarray]]:
+        with self._lock:
+            if (self._opened_at is not None and self._ids
+                    and self._clock() - self._opened_at >= self.max_wait_s):
+                return self._flush_locked()
+            return None
+
+    def drain(self) -> Optional[Tuple[List[int], np.ndarray]]:
+        with self._lock:
+            return self._flush_locked() if self._ids else None
+
+    def _flush_locked(self):
+        ids, rows = self._ids, self._rows
+        self._ids, self._rows = [], []
+        self._opened_at = None
+        return ids, np.stack(rows)
+
+
+class RouterGateway:
+    """Decoupled select/learn planes over one double-buffered state.
+
+    The live state is the single source of truth; ``handle`` exposes the
+    versioned published snapshots (persistence, external readers, and
+    the version stamped on every routed decision)."""
+
+    def __init__(
+        self,
+        cfg: RouterConfig,
+        state: RouterState,
+        *,
+        store=None,
+        telemetry: Optional[Telemetry] = None,
+        batcher: Optional[MicroBatcher] = None,
+    ):
+        self.cfg = cfg
+        self._lock = threading.Lock()
+        self._live = state
+        self._epoch = 0                 # bumped by every control op
+        self._t_host = int(state.t)     # host mirror of state.t (no syncs)
+        self.handle = StateHandle(state, step=self._t_host)
+        # Explicit None checks — an empty store/batcher is falsy.
+        self.store = InMemoryFeedbackStore() if store is None else store
+        self.telemetry = telemetry or Telemetry(cfg.max_arms)
+        self.batcher = MicroBatcher() if batcher is None else batcher
+        self._pending: List[Tuple[np.ndarray, np.ndarray,
+                                  np.ndarray, np.ndarray, List[int]]] = []
+        statics = cfg.statics
+        self._select = router_lib.jit_select_batch(statics)
+        self._update = router_lib.jit_update_batch(statics)
+
+    # -- selection plane ---------------------------------------------------
+    @property
+    def live_state(self) -> RouterState:
+        return self._live
+
+    @property
+    def version(self) -> int:
+        return self.handle.version
+
+    def route_block(self, request_ids: Sequence[int], X) -> RouteResult:
+        """Route one admission window with a single ``select_batch``.
+
+        The state swap under the lock is the whole critical section: the
+        jitted call dispatches asynchronously, so the select plane never
+        waits on a learner tick's device work."""
+        B = len(request_ids)
+        t0 = time.perf_counter()
+        with self._lock:
+            dec, self._live = self._select(self._live, X)
+            self._t_host += B
+            version = self.handle.version
+        arms = np.asarray(dec.arms)
+        forced = np.asarray(dec.forced)
+        lam = float(dec.lam)
+        route_us = (time.perf_counter() - t0) * 1e6 / B
+        X_np = np.asarray(X)
+        put_block = getattr(self.store, "put_block", None)
+        if put_block is not None:
+            put_block(request_ids, X_np, arms, version=version)
+        else:  # third-party stores: per-row contract
+            for rid, x, a in zip(request_ids, X_np, arms):
+                self.store.put(rid, x, int(a), version=version)
+        self.telemetry.record_route(
+            arms, route_us, lam, forced=int(forced.sum()), version=version)
+        return RouteResult(
+            request_ids=tuple(int(r) for r in request_ids), arms=arms,
+            lam=lam, version=version, route_us=route_us, forced=forced)
+
+    def submit(self, request_id: int, context) -> Optional[RouteResult]:
+        """Admission path: collect into the micro-batch window; routes
+        and returns the block when the window fills."""
+        win = self.batcher.submit(request_id, context)
+        self.telemetry.record_admission(
+            len(self.batcher), len(self.batcher), self.batcher.max_batch)
+        return self._route_window(win)
+
+    def poll(self) -> Optional[RouteResult]:
+        """Flush a partial window whose time bound expired."""
+        return self._route_window(self.batcher.poll())
+
+    def drain(self) -> Optional[RouteResult]:
+        """Flush whatever is pending (shutdown / test determinism)."""
+        return self._route_window(self.batcher.drain())
+
+    def _route_window(self, win) -> Optional[RouteResult]:
+        if win is None:
+            return None
+        ids, rows = win
+        self.telemetry.record_admission(
+            len(self.batcher), len(ids), self.batcher.max_batch)
+        return self.route_block(ids, rows)
+
+    # -- learner plane -----------------------------------------------------
+    def enqueue_feedback(self, request_ids: Sequence[int], arms, rewards,
+                         costs) -> int:
+        """Resolve a feedback block against the store and queue it for
+        the next learner tick. Returns the number of rows kept.
+
+        Same drop semantics as the old synchronous path: unknown,
+        duplicate/replayed, and retired-arm rows are skipped and counted
+        (``dropped_feedback``), never raised on. Rows routed under an
+        older snapshot version are kept — they decay against current
+        stats at application time (gamma^dt with dt taken from the live
+        clock), which is the deterministic late-feedback semantics the
+        ordering tests pin down — and counted in ``feedback_late_total``.
+        """
+        n = len(request_ids)
+        if not n:
+            return 0
+        if arms is None:
+            arms = np.full(n, -1, np.int64)
+        arms = np.asarray(arms, np.int64)
+        rewards = np.asarray(rewards, np.float32)
+        costs = np.asarray(costs, np.float32)
+        if not (len(arms) == len(rewards) == len(costs) == n):
+            raise ValueError(
+                "feedback length mismatch: "
+                f"{n} ids, {len(arms)} arms, "
+                f"{len(rewards)} rewards, {len(costs)} costs")
+        active = np.asarray(self._live.active)  # one host sync, not B
+        version = self.handle.version
+        pop_block = getattr(self.store, "pop_block", None)
+        if pop_block is not None:
+            recs = pop_block(request_ids)
+        else:  # third-party stores: per-row contract
+            recs = [self.store.pop_record(rid) for rid in request_ids]
+        kept_X, kept_a, kept_r, kept_c, kept_ids = [], [], [], [], []
+        for rid, a, rw, co, rec in zip(
+                request_ids, arms, rewards, costs, recs):
+            if rec is None:          # unknown, duplicate, or replayed id
+                self.telemetry.inc("dropped_feedback")
+                continue
+            x, cached_arm, routed_version = rec
+            arm = int(a) if a >= 0 else cached_arm
+            if not (0 <= arm < self.cfg.max_arms and bool(active[arm])):
+                self.telemetry.inc("dropped_feedback")  # retired in flight
+                continue
+            self.telemetry.record_feedback_version(routed_version, version)
+            kept_X.append(x), kept_a.append(arm)
+            kept_r.append(rw), kept_c.append(co), kept_ids.append(int(rid))
+        if not kept_a:
+            return 0
+        block = (np.stack(kept_X).astype(np.float32),
+                 np.asarray(kept_a, np.int32),
+                 np.asarray(kept_r, np.float32),
+                 np.asarray(kept_c, np.float32),
+                 kept_ids)
+        with self._lock:
+            self._pending.append(block)
+        return len(kept_a)
+
+    def learn_tick(self) -> Optional[Snapshot]:
+        """Fold every pending feedback block through ``update_batch`` and
+        publish a new snapshot. Returns it, or None when there was
+        nothing to apply.
+
+        The update runs on a state grabbed *outside* the lock; the merge
+        copies only ``types.LEARN_LEAVES`` back, so selection that
+        advanced meanwhile keeps its bookkeeping. If a control op bumped
+        the epoch mid-compute, the result is discarded and the tick
+        retries against the post-op state."""
+        with self._lock:
+            blocks, self._pending = self._pending, []
+        if not blocks:
+            return None
+        n_rows = sum(len(b[1]) for b in blocks)
+        while True:
+            with self._lock:
+                base = self._live
+                epoch = self._epoch
+            learned = base
+            for X, a, r, c, _ids in blocks:
+                learned = self._update(learned, a, X, r, c)
+            with self._lock:
+                if self._epoch != epoch:
+                    self.telemetry.inc("learn_retries_total")
+                    continue
+                self._live = merge_learn_leaves(self._live, learned)
+                snap = self.handle.publish(self._live, step=self._t_host)
+            break
+        self.telemetry.record_publish(
+            snap.version, n_feedback=n_rows, n_blocks=len(blocks))
+        return snap
+
+    # -- control plane (hot swap goes through the publish path) ------------
+    def apply_control(
+        self, fn: Callable[[RouterState], RouterState]
+    ) -> Snapshot:
+        """Apply a whole-state control op (registry add/delete, budget,
+        hyper retune) atomically w.r.t. both planes, bump the control
+        epoch, and publish the result as a new snapshot — in-flight
+        selection sees either the pre- or post-op state, never a mix,
+        and an in-flight learner tick retries instead of clobbering."""
+        with self._lock:
+            self._live = fn(self._live)
+            self._epoch += 1
+            snap = self.handle.publish(self._live, step=self._t_host)
+        return snap
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path: str) -> Snapshot:
+        """Persist the latest published snapshot (.npz + manifest)."""
+        snap = self.handle.read()
+        statehandle.save_snapshot(path, snap)
+        return snap
+
+    def restore(self, path: str, *, elapsed: int = 0,
+                template: Optional[RouterState] = None) -> Snapshot:
+        """Load a snapshot, age it by ``elapsed`` offline steps
+        (``statehandle.decay_on_restore``) and adopt it as the live
+        state; versioning continues from the stored version."""
+        snap = statehandle.load_snapshot(path, template
+                                         if template is not None
+                                         else self._live)
+        state = statehandle.decay_on_restore(self.cfg, snap.state, elapsed)
+        step = snap.step + int(elapsed)
+        with self._lock:
+            self._live = state
+            self._epoch += 1
+            self._t_host = step
+            self._pending.clear()
+            self.handle = StateHandle(state, version=snap.version, step=step)
+        return self.handle.read()
+
+    # -- export ------------------------------------------------------------
+    def metrics(self) -> Dict[str, float]:
+        """Telemetry + feedback-store gauges, all floats (never None)."""
+        store = self.store
+        if hasattr(store, "sweep_expired"):
+            store.sweep_expired()   # fold aged-out entries into the count
+        out = self.telemetry.metrics()
+        ttl = getattr(store, "ttl", None)
+        out.update(
+            store_depth=float(len(store)),
+            store_ttl_s=float(ttl) if ttl is not None else -1.0,
+        )
+        # Store-side TTL expiries add to the telemetry-side counter
+        # (rows the learner saw expire are already folded in there).
+        out["expired_feedback"] = float(
+            self.telemetry.counter("expired_feedback")
+            + int(getattr(store, "expired_total", 0)))
+        return out
+
+    def prometheus_text(self) -> str:
+        store = self.store
+        ttl = getattr(store, "ttl", None)
+        return self.telemetry.prometheus_text(extra={
+            "store_depth": float(len(store)),
+            "store_ttl_s": float(ttl) if ttl is not None else -1.0,
+        })

@@ -1,0 +1,459 @@
+"""Serving gateway (DESIGN.md §13): bit-identity with the synchronous
+fold at publish cadence 1, deterministic late/out-of-order/duplicate
+feedback across publish ticks (both stores), hot-swap atomicity against
+a racing selection plane, forced-exploration counters across publishes,
+snapshot/restore with gamma^Δt decay-on-restore, the double-buffered
+StateHandle, the micro-batcher admission window, and the all-float
+metrics / Prometheus telemetry contract."""
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry, router, statehandle
+from repro.core.statehandle import StateHandle
+from repro.core.types import (
+    LEARN_LEAVES, RouterConfig, SELECT_LEAVES, init_state,
+    merge_learn_leaves,
+)
+from repro.serving.feedback_store import (
+    InMemoryFeedbackStore, SQLiteFeedbackStore,
+)
+from repro.serving.gateway import MicroBatcher, RouterGateway
+from repro.serving.telemetry import Telemetry
+
+CFG = RouterConfig(d=8, max_arms=4, forced_pulls=6)
+STORES = [InMemoryFeedbackStore,
+          lambda: SQLiteFeedbackStore(":memory:")]
+STORE_IDS = ["inmemory", "sqlite"]
+
+
+def mk_state(cfg=CFG, prices=(0.1, 1.0, 10.0, 1e9), active=(1, 1, 1, 0),
+             budget=1.0, seed=0):
+    prices = jnp.asarray(prices[: cfg.max_arms], jnp.float32)
+    return init_state(
+        cfg, prices, prices, budget,
+        active=jnp.asarray(active[: cfg.max_arms], bool),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
+def blocks_of(n_blocks, B, d=CFG.d, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    rid = 0
+    for _ in range(n_blocks):
+        ids = list(range(rid, rid + B))
+        rid += B
+        X = rng.standard_normal((B, d)).astype(np.float32)
+        r = rng.uniform(0.2, 0.9, B).astype(np.float32)
+        c = rng.uniform(1e-5, 1e-3, B).astype(np.float32)
+        out.append((ids, X, r, c))
+    return out
+
+
+def sync_fold(state, stream, feedback_order=None):
+    """The old synchronous path: alternate select/update per block,
+    through the SAME compiled entry points the gateway uses.
+    ``feedback_order`` reorders when each block's update lands relative
+    to the selects (None = strictly alternating, cadence 1)."""
+    sel = router.jit_select_batch(CFG.statics)
+    upd = router.jit_update_batch(CFG.statics)
+    arms_out = []
+    if feedback_order is None:
+        for _ids, X, r, c in stream:
+            dec, state = sel(state, X)
+            arms = np.asarray(dec.arms)
+            arms_out.append(arms)
+            state = upd(state, jnp.asarray(arms, jnp.int32), X, r, c)
+        return state, arms_out
+    decs = []
+    for _ids, X, r, c in stream:
+        dec, state = sel(state, X)
+        decs.append((np.asarray(dec.arms), X, r, c))
+        arms_out.append(decs[-1][0])
+    for i in feedback_order:
+        arms, X, r, c = decs[i]
+        state = upd(state, jnp.asarray(arms, jnp.int32), X, r, c)
+    return state, arms_out
+
+
+def assert_states_equal(a, b, leaves=LEARN_LEAVES + SELECT_LEAVES):
+    for name in leaves:
+        la, lb = getattr(a, name), getattr(b, name)
+        ja, jb = jax.tree.leaves(la), jax.tree.leaves(lb)
+        for x, y in zip(ja, jb):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y), err_msg=name)
+
+
+class TestBitIdentity:
+    def test_gateway_matches_sync_path_at_cadence_1(self):
+        """Same stream through the gateway (route -> enqueue -> tick per
+        block) and the synchronous fold: identical arms, identical final
+        state, bit for bit."""
+        stream = blocks_of(6, B=8)
+        ref_state, ref_arms = sync_fold(mk_state(), stream)
+
+        gw = RouterGateway(CFG, mk_state())
+        got_arms = []
+        for ids, X, r, c in stream:
+            res = gw.route_block(ids, X)
+            got_arms.append(res.arms)
+            assert gw.enqueue_feedback(ids, res.arms, r, c) == len(ids)
+            snap = gw.learn_tick()
+            assert snap is not None
+        for a, b in zip(ref_arms, got_arms):
+            np.testing.assert_array_equal(a, b)
+        assert_states_equal(gw.live_state, ref_state)
+        # published snapshot == live state at cadence 1
+        assert_states_equal(gw.handle.read().state, gw.live_state)
+        assert gw.version == len(stream)
+
+    def test_decoupled_cadence_is_deterministic(self):
+        """Feedback for k blocks applied by ONE tick equals the fold
+        where all selects precede all updates (late-feedback semantics:
+        decay against current stats)."""
+        stream = blocks_of(4, B=4, seed=3)
+        ref_state, _ = sync_fold(mk_state(), stream,
+                                 feedback_order=[0, 1, 2, 3])
+        gw = RouterGateway(CFG, mk_state())
+        for ids, X, r, c in stream:
+            res = gw.route_block(ids, X)
+            gw.enqueue_feedback(ids, res.arms, r, c)
+        gw.learn_tick()
+        assert_states_equal(gw.live_state, ref_state)
+        assert gw.version == 1  # one publish for four blocks
+
+
+class TestFeedbackOrderingAcrossTicks:
+    @pytest.mark.parametrize("mk_store", STORES, ids=STORE_IDS)
+    def test_late_and_out_of_order_feedback(self, mk_store):
+        """Block A routed under v0, its feedback arriving after block
+        B's publish, must apply deterministically against current stats
+        — equal to the fold select(A), select(B), update(B), update(A)."""
+        stream = blocks_of(2, B=4, seed=5)
+        ref_state, _ = sync_fold(mk_state(), stream,
+                                 feedback_order=[1, 0])
+        gw = RouterGateway(CFG, mk_state(), store=mk_store())
+        (ids_a, X_a, r_a, c_a), (ids_b, X_b, r_b, c_b) = stream
+        res_a = gw.route_block(ids_a, X_a)
+        assert res_a.version == 0
+        res_b = gw.route_block(ids_b, X_b)
+        gw.enqueue_feedback(ids_b, res_b.arms, r_b, c_b)
+        gw.learn_tick()                       # publish v1 before A's rows
+        assert gw.version == 1
+        gw.enqueue_feedback(ids_a, res_a.arms, r_a, c_a)   # late: v0 -> v1
+        gw.learn_tick()
+        assert_states_equal(gw.live_state, ref_state)
+        assert gw.telemetry.counter("feedback_late_total") == len(ids_a)
+        assert gw.metrics()["feedback_version_lag_max"] >= 1.0
+
+    @pytest.mark.parametrize("mk_store", STORES, ids=STORE_IDS)
+    def test_duplicate_feedback_across_ticks_drops(self, mk_store):
+        (ids, X, r, c), = blocks_of(1, B=4, seed=9)
+        gw = RouterGateway(CFG, mk_state(), store=mk_store())
+        res = gw.route_block(ids, X)
+        assert gw.enqueue_feedback(ids, res.arms, r, c) == 4
+        gw.learn_tick()
+        before = gw.live_state
+        # redelivery after the publish: store entries are consumed
+        assert gw.enqueue_feedback(ids, res.arms, r, c) == 0
+        assert gw.learn_tick() is None        # nothing pending, no publish
+        assert gw.telemetry.counter("dropped_feedback") == 4
+        assert_states_equal(gw.live_state, before)
+        assert gw.version == 1
+
+    @pytest.mark.parametrize("mk_store", STORES, ids=STORE_IDS)
+    def test_unknown_and_retired_arm_rows_drop(self, mk_store):
+        (ids, X, r, c), = blocks_of(1, B=4, seed=11)
+        gw = RouterGateway(CFG, mk_state(), store=mk_store())
+        res = gw.route_block(ids, X)
+        # retire every routed arm before the feedback lands
+        for slot in sorted(set(int(a) for a in res.arms)):
+            gw.apply_control(
+                lambda s, _slot=slot: registry.delete_arm(CFG, s, _slot))
+        assert gw.enqueue_feedback(ids, res.arms, r, c) == 0
+        assert gw.enqueue_feedback([999], None, [0.5], [1e-4]) == 0
+        assert gw.telemetry.counter("dropped_feedback") == 5
+
+
+class TestHotSwapAtomicity:
+    def test_swap_racing_selection_never_routes_retired(self):
+        """add/remove hammering slot 2 while another thread routes:
+        every decision lands on a slot that was active in SOME published
+        state (slot 3 is never active -> must never be routed), and no
+        block ever sees an all-False candidate mask (routing would land
+        on slot 0 with active[0]=False... which stays active here, so
+        any crash/invalid arm would surface as arm==3 or an exception)."""
+        gw = RouterGateway(CFG, mk_state())   # slots 0..2 active, 3 never
+        stop = threading.Event()
+        routed, errors = [], []
+
+        def pound():
+            rng = np.random.default_rng(0)
+            rid = 0
+            try:
+                while not stop.is_set():
+                    ids = list(range(rid, rid + 8))
+                    rid += 8
+                    X = rng.standard_normal((8, CFG.d)).astype(np.float32)
+                    routed.append(gw.route_block(ids, X).arms)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        th = threading.Thread(target=pound)
+        th.start()
+        for _ in range(60):
+            gw.apply_control(
+                lambda s: registry.delete_arm(CFG, s, 2))
+            gw.apply_control(
+                lambda s: registry.add_arm(
+                    CFG, s, 2, 10.0, 10.0, forced_exploration=False))
+        stop.set()
+        th.join(timeout=30)
+        assert not th.is_alive()
+        assert not errors, errors
+        assert len(routed) > 0
+        all_arms = np.concatenate(routed)
+        assert all_arms.min() >= 0 and all_arms.max() <= 2  # never slot 3
+
+    def test_learner_retries_after_control_op(self):
+        """A control op landing between the learner's state grab and its
+        merge must not be clobbered: the tick discards and retries."""
+        (ids, X, r, c), = blocks_of(1, B=4, seed=21)
+        gw = RouterGateway(CFG, mk_state())
+        res = gw.route_block(ids, X)
+        gw.enqueue_feedback(ids, res.arms, r, c)
+
+        real_update = gw._update
+        fired = []
+
+        def update_with_race(*args):
+            if not fired:
+                fired.append(True)
+                gw.apply_control(
+                    lambda s: registry.set_price(CFG, s, 0, 0.2, 0.2))
+            return real_update(*args)
+
+        gw._update = update_with_race
+        snap = gw.learn_tick()
+        gw._update = real_update
+        assert snap is not None
+        assert gw.telemetry.counter("learn_retries_total") == 1
+        # the control write survived the publish...
+        assert float(gw.live_state.price[0]) == np.float32(0.2)
+        # ...and the feedback was applied (stats moved off the prior)
+        assert not np.allclose(np.asarray(gw.live_state.b), 0.0)
+
+    def test_forced_exploration_counters_survive_publish(self):
+        gw = RouterGateway(CFG, mk_state())
+        gw.apply_control(lambda s: registry.add_arm(
+            CFG, s, 3, 0.5, 0.5, forced_exploration=True))
+        assert int(gw.live_state.force_left) == CFG.forced_pulls  # 6
+        (ids, X, r, c), = blocks_of(1, B=4, seed=2)
+        res = gw.route_block(ids, X)
+        np.testing.assert_array_equal(res.arms, [3, 3, 3, 3])
+        gw.enqueue_feedback(ids, res.arms, r, c)
+        gw.learn_tick()                        # publish must not clobber
+        assert int(gw.live_state.force_left) == CFG.forced_pulls - 4
+        ids2 = [100, 101]
+        res2 = gw.route_block(ids2, np.asarray(X[:2]))
+        np.testing.assert_array_equal(res2.arms, [3, 3])  # still forced
+        assert int(gw.live_state.force_left) == 0
+
+
+class TestSnapshotRestore:
+    def _warm_gateway(self):
+        gw = RouterGateway(CFG, mk_state())
+        for ids, X, r, c in blocks_of(3, B=8, seed=31):
+            res = gw.route_block(ids, X)
+            gw.enqueue_feedback(ids, res.arms, r, c)
+            gw.learn_tick()
+        return gw
+
+    def test_round_trip_exact_and_version_continuity(self, tmp_path):
+        gw = self._warm_gateway()
+        path = str(tmp_path / "snap")
+        saved = gw.save(path)
+        assert saved.version == 3
+        gw2 = RouterGateway(CFG, mk_state(seed=99))
+        restored = gw2.restore(path)
+        assert restored.version == 3
+        assert_states_equal(gw2.live_state, gw.live_state)
+        # versioning continues from the stored counter
+        (ids, X, r, c), = blocks_of(1, B=4, seed=33)
+        res = gw2.route_block(ids, X)
+        gw2.enqueue_feedback(ids, res.arms, r, c)
+        assert gw2.learn_tick().version == 4
+
+    def test_decay_on_restore_matches_lazy_path_1e6(self, tmp_path):
+        """Eager gamma^Δt aging at restore == the lazy decay a live
+        router would apply at the next update, within 1e-6 (float
+        associativity of gamma^Δt * gamma^gap vs gamma^(Δt+gap))."""
+        gw = self._warm_gateway()
+        elapsed = 50
+        path = str(tmp_path / "snap")
+        gw.save(path)
+        gw2 = RouterGateway(CFG, mk_state(seed=7))
+        gw2.restore(path, elapsed=elapsed)
+
+        # live comparator: clock advanced by `elapsed` with NO eager
+        # decay — the lazy machinery sees the whole gap at update time
+        live = dataclasses.replace(
+            gw.live_state, t=gw.live_state.t + jnp.int32(elapsed))
+
+        upd = router.jit_update_batch(CFG.statics)
+        arm = 1
+        x = np.random.default_rng(5).standard_normal(
+            (1, CFG.d)).astype(np.float32)
+        args = (jnp.asarray([arm], jnp.int32), jnp.asarray(x),
+                jnp.asarray([0.7], jnp.float32),
+                jnp.asarray([3e-4], jnp.float32))
+        after_restore = upd(gw2.live_state, *args)
+        after_live = upd(live, *args)
+        for leaf in ("A", "A_inv", "b", "theta"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(after_restore, leaf))[arm],
+                np.asarray(getattr(after_live, leaf))[arm],
+                rtol=1e-6, atol=1e-6, err_msg=leaf)
+
+    def test_decay_on_restore_validates_and_noops(self):
+        st = mk_state()
+        assert statehandle.decay_on_restore(CFG, st, 0) is st
+        with pytest.raises(ValueError):
+            statehandle.decay_on_restore(CFG, st, -1)
+
+
+class TestStateHandle:
+    def test_publish_versions_and_wait_free_read(self):
+        st = mk_state()
+        h = StateHandle(st)
+        assert h.read().version == 0
+        s1 = h.publish(st)
+        assert (s1.version, h.version) == (1, 1)
+        # a reader holding the old snapshot is unaffected by publishes
+        old = h.read()
+        h.publish(st)
+        assert old.version == 1 and h.version == 2
+
+    def test_merge_learn_leaves_partition(self):
+        a, b = mk_state(seed=0), mk_state(seed=1)
+        b = dataclasses.replace(
+            b, b=b.b + 1.0, t=b.t + 7, force_left=jnp.int32(3))
+        merged = merge_learn_leaves(a, b)
+        np.testing.assert_array_equal(            # LEARN from b
+            np.asarray(merged.b), np.asarray(b.b))
+        assert int(merged.t) == int(a.t)          # SELECT from a
+        assert int(merged.force_left) == int(a.force_left)
+        np.testing.assert_array_equal(
+            np.asarray(merged.key), np.asarray(a.key))
+        assert set(LEARN_LEAVES).isdisjoint(SELECT_LEAVES)
+
+
+class TestMicroBatcher:
+    def test_size_bound_flush(self):
+        mb = MicroBatcher(max_batch=3, max_wait_s=10.0)
+        assert mb.submit(0, np.zeros(4)) is None
+        assert mb.submit(1, np.ones(4)) is None
+        ids, rows = mb.submit(2, np.full(4, 2.0))
+        assert ids == [0, 1, 2] and rows.shape == (3, 4)
+        assert len(mb) == 0
+
+    def test_time_bound_flush_with_fake_clock(self):
+        now = [0.0]
+        mb = MicroBatcher(max_batch=100, max_wait_s=0.5,
+                          clock=lambda: now[0])
+        mb.submit(0, np.zeros(2))
+        assert mb.poll() is None          # window still open
+        now[0] = 0.6
+        ids, rows = mb.poll()
+        assert ids == [0] and rows.shape == (1, 2)
+        assert mb.poll() is None          # empty again
+
+    def test_drain_and_gateway_admission(self):
+        gw = RouterGateway(CFG, mk_state(),
+                           batcher=MicroBatcher(max_batch=2,
+                                                max_wait_s=10.0))
+        assert gw.submit(0, np.zeros(CFG.d, np.float32)) is None
+        res = gw.submit(1, np.ones(CFG.d, np.float32))
+        assert res is not None and len(res.arms) == 2   # size flush
+        assert gw.submit(2, np.ones(CFG.d, np.float32)) is None
+        res2 = gw.drain()
+        assert res2 is not None and res2.request_ids == (2,)
+        assert gw.metrics()["decisions_total"] == 3.0
+
+
+class TestTelemetryContract:
+    def test_metrics_all_float_and_ttl_normalized(self):
+        gw = RouterGateway(CFG, mk_state())
+        m = gw.metrics()
+        assert all(isinstance(v, float) for v in m.values()), {
+            k: type(v) for k, v in m.items() if not isinstance(v, float)}
+        assert m["store_ttl_s"] == -1.0      # TTL-less store: float, not None
+        assert m["route_p50_us"] == -1.0     # no traffic yet: float, not NaN
+        gw_ttl = RouterGateway(CFG, mk_state(),
+                               store=InMemoryFeedbackStore(ttl=30.0))
+        assert gw_ttl.metrics()["store_ttl_s"] == 30.0
+
+    def test_pull_rates_and_latency_after_traffic(self):
+        gw = RouterGateway(CFG, mk_state())
+        for ids, X, r, c in blocks_of(3, B=8, seed=41):
+            res = gw.route_block(ids, X)
+            gw.enqueue_feedback(ids, res.arms, r, c)
+            gw.learn_tick()
+        m = gw.metrics()
+        assert m["decisions_total"] == 24.0 and m["blocks_total"] == 3.0
+        rates = [m[f"pull_rate_{k}"] for k in range(CFG.max_arms)]
+        assert abs(sum(rates) - 1.0) < 1e-9
+        assert m["pull_rate_3"] == 0.0       # inactive slot never pulled
+        assert m["route_p95_us"] >= m["route_p50_us"] > 0.0
+        assert m["publishes_total"] == 3.0
+        assert m["feedback_applied_total"] == 24.0
+        assert m["snapshot_version"] == 3.0
+        assert np.asarray(gw.telemetry.pull_counts()).sum() == 24
+
+    def test_unknown_counter_rejected(self):
+        with pytest.raises(KeyError):
+            Telemetry(4).inc("not_a_counter")
+
+    def test_prometheus_text_format(self):
+        gw = RouterGateway(CFG, mk_state())
+        (ids, X, r, c), = blocks_of(1, B=4, seed=51)
+        gw.route_block(ids, X)
+        text = gw.prometheus_text()
+        assert "# TYPE paretobandit_decisions_total counter" in text
+        assert "paretobandit_decisions_total 4" in text
+        assert 'paretobandit_arm_pulls_total{arm="0"}' in text
+        assert 'paretobandit_route_latency_us{quantile="0.95"}' in text
+        assert "# TYPE paretobandit_pacer_lambda gauge" in text
+        assert "paretobandit_store_ttl_s -1" in text
+
+
+class TestZeroRetraces:
+    def test_publishes_and_second_gateway_do_not_retrace(self):
+        """Snapshot publishes, control retunes and a SECOND gateway on
+        the same Statics all re-enter the compiled block programs."""
+        gw = RouterGateway(CFG, mk_state())
+        stream = blocks_of(4, B=8, seed=61)
+        ids, X, r, c = stream[0]
+        res = gw.route_block(ids, X)
+        gw.enqueue_feedback(ids, res.arms, r, c)
+        gw.learn_tick()                      # both programs now traced
+        before = router.TRACE_COUNT[0]
+        for ids, X, r, c in stream[1:]:
+            res = gw.route_block(ids, X)
+            gw.enqueue_feedback(ids, res.arms, r, c)
+            gw.learn_tick()
+        gw.apply_control(
+            lambda s: dataclasses.replace(
+                s, hyper=dataclasses.replace(
+                    s.hyper, alpha=jnp.float32(0.02))))
+        gw2 = RouterGateway(CFG, mk_state(seed=5))
+        res = gw2.route_block(ids, X)
+        gw2.enqueue_feedback(ids, res.arms, r, c)
+        gw2.learn_tick()
+        assert router.TRACE_COUNT[0] == before

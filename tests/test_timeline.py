@@ -333,6 +333,82 @@ class TestGridTimelines:
             _assert_bitwise(ref, grid.condition(i))
 
 
+class TestVectorizedStreamRebuild:
+    """The cross-timeline stream stack (scenario.build_timeline_streams)
+    must equal the per-timeline build_streams loop bit for bit — fast
+    path for eligible specs, fallback for the rest."""
+
+    SPEC = ScenarioSpec(horizon=160, events=(
+        QualityShift(60, MISTRAL, 0.7),
+        PriceChange(100, GEMINI, 0.1)), stream_seed_base=940)
+    TLS = [Timeline((60, 100)),
+           Timeline((100, 20)),              # reordered events
+           Timeline((10, 30), horizon=96),   # shorter horizon -> padding
+           Timeline((40, 40), horizon=120),  # zero-length segment
+           Timeline((0, 150))]               # boundary event times
+
+    def _manual(self, spec, env_, rspecs, seed_groups, pad_to):
+        parts = [scenario.build_streams(CFG, r_, env_, tuple(g),
+                                        pad_to=pad_to)
+                 for r_, g in zip(rspecs, seed_groups)]
+        return tuple(np.concatenate([np.asarray(p[j]) for p in parts])
+                     for j in range(3))
+
+    def _check_equal(self, spec, env_, tls, seed_groups, pad_to):
+        rspecs = [retime(spec, tl) for tl in tls]
+        got = scenario.build_timeline_streams(
+            CFG, spec, env_, rspecs, seed_groups, pad_to=pad_to)
+        want = self._manual(spec, env_, rspecs, seed_groups, pad_to)
+        for name, g, w in zip(("contexts", "rewards", "costs"), got, want):
+            assert g.shape == w.shape, name
+            np.testing.assert_array_equal(np.asarray(g), w, err_msg=name)
+
+    def test_fast_path_shared_seeds(self, env):
+        assert scenario.timeline_streams_vectorizable(self.SPEC)
+        self._check_equal(self.SPEC, env, self.TLS,
+                          [SEEDS] * len(self.TLS), pad_to=160)
+
+    def test_fast_path_per_element_seeds(self, env):
+        self._check_equal(self.SPEC, env, self.TLS,
+                          [(i + 5,) for i in range(len(self.TLS))],
+                          pad_to=160)
+
+    def test_fast_path_with_arm_growth(self, env4):
+        """AddArm/DeleteArm are state events (no stream content), and a
+        4-arm env exercises the no-arm-padding branch."""
+        spec = ScenarioSpec(horizon=140, events=(
+            QualityShift(60, MISTRAL, 0.8), AddArm(90, 3)),
+            stream_seed_base=941, init_active=3)
+        assert scenario.timeline_streams_vectorizable(spec)
+        tls = [Timeline((60, 90)), Timeline((100, 120), horizon=130)]
+        self._check_equal(spec, env4, tls, [SEEDS, SEEDS], pad_to=140)
+
+    def test_ineligible_specs_detected(self):
+        qs = (QualityShift(60, MISTRAL, 0.7),)
+        for spec in (
+            ScenarioSpec(horizon=180, events=qs + (
+                QualityShift(120, MISTRAL, None),),
+                replay=((2, 0),), stream_seed_base=942),
+            ScenarioSpec(horizon=120, events=qs,
+                         segment_seeds=(300, 400), stream_seed_base=0),
+            ScenarioSpec(horizon=120, events=qs, mode="permutation",
+                         stream_seed_base=943),
+            ScenarioSpec(horizon=120, events=(
+                TrafficMixShift(60, tuple(
+                    3.0 if f == 1 else 0.25 for f in range(9))),),
+                stream_seed_base=944),
+        ):
+            assert not scenario.timeline_streams_vectorizable(spec)
+
+    def test_fallback_still_equal(self, env):
+        spec = ScenarioSpec(horizon=160, events=(
+            TrafficMixShift(80, tuple(
+                3.0 if f == 1 else 0.25 for f in range(9))),),
+            stream_seed_base=945)
+        tls = [Timeline((80,)), Timeline((30,), horizon=100)]
+        self._check_equal(spec, env, tls, [(0, 1), (0, 1)], pad_to=160)
+
+
 class TestMonteCarlo:
     SPEC = ScenarioSpec(horizon=120, events=(
         PriceChange(40, GEMINI, 1 / 56),
