@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from tests.trace_guard import assert_traces
 from repro.core import router
 from repro.core.types import RouterConfig, init_state
 from repro.serving.gateway import RouterGateway
@@ -179,33 +180,32 @@ def main(smoke: bool = False):
 
     # everything below must re-enter the two compiled block programs
     time_throughput(4, B)             # warm all paths first
-    trace0 = router.TRACE_COUNT[0]
 
-    dps = time_throughput(n_thr, B)
-    rows.append([f"gateway_decisions_per_s_B{B}", f"{dps:.0f}",
-                 f"route+enqueue+tick/4; n_blocks={n_thr}; "
-                 "acceptance >=100000"])
+    with assert_traces(router, 0, what="gateway retraced under "
+                                       "publishes/contention") as tg:
+        dps = time_throughput(n_thr, B)
+        rows.append([f"gateway_decisions_per_s_B{B}", f"{dps:.0f}",
+                     f"route+enqueue+tick/4; n_blocks={n_thr}; "
+                     "acceptance >=100000"])
 
-    p50_b, p95_b, _ = time_select_p95(n_lat, B, contended=False)
-    rows.append([f"select_p95_us_B{B}_baseline", f"{p95_b:.2f}",
-                 f"p50={p50_b:.2f};per-decision us; no learner ticks"])
-    p50_c, p95_c, n_pub = time_select_p95(n_lat, B, contended=True)
-    ratio = p95_c / p95_b if p95_b > 0 else float("inf")
-    # On a 1-core host the learner's update_batch device compute and the
-    # select share the CPU, so the ratio mostly measures core scarcity,
-    # not the gateway lock (route_block's critical section is only the
-    # async dispatch). Record the core count so readers can tell.
-    import os
-    cores = len(os.sched_getaffinity(0))
-    rows.append([f"select_p95_us_B{B}_contended", f"{p95_c:.2f}",
-                 f"p50={p50_c:.2f};publishes={n_pub};"
-                 f"p95_ratio_vs_baseline={ratio:.2f};cores={cores}"])
+        p50_b, p95_b, _ = time_select_p95(n_lat, B, contended=False)
+        rows.append([f"select_p95_us_B{B}_baseline", f"{p95_b:.2f}",
+                     f"p50={p50_b:.2f};per-decision us; no learner ticks"])
+        p50_c, p95_c, n_pub = time_select_p95(n_lat, B, contended=True)
+        ratio = p95_c / p95_b if p95_b > 0 else float("inf")
+        # On a 1-core host the learner's update_batch device compute and
+        # the select share the CPU, so the ratio mostly measures core
+        # scarcity, not the gateway lock (route_block's critical section
+        # is only the async dispatch). Record the core count so readers
+        # can tell.
+        import os
+        cores = len(os.sched_getaffinity(0))
+        rows.append([f"select_p95_us_B{B}_contended", f"{p95_c:.2f}",
+                     f"p50={p50_c:.2f};publishes={n_pub};"
+                     f"p95_ratio_vs_baseline={ratio:.2f};cores={cores}"])
 
-    assert router.TRACE_COUNT[0] == trace0, (
-        "gateway retraced under publishes/contention",
-        router.TRACE_COUNT[0], trace0)
     rows.append(["zero_retraces", "1",
-                 f"TRACE_COUNT frozen at {trace0} across "
+                 f"TRACE_COUNT frozen at {tg.before} across "
                  f"{n_thr + 2 * n_lat} blocks + publishes"])
 
     emit(rows, ["name", "value", "derived"], "gateway")

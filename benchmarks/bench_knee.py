@@ -38,6 +38,7 @@ import numpy as np
 
 from benchmarks.common import benchmark, emit, warmup_priors
 from repro.core import evaluate, knee, simulator, sweep, warmup
+from tests.trace_guard import assert_traces
 from repro.core.types import HyperParams, RouterConfig
 
 ALPHAS = (0.005, 0.01, 0.05, 0.1)
@@ -259,21 +260,19 @@ def run_baseline_gate(seeds, grid_kw, repeats=1, chunk=None):
 
     looped_res, looped_raw = score_grid_looped(
         500.0, True, seeds, return_raw=True, **grid_kw)
-    before = sweep.TRACE_COUNT[0]
-    fused_res, fused_raw = score_grid_fused(
-        500.0, True, seeds, return_raw=True, **grid_kw)
-    auc_traces = sweep.TRACE_COUNT[0] - before
-    assert auc_traces == 2, (
-        f"fused knee grid must compile as one program per stream shape "
-        f"(AUC grid + Phase-2 grid), got {auc_traces} traces")
+    with assert_traces(sweep, 2, what="fused knee grid must compile as "
+                       "one program per stream shape (AUC grid + "
+                       "Phase-2 grid)"):
+        fused_res, fused_raw = score_grid_fused(
+            500.0, True, seeds, return_raw=True, **grid_kw)
     _assert_fused_matches_looped(fused_raw, looped_raw, n_cells, nb)
     assert fused_res == looped_res
     # New hyper values and warm starts are data: a whole different grid
     # (different T_adapt => different n_eff per cell) must re-enter the
     # SAME two executables with zero new traces.
-    score_grid_fused(300.0, True, seeds, **grid_kw)
-    assert sweep.TRACE_COUNT[0] - before == 2, (
-        "re-running the fused grid with new hyper values retraced")
+    with assert_traces(sweep, 0, what="re-running the fused grid with "
+                                      "new hyper values retraced"):
+        score_grid_fused(300.0, True, seeds, **grid_kw)
     rows.append(["knee_equivalence", "bit_identical",
                  f"{n_cells}cells x {nb}budgets x {len(seeds)}seeds"])
     rows.append(["knee_fused_traces", "1+1",

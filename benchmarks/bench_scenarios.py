@@ -43,6 +43,7 @@ from benchmarks.common import (
     BUDGETS, N_EFF, PARETO_CFG, SEEDS, benchmark, emit, warmup_priors,
 )
 from repro.core import evaluate, scenario, simulator, sweep
+from tests.trace_guard import assert_traces
 from repro.core.costs import BUDGET_LOOSE, BUDGET_TIGHT
 from repro.core.scenario import (
     AddArm, BudgetChange, DeleteArm, Param, PriceChange, QualityShift,
@@ -250,10 +251,9 @@ def _one_family(name, env, spec_of, param_spec, pname, payloads, budgets,
     # equal its looped concrete-payload twin, and the whole family must
     # compile exactly once.
     base = looped()
-    before = sweep.TRACE_COUNT[0]
-    grid = fused()
-    assert sweep.TRACE_COUNT[0] == before + 1, (
-        f"{name}: payload family must compile as ONE program")
+    with assert_traces(sweep, 1, what=f"{name}: payload family must "
+                                      "compile as ONE program"):
+        grid = fused()
     for i, res in enumerate(base):
         np.testing.assert_array_equal(grid.condition(i).arms, res.arms)
         np.testing.assert_array_equal(grid.condition(i).rewards,
@@ -367,17 +367,16 @@ def mc_grid(smoke: bool = False, n_timelines: int = 1024, repeats: int = 2):
     rows = []
     # --- gates before any timing ---------------------------------------
     # (1) ONE compile for the whole Monte Carlo,
-    before = sweep.TRACE_COUNT[0]
-    grid = fused()
-    assert sweep.TRACE_COUNT[0] == before + 1, (
-        "Monte Carlo grid must compile as ONE program")
+    with assert_traces(sweep, 1, what="Monte Carlo grid must compile "
+                                      "as ONE program"):
+        grid = fused()
     # (2) resampled timelines (same grid shape) re-enter with zero
     # retraces,
     resampled = montecarlo.sample_timelines(
         spec, N, seed=MC_SEED + 1, horizons=(3 * T // 4, T))
-    fused(resampled)
-    assert sweep.TRACE_COUNT[0] == before + 1, (
-        "new event times must be data, not structure")
+    with assert_traces(sweep, 0, what="new event times must be data, "
+                                      "not structure"):
+        fused(resampled)
     rows.append(["mc_grid_compile_once", "1",
                  f"N={N};resample_retraces=0"])
     # (3) every probed timeline bit-identical to its looped baseline.

@@ -1,0 +1,42 @@
+"""`repro.analysis` — a tracing-discipline and concurrency lint suite.
+
+The stack's headline guarantees are *compiled-program invariants* the
+type system cannot see (DESIGN.md §14):
+
+  * zero retraces on new hyper / payload / timeline values (§9, §10,
+    §12) — one stray host conversion on a traced value silently turns a
+    100k decisions/s serving plane into a recompile-per-request one;
+  * one-compile grid fabrics (§7) — jit cache keys must be ``Statics``
+    projections, never arrays or unhashable values;
+  * disjoint LEARN/SELECT/CONTROL writer planes and lock-guarded
+    gateway state (§13) — an unlocked write to ``RouterGateway._live``
+    is a lost hot-swap;
+  * Pallas kernel hygiene (§11) — captured array constants are rejected
+    by ``pallas_call``, and un-padded operands break the documented
+    block-shape contracts.
+
+This package enforces them statically: ``python -m repro.analysis src
+benchmarks`` parses every module, builds an approximate call graph
+rooted at the jit/vmap/scan/pallas entry points, runs five passes over
+it, and fails on any finding not grandfathered in the committed
+baseline (``analysis_baseline.json``).
+
+Passes and rule families (one module per pass under ``passes/``):
+
+  ====  =====================================================
+  JB*   jit-boundary / host-sync discipline in traced code
+  RT*   retrace hazards at jit call sites
+  PT*   pytree registration + LEARN/SELECT/CONTROL partition
+  LK*   lock discipline on shared mutable serving state
+  PL*   pallas kernel hygiene (captures, aliases, padding)
+  ====  =====================================================
+
+The suite is importable (``run_analysis``) for tests, and the runtime
+twins live next to the invariants they mirror:
+``repro.core.types.validate_leaf_partition`` (PT rules) and the
+``tests/trace_guard.py`` helpers (JB/RT rules).
+"""
+from repro.analysis.findings import Finding, Severity, load_baseline
+from repro.analysis.runner import run_analysis
+
+__all__ = ["Finding", "Severity", "load_baseline", "run_analysis"]

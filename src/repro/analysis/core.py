@@ -1,0 +1,482 @@
+"""Shared AST core: module scanning, name resolution, call graph, and
+the traced-function closure.
+
+The passes need one question answered well: *which function bodies run
+under a JAX trace?* Entry points are found syntactically —
+
+  * functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit,..)``;
+  * callables passed to ``jax.jit`` / ``jax.vmap`` / ``jax.lax.scan`` /
+    ``cond`` / ``while_loop`` / ``fori_loop`` / ``switch`` /
+    ``pl.pallas_call`` (lambdas included);
+  * local functions *returned* by closure factories under ``core/`` and
+    ``kernels/`` (the codebase's runner/edit-closure idiom: the factory
+    runs on the host, its product runs under the trace);
+
+— and the closure is the transitive call-graph reachability from those
+entries, with calls resolved through import aliases (``router.select``
+-> ``repro.core.router.select``). Resolution is best-effort and
+conservative: an unresolvable call simply adds no edge, so passes err
+toward silence, not noise.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# jax transforms whose callable arguments run under a trace. Values are
+# the positional indices of callable args ("*" = every positional arg).
+_TRANSFORM_CALLABLE_ARGS = {
+    "jax.jit": (0,),
+    "jax.vmap": (0,),
+    "jax.pmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.switch": ("*",),
+    "jax.lax.map": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+}
+
+_CACHE_DECORATORS = (
+    "functools.lru_cache", "functools.cache", "lru_cache", "cache",
+)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain -> "a.b.c"; None for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One def/lambda: identity, AST, and its outgoing call edges."""
+
+    qualname: str                 # module-local, e.g. "Cls.meth.<locals>.f"
+    module: "ModuleInfo"
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef | Lambda
+    parent: Optional["FunctionInfo"]
+    decorators: Tuple[str, ...] = ()
+    calls: Set[str] = dataclasses.field(default_factory=set)  # resolved
+    is_returned: bool = False     # returned by its enclosing function
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+    @property
+    def line(self) -> int:
+        return self.node.lineno
+
+    @property
+    def global_qualname(self) -> str:
+        return f"{self.module.modname}.{self.qualname}"
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return names
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str                     # repo-relative posix path
+    modname: str                  # dotted, e.g. "repro.core.router"
+    tree: ast.Module
+    aliases: Dict[str, str]       # local name -> dotted origin
+    functions: Dict[str, FunctionInfo]          # qualname -> info
+    module_arrays: Set[str]       # module-level names bound to jnp arrays
+    module_assigns: Dict[str, ast.AST]          # name -> value node
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Resolve an expression to a dotted global name through the
+        import aliases; local definitions resolve to module scope."""
+        d = dotted(node)
+        if d is None:
+            return None
+        head, _, rest = d.partition(".")
+        origin = self.aliases.get(head)
+        if origin is not None:
+            return f"{origin}.{rest}" if rest else origin
+        if head in self.functions or head in self.module_assigns:
+            return f"{self.modname}.{d}"
+        return d  # builtins / globals we didn't track
+
+
+_NORMALIZE = {
+    # canonical spellings for the transform table
+    "jax.numpy": "jnp",
+    "jax.experimental.pallas": "jax.experimental.pallas",
+}
+
+
+def canonical(name: Optional[str]) -> Optional[str]:
+    """Fold common aliases: jax.numpy.* -> jnp.*, pallas -> pl target."""
+    if name is None:
+        return None
+    if name.startswith("jax.numpy."):
+        return "jnp." + name[len("jax.numpy."):]
+    if name == "jax.numpy":
+        return "jnp"
+    return name
+
+
+def _collect_aliases(tree: ast.Module) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+                if a.asname:
+                    out[a.asname] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _is_array_expr(node: ast.AST, aliases: Dict[str, str]) -> bool:
+    """Is this expression syntactically a jnp/jax array constructor?"""
+    if isinstance(node, ast.Call):
+        name = canonical(dotted(node.func))
+        if name is None:
+            return False
+        head = name.split(".")[0]
+        origin = aliases.get(head, head)
+        full = canonical(
+            (origin + name[len(head):]) if origin != head else name)
+        if full is None:
+            return False
+        return (full.startswith("jnp.")
+                or full.startswith("jax.numpy.")
+                or full in ("jax.random.PRNGKey", "jax.device_put"))
+    return False
+
+
+class _Scanner(ast.NodeVisitor):
+    """Single-module walk: builds FunctionInfos with call edges."""
+
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: List[FunctionInfo] = []
+
+    # -- scope bookkeeping -------------------------------------------------
+    def _qual(self, name: str) -> str:
+        if not self.stack:
+            return name
+        return f"{self.stack[-1].qualname}.<locals>.{name}"
+
+    def _enter(self, node, name: str, decorators=()):
+        qn = self._qual(name)
+        info = FunctionInfo(
+            qualname=qn, module=self.mod, node=node,
+            parent=self.stack[-1] if self.stack else None,
+            decorators=tuple(decorators))
+        self.mod.functions[qn] = info
+        self.stack.append(info)
+        return info
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        # methods get "Cls.meth" qualnames (no <locals> hop for classes
+        # at module scope, which is all this codebase has)
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                decs = [canonical(self.mod.resolve(_unpartial(d)))
+                        for d in child.decorator_list]
+                info = FunctionInfo(
+                    qualname=f"{node.name}.{child.name}", module=self.mod,
+                    node=child, parent=None,
+                    decorators=tuple(d for d in decs if d))
+                self.mod.functions[info.qualname] = info
+                self.stack.append(info)
+                for stmt in child.body:
+                    self.visit(stmt)
+                self.stack.pop()
+            else:
+                self.visit(child)
+
+    def _visit_function(self, node):
+        decs = [canonical(self.mod.resolve(_unpartial(d)))
+                for d in node.decorator_list]
+        self._enter(node, node.name, [d for d in decs if d])
+        for stmt in node.body:
+            self.visit(stmt)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_Lambda(self, node: ast.Lambda):
+        self._enter(node, f"<lambda:{node.lineno}>")
+        self.visit(node.body)
+        self.stack.pop()
+
+    def visit_Return(self, node: ast.Return):
+        # mark returned local functions (closure-factory products)
+        if node.value is not None and self.stack:
+            for name in _names_of(node.value):
+                qn = self._qual(name)
+                if qn in self.mod.functions:
+                    self.mod.functions[qn].is_returned = True
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if self.stack:
+            target = canonical(self.mod.resolve(node.func))
+            if target:
+                self.stack[-1].calls.add(target)
+            elif isinstance(node.func, ast.Name):
+                # call through a local name: link to a sibling local def
+                qn = self._qual(node.func.id)
+                if qn in self.mod.functions:
+                    self.stack[-1].calls.add(
+                        f"{self.mod.modname}.{qn}")
+        self.generic_visit(node)
+
+
+def _unpartial(node: ast.AST) -> ast.AST:
+    """``functools.partial(jax.jit, ...)`` decorator -> ``jax.jit``."""
+    if isinstance(node, ast.Call):
+        name = dotted(node.func)
+        if name in ("functools.partial", "partial") and node.args:
+            return node.args[0]
+        return node.func
+    return node
+
+
+def _names_of(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Tuple):
+        return [n.id for n in node.elts if isinstance(n, ast.Name)]
+    return []
+
+
+def scan_module(path: str, repo_root: str) -> Optional[ModuleInfo]:
+    with open(os.path.join(repo_root, path)) as fh:
+        src = fh.read()
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError:
+        return None
+    rel = path.replace(os.sep, "/")
+    modname = rel[:-3].replace("/", ".")
+    for prefix in ("src.",):
+        if modname.startswith(prefix):
+            modname = modname[len(prefix):]
+    aliases = _collect_aliases(tree)
+    mod = ModuleInfo(path=rel, modname=modname, tree=tree, aliases=aliases,
+                     functions={}, module_arrays=set(), module_assigns={})
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    mod.module_assigns[tgt.id] = node.value
+                    if _is_array_expr(node.value, aliases):
+                        mod.module_arrays.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if isinstance(node.target, ast.Name):
+                mod.module_assigns[node.target.id] = node.value
+                if _is_array_expr(node.value, aliases):
+                    mod.module_arrays.add(node.target.id)
+    _Scanner(mod).visit(tree)
+    return mod
+
+
+@dataclasses.dataclass
+class ProjectIndex:
+    """All scanned modules + the traced-function closure."""
+
+    repo_root: str
+    modules: List[ModuleInfo]
+    by_global: Dict[str, FunctionInfo]
+    traced: Set[str]              # global qualnames of traced functions
+    traced_roots: Dict[str, str]  # qualname -> why it is an entry point
+
+    def is_traced(self, info: FunctionInfo) -> bool:
+        return info.global_qualname in self.traced
+
+
+def _transform_callable_args(call: ast.Call, mod: ModuleInfo):
+    """Yield the AST nodes of callable args if this is a jax transform."""
+    name = canonical(mod.resolve(call.func))
+    if name is None:
+        return
+    # pl.pallas_call resolves through the import alias to the full path
+    spec = _TRANSFORM_CALLABLE_ARGS.get(name)
+    if spec is None and name.endswith(".pallas_call"):
+        spec = (0,)
+    if spec is None:
+        return
+    if spec == ("*",):
+        for a in call.args:
+            yield a
+        return
+    for i in spec:
+        if i < len(call.args):
+            yield call.args[i]
+
+
+def _callable_targets(node: ast.AST, mod: ModuleInfo,
+                      scope: Optional[FunctionInfo]):
+    """Function(s) an expression passed as a transform arg refers to."""
+    node = _unpartial_expr(node)
+    if isinstance(node, ast.Lambda):
+        # the scanner registered it under its lineno-qualified name
+        for qn, info in mod.functions.items():
+            if info.node is node:
+                yield info
+        return
+    if isinstance(node, (ast.List, ast.Tuple)):
+        for elt in node.elts:
+            yield from _callable_targets(elt, mod, scope)
+        return
+    name = dotted(node)
+    if name is None:
+        return
+    # local def in the enclosing scope chain?
+    s = scope
+    while s is not None:
+        qn = f"{s.qualname}.<locals>.{name}"
+        if qn in mod.functions:
+            yield mod.functions[qn]
+            return
+        s = s.parent
+    if name in mod.functions:
+        yield mod.functions[name]
+        return
+    resolved = canonical(mod.resolve(node))
+    if resolved:
+        yield resolved  # cross-module: a global qualname string
+
+
+def _unpartial_expr(node: ast.AST) -> ast.AST:
+    if isinstance(node, ast.Call):
+        name = dotted(node.func)
+        if name in ("functools.partial", "partial") and node.args:
+            return node.args[0]
+    return node
+
+
+_FACTORY_ROOTS = ("src/repro/core/", "src/repro/kernels/")
+
+
+def build_index(paths: Sequence[str], repo_root: str = ".") -> ProjectIndex:
+    """Scan every .py under ``paths`` and compute the traced closure."""
+    files: List[str] = []
+    for p in paths:
+        full = os.path.join(repo_root, p)
+        if os.path.isfile(full) and p.endswith(".py"):
+            files.append(p)
+            continue
+        for dirpath, _dirnames, filenames in os.walk(full):
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    files.append(os.path.relpath(
+                        os.path.join(dirpath, fn), repo_root))
+    modules = [m for m in (scan_module(f, repo_root) for f in sorted(files))
+               if m is not None]
+    by_global: Dict[str, FunctionInfo] = {}
+    for mod in modules:
+        for info in mod.functions.values():
+            by_global[info.global_qualname] = info
+            # methods are also callable as module.Cls.meth via self —
+            # register a short alias "module.meth" only for plain defs
+            if "." not in info.qualname:
+                by_global.setdefault(
+                    f"{mod.modname}.{info.qualname}", info)
+
+    roots: Dict[str, str] = {}
+
+    def mark(target, why: str):
+        if isinstance(target, FunctionInfo):
+            roots.setdefault(target.global_qualname, why)
+        elif isinstance(target, str) and target in by_global:
+            roots.setdefault(target, why)
+
+    for mod in modules:
+        # decorator-jitted functions
+        for info in mod.functions.values():
+            if any(d in ("jax.jit", "jit") for d in info.decorators):
+                mark(info, "decorated @jax.jit")
+        # transform call sites
+        scope_of: Dict[int, Optional[FunctionInfo]] = {}
+
+        class _T(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[FunctionInfo] = []
+
+            def _fn(self, node):
+                info = next((i for i in mod.functions.values()
+                             if i.node is node), None)
+                if info:
+                    self.stack.append(info)
+                    self.generic_visit(node)
+                    self.stack.pop()
+                else:
+                    self.generic_visit(node)
+
+            visit_FunctionDef = _fn
+            visit_AsyncFunctionDef = _fn
+            visit_Lambda = _fn
+
+            def visit_Call(self, node: ast.Call):
+                scope = self.stack[-1] if self.stack else None
+                for arg in _transform_callable_args(node, mod):
+                    for tgt in _callable_targets(arg, mod, scope):
+                        mark(tgt, f"passed to a jax transform at "
+                                  f"{mod.path}:{node.lineno}")
+                self.generic_visit(node)
+
+        _T().visit(mod.tree)
+        # closure-factory products in core/ and kernels/
+        if mod.path.startswith(_FACTORY_ROOTS):
+            for info in mod.functions.values():
+                if info.is_returned and info.parent is not None:
+                    mark(info, "returned by a closure factory in core/")
+
+    # transitive closure over call edges
+    traced: Set[str] = set(roots)
+    work = list(roots)
+    while work:
+        qn = work.pop()
+        info = by_global.get(qn)
+        if info is None:
+            continue
+        # local defs inside a traced function are traced too
+        for other in info.module.functions.values():
+            if other.parent is info:
+                oq = other.global_qualname
+                if oq not in traced:
+                    traced.add(oq)
+                    work.append(oq)
+        for callee in info.calls:
+            target = by_global.get(callee)
+            if target is None:
+                # method call resolved as module.attr? try short form
+                continue
+            tq = target.global_qualname
+            if tq not in traced:
+                traced.add(tq)
+                work.append(tq)
+
+    return ProjectIndex(repo_root=repo_root, modules=modules,
+                        by_global=by_global, traced=traced,
+                        traced_roots=roots)

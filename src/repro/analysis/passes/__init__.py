@@ -1,0 +1,14 @@
+"""Pass registry: each pass is ``run(index) -> list[Finding]``."""
+from repro.analysis.passes import (
+    host_sync, locks, pallas_hygiene, pytree, retrace,
+)
+
+PASSES = {
+    "host_sync": host_sync.run,        # JB* rules
+    "retrace": retrace.run,            # RT* rules
+    "pytree": pytree.run,              # PT* rules
+    "locks": locks.run,                # LK* rules
+    "pallas": pallas_hygiene.run,      # PL* rules
+}
+
+__all__ = ["PASSES"]

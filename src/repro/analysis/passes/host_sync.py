@@ -1,0 +1,192 @@
+"""JB* — jit-boundary / host-sync discipline (DESIGN.md §14.1).
+
+Inside a function that runs under a JAX trace, any host conversion of a
+traced value either fails at trace time or — worse — silently works on
+the *tracer's* concrete stand-in during a retrace-heavy path and costs a
+device sync per call at runtime:
+
+  JB01  ``x.item()`` on any value in traced code
+  JB02  ``float(x)`` / ``int(x)`` / ``bool(x)`` on a traced-tainted value
+  JB03  ``np.asarray(x)`` / ``np.array(x)`` on a traced-tainted value
+  JB04  Python ``for`` iteration over a traced-tainted value
+
+Taint is intraprocedural and deliberately simple: a function's own
+parameters (minus known trace-static config names) and the results of
+``jnp.*`` / ``jax.*`` calls are tainted; taint flows through
+assignments. ``.shape`` / ``.dtype`` / ``.ndim`` / ``len()`` /
+``isinstance()`` and ``range()`` results are host values and never
+tainted — block sizes and static shapes stay first-class citizens.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import (
+    FunctionInfo, ModuleInfo, ProjectIndex, canonical, dotted,
+)
+from repro.analysis.findings import Finding, Severity
+
+# Parameters that are trace-time constants in this codebase's idiom:
+# configuration carriers and structural objects, never device arrays.
+_STATIC_PARAMS = {
+    "self", "cls", "cfg", "config", "statics", "spec", "env", "backend",
+    "batch_size", "interpret",
+}
+
+_UNTAINT_ATTRS = {"shape", "dtype", "ndim", "size_static"}
+_HOST_CALLS = {"len", "range", "isinstance", "hasattr", "getattr",
+               "enumerate", "zip", "type", "min", "max", "divmod"}
+
+
+def _taint_set(fn: FunctionInfo) -> Set[str]:
+    return {p for p in fn.param_names() if p not in _STATIC_PARAMS}
+
+
+def _expr_tainted(node: ast.AST, tainted: Set[str],
+                  mod: ModuleInfo) -> bool:
+    """Best-effort: does this expression carry a traced value?"""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _UNTAINT_ATTRS:
+            return False
+        return _expr_tainted(node.value, tainted, mod)
+    if isinstance(node, ast.Subscript):
+        return _expr_tainted(node.value, tainted, mod)
+    if isinstance(node, ast.Call):
+        name = canonical(mod.resolve(node.func))
+        fname = dotted(node.func)
+        if fname in _HOST_CALLS:
+            return False
+        if name and (name.startswith("jnp.") or name.startswith("jax.")):
+            return True
+        # method calls on tainted receivers stay tainted (x.sum() ...)
+        if isinstance(node.func, ast.Attribute):
+            return _expr_tainted(node.func.value, tainted, mod)
+        return any(_expr_tainted(a, tainted, mod) for a in node.args)
+    if isinstance(node, ast.BinOp):
+        return (_expr_tainted(node.left, tainted, mod)
+                or _expr_tainted(node.right, tainted, mod))
+    if isinstance(node, ast.UnaryOp):
+        return _expr_tainted(node.operand, tainted, mod)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_expr_tainted(e, tainted, mod) for e in node.elts)
+    if isinstance(node, ast.IfExp):
+        return (_expr_tainted(node.body, tainted, mod)
+                or _expr_tainted(node.orelse, tainted, mod))
+    if isinstance(node, ast.Starred):
+        return _expr_tainted(node.value, tainted, mod)
+    return False
+
+
+def _propagate(fn: FunctionInfo, mod: ModuleInfo) -> Set[str]:
+    """One forward sweep of taint through straight-line assignments
+    (iterated to a small fixed point for loop-carried names)."""
+    tainted = _taint_set(fn)
+    body = fn.node.body if isinstance(fn.node.body, list) else [fn.node.body]
+    for _ in range(3):
+        before = len(tainted)
+        for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+            if isinstance(node, ast.Assign):
+                if _expr_tainted(node.value, tainted, mod):
+                    for tgt in node.targets:
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                tainted.add(n.id)
+            elif isinstance(node, ast.AugAssign):
+                if (_expr_tainted(node.value, tainted, mod)
+                        and isinstance(node.target, ast.Name)):
+                    tainted.add(node.target.id)
+        if len(tainted) == before:
+            break
+    return tainted
+
+
+_CASTS = {"float": "JB02", "int": "JB02", "bool": "JB02"}
+
+
+def _check_fn(idx: ProjectIndex, mod: ModuleInfo,
+              fn: FunctionInfo) -> List[Finding]:
+    out: List[Finding] = []
+    tainted = _propagate(fn, mod)
+    body = fn.node.body if isinstance(fn.node.body, list) else [fn.node.body]
+    seen_fns = {info.node for info in mod.functions.values()
+                if info is not fn}
+
+    def walk(node):
+        # do not descend into nested defs/lambdas: they are checked as
+        # their own (traced) functions with their own taint sets
+        for child in ast.iter_child_nodes(node):
+            if child in seen_fns or isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+                continue
+            visit(child)
+            walk(child)
+
+    def visit(node):
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                out.append(Finding(
+                    rule="JB01", severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno, scope=fn.qualname,
+                    message=".item() in traced code is a host sync per "
+                            "call (and fails on abstract tracers)",
+                    hint="keep the value on device; read it out after the "
+                         "jit boundary",
+                    detail=ast.unparse(node.func)[:80]))
+                return
+            fname = dotted(node.func)
+            if fname in _CASTS and len(node.args) == 1:
+                if _expr_tainted(node.args[0], tainted, mod):
+                    out.append(Finding(
+                        rule="JB02", severity=Severity.ERROR,
+                        path=mod.path, line=node.lineno, scope=fn.qualname,
+                        message=f"{fname}() on a traced value forces a "
+                                "device->host sync (ConcretizationError "
+                                "under jit)",
+                        hint="use jnp ops on the traced value, or hoist "
+                             "the conversion outside the traced function",
+                        detail=ast.unparse(node)[:80]))
+                return
+            cname = canonical(mod.resolve(node.func))
+            if cname in ("numpy.asarray", "numpy.array", "np.asarray",
+                         "np.array") and node.args:
+                if _expr_tainted(node.args[0], tainted, mod):
+                    out.append(Finding(
+                        rule="JB03", severity=Severity.ERROR,
+                        path=mod.path, line=node.lineno, scope=fn.qualname,
+                        message="np.asarray on a traced value "
+                                "materializes to host inside the trace",
+                        hint="use jnp.asarray (stays on device) or move "
+                             "the readout outside the jit boundary",
+                        detail=ast.unparse(node)[:80]))
+        elif isinstance(node, ast.For):
+            it = node.iter
+            if isinstance(it, (ast.Name, ast.Attribute)) and \
+                    _expr_tainted(it, tainted, mod):
+                out.append(Finding(
+                    rule="JB04", severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno, scope=fn.qualname,
+                    message="Python iteration over a traced value unrolls "
+                            "(or fails) at trace time and syncs per "
+                            "element at runtime",
+                    hint="use lax.scan / lax.fori_loop, or iterate a "
+                         "static length",
+                    detail=ast.unparse(it)[:80]))
+
+    for stmt in body:
+        visit(stmt)
+        walk(stmt)
+    return out
+
+
+def run(idx: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in idx.modules:
+        for fn in mod.functions.values():
+            if idx.is_traced(fn):
+                out.extend(_check_fn(idx, mod, fn))
+    return out

@@ -1,0 +1,226 @@
+"""PL* — pallas kernel hygiene (DESIGN.md §14.5).
+
+  PL01  a kernel body referencing a module-level *array* global: pallas
+        lowers captured array constants into the kernel (or rejects
+        them outright, backend-dependent). Python float/int globals are
+        fine and idiomatic (``GAMMA_FLOOR``, ``NEG_INF`` in
+        linucb_step/kernel.py carry comments to exactly this effect) —
+        only jnp/jax array constructors at module scope count.
+  PL02  ``input_output_aliases`` indices out of range for the call's
+        operand count or ``out_shape`` arity: silently wrong donation
+        is a use-after-free on the donated buffer.
+  PL03  a kernel wrapper (``kernels/*/ops.py``) calling into its kernel
+        module without padding its operands: the kernels document block
+        shapes (pad_d/pad_b/block_q/...) and assert divisibility, so an
+        unpadded wrapper is a latent shape crash for any non-multiple
+        input. A wrapper satisfies the rule by calling ``jnp.pad``
+        directly or through a local ``_pad*`` helper that does.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.core import (
+    FunctionInfo, ModuleInfo, ProjectIndex, _callable_targets, canonical,
+    dotted,
+)
+from repro.analysis.findings import Finding, Severity
+
+
+def _is_pallas_call(node: ast.Call, mod: ModuleInfo) -> bool:
+    name = canonical(mod.resolve(node.func)) or ""
+    return name.endswith(".pallas_call") or name == "pallas_call"
+
+
+# -- PL01 ----------------------------------------------------------------
+
+def _kernel_free_globals(info: FunctionInfo) -> Set[str]:
+    """Module-scope names the kernel body reads (params/locals removed)."""
+    node = info.node
+    bound = set(info.param_names())
+    body = node.body if isinstance(node.body, list) else [node.body]
+    loads: Set[str] = set()
+    for n in ast.walk(ast.Module(body=[ast.Expr(value=b) if not
+                                       isinstance(b, ast.stmt) else b
+                                       for b in body],
+                                 type_ignores=[])):
+        if isinstance(n, ast.Name):
+            if isinstance(n.ctx, (ast.Store, ast.Del)):
+                bound.add(n.id)
+            elif isinstance(n.ctx, ast.Load):
+                loads.add(n.id)
+    return loads - bound
+
+
+def _check_pl01(mod: ModuleInfo, call: ast.Call,
+                scope: Optional[FunctionInfo]) -> List[Finding]:
+    if not call.args:
+        return []
+    out: List[Finding] = []
+    for tgt in _callable_targets(call.args[0], mod, scope):
+        if not isinstance(tgt, FunctionInfo):
+            continue
+        captured = sorted(_kernel_free_globals(tgt)
+                          & tgt.module.module_arrays)
+        for name in captured:
+            out.append(Finding(
+                rule="PL01", severity=Severity.ERROR,
+                path=tgt.module.path, line=tgt.line, scope=tgt.qualname,
+                message=f"pallas kernel captures module-level array "
+                        f"{name!r}: array constants cannot be closed "
+                        "over by a kernel body",
+                hint="pass it as a kernel operand with its own "
+                     "BlockSpec, or keep the constant a Python scalar",
+                detail=f"capture:{name}"))
+    return out
+
+
+# -- PL02 ----------------------------------------------------------------
+
+def _out_arity(call: ast.Call) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == "out_shape":
+            v = kw.value
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return len(v.elts)
+            if isinstance(v, ast.Call):
+                return 1
+    return None
+
+
+def _check_pl02(mod: ModuleInfo, call: ast.Call,
+                invocation: Optional[ast.Call]) -> List[Finding]:
+    aliases = None
+    for kw in call.keywords:
+        if kw.arg == "input_output_aliases" and isinstance(
+                kw.value, ast.Dict):
+            aliases = kw.value
+    if aliases is None:
+        return []
+    n_out = _out_arity(call)
+    n_in = (len(invocation.args) if invocation is not None
+            and not any(isinstance(a, ast.Starred)
+                        for a in invocation.args) else None)
+    out: List[Finding] = []
+    for k, v in zip(aliases.keys, aliases.values):
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, int)
+                and isinstance(v, ast.Constant)
+                and isinstance(v.value, int)):
+            continue
+        problems = []
+        if n_in is not None and not (0 <= k.value < n_in):
+            problems.append(
+                f"input index {k.value} out of range for {n_in} operands")
+        if n_out is not None and not (0 <= v.value < n_out):
+            problems.append(
+                f"output index {v.value} out of range for out_shape "
+                f"arity {n_out}")
+        for p in problems:
+            out.append(Finding(
+                rule="PL02", severity=Severity.ERROR,
+                path=mod.path, line=call.lineno, scope="",
+                message=f"input_output_aliases: {p} — wrong donation is "
+                        "a use-after-free on the aliased buffer",
+                hint="realign the alias map with the operand list and "
+                     "out_shape",
+                detail=f"alias:{k.value}->{v.value}"))
+    return out
+
+
+# -- PL03 ----------------------------------------------------------------
+
+def _calls_pad(info: FunctionInfo, mod: ModuleInfo,
+               depth: int = 0) -> bool:
+    """Does this function call jnp.pad, directly or via a same-module
+    helper (the flash_attention ``_pad_to`` idiom)?"""
+    if depth > 2:
+        return False
+    for n in ast.walk(info.node):
+        if not isinstance(n, ast.Call):
+            continue
+        name = canonical(mod.resolve(n.func)) or ""
+        if name.endswith(".pad") or name == "pad":
+            return True
+        if isinstance(n.func, ast.Name):
+            helper = mod.functions.get(n.func.id)
+            if helper is not None and helper is not info \
+                    and _calls_pad(helper, mod, depth + 1):
+                return True
+    return False
+
+
+def _is_kernel_wrapper_module(mod: ModuleInfo) -> bool:
+    return ("/kernels/" in f"/{mod.path}" and
+            mod.path.endswith("/ops.py"))
+
+
+def _check_pl03(mod: ModuleInfo) -> List[Finding]:
+    if not _is_kernel_wrapper_module(mod):
+        return []
+    kernel_mod = mod.modname.rsplit(".", 1)[0] + ".kernel"
+    out: List[Finding] = []
+    for qn, info in mod.functions.items():
+        if "." in qn or info.name.startswith("_"):
+            continue  # only public top-level wrappers
+        calls_kernel = any(c.startswith(kernel_mod + ".")
+                           for c in info.calls)
+        if not calls_kernel:
+            continue
+        if not _calls_pad(info, mod):
+            out.append(Finding(
+                rule="PL03", severity=Severity.ERROR,
+                path=mod.path, line=info.line, scope=qn,
+                message="kernel wrapper passes operands through without "
+                        "padding: the kernel asserts block-shape "
+                        "divisibility, so any non-multiple input "
+                        "crashes at trace time",
+                hint="zero-pad to the documented block multiple "
+                     "(jnp.pad) and slice the result back",
+                detail="nopad"))
+    return out
+
+
+def run(idx: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in idx.modules:
+        info_of = {info.node: info for info in mod.functions.values()}
+
+        class _V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[FunctionInfo] = []
+                self.pl02_done: Set[int] = set()
+
+            def _fn(self, node):
+                info = info_of.get(node)
+                if info:
+                    self.stack.append(info)
+                    self.generic_visit(node)
+                    self.stack.pop()
+                else:
+                    self.generic_visit(node)
+
+            visit_FunctionDef = _fn
+            visit_AsyncFunctionDef = _fn
+            visit_Lambda = _fn
+
+            def visit_Call(self, node: ast.Call):
+                # pallas_call(kernel, ...)(operands...): match the outer
+                # invocation for PL02's operand count
+                inner = node.func if isinstance(node.func, ast.Call) \
+                    else None
+                if inner is not None and _is_pallas_call(inner, mod):
+                    out.extend(_check_pl02(mod, inner, node))
+                    self.pl02_done.add(id(inner))
+                if _is_pallas_call(node, mod):
+                    scope = self.stack[-1] if self.stack else None
+                    out.extend(_check_pl01(mod, node, scope))
+                    if id(node) not in self.pl02_done:
+                        # bare pallas_call(...) not immediately invoked:
+                        # still check out-of-range against out_shape only
+                        out.extend(_check_pl02(mod, node, None))
+                self.generic_visit(node)
+
+        _V().visit(mod.tree)
+        out.extend(_check_pl03(mod))
+    return out

@@ -1,0 +1,235 @@
+"""PT* — pytree registration contracts (DESIGN.md §14.3).
+
+The gateway's conflict-free publish merge (§13) and the Statics/hyper
+split (§9) both lean on pytree structure being exactly what the code
+says it is:
+
+  PT01  a writer-plane partition (the ``*_LEAVES`` tuples) that does not
+        cover the registered dataclass's fields exactly — a field
+        missing from every plane has no owner and silently loses writes
+        in the publish merge; a name that is not a field is dead weight
+        that masks the first problem.
+  PT02  two planes claiming the same leaf — concurrent writers, torn
+        merges.
+  PT03  a ``register_dataclass`` field annotated with a non-leaf host
+        type (str/bytes/dict/list): it becomes a traced leaf, and jit
+        either rejects it or retraces per value.
+  PT04  a manual ``register_pytree_node`` whose flatten returns
+        unhashable aux_data (list/dict/set literal): tree structure
+        equality — and therefore every jit cache hit — needs hashable
+        aux.
+
+The partition check is structural, not hard-coded to RouterState: any
+module defining two or more ``*_LEAVES`` tuples is checked against the
+registered dataclass whose fields best overlap their union, so the rule
+fires on fixtures and on future state classes alike.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import ModuleInfo, ProjectIndex, canonical, dotted
+from repro.analysis.findings import Finding, Severity
+
+_BAD_LEAF_ANNOTATIONS = {"str", "bytes", "dict", "list", "set",
+                         "Dict", "List", "Set", "typing.Dict",
+                         "typing.List", "typing.Set"}
+
+
+def _registered_dataclasses(mod: ModuleInfo) -> List[ast.ClassDef]:
+    out = []
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for dec in node.decorator_list:
+            name = canonical(mod.resolve(dec)) or dotted(dec) or ""
+            if name.endswith("register_dataclass"):
+                out.append(node)
+                break
+    return out
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> Dict[str, Optional[str]]:
+    """field name -> annotation dotted name (outermost), body order."""
+    fields: Dict[str, Optional[str]] = {}
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name):
+            ann = stmt.annotation
+            if isinstance(ann, ast.Subscript):   # List[int] -> List
+                ann = ann.value
+            if isinstance(ann, ast.BinOp):       # float | Array -> skip
+                fields[stmt.target.id] = None
+                continue
+            fields[stmt.target.id] = dotted(ann)
+    return fields
+
+
+def _leaf_partitions(mod: ModuleInfo) -> Dict[str, Tuple[int, Tuple[str, ...]]]:
+    """Module-level ``X_LEAVES = ("a", "b", ...)`` tuples."""
+    out: Dict[str, Tuple[int, Tuple[str, ...]]] = {}
+    for node in mod.tree.body:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Name) and tgt.id.endswith("_LEAVES")):
+            continue
+        if isinstance(node.value, (ast.Tuple, ast.List)):
+            names = tuple(
+                e.value for e in node.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str))
+            if len(names) == len(node.value.elts):
+                out[tgt.id] = (node.lineno, names)
+    return out
+
+
+def _check_partitions(mod: ModuleInfo) -> List[Finding]:
+    parts = _leaf_partitions(mod)
+    if len(parts) < 2:
+        return []
+    union: Set[str] = set()
+    for _line, names in parts.values():
+        union |= set(names)
+    # the dataclass these planes partition = best field overlap
+    best, best_fields, best_overlap = None, {}, -1
+    for cls in _registered_dataclasses(mod):
+        fields = _dataclass_fields(cls)
+        overlap = len(union & set(fields))
+        if overlap > best_overlap:
+            best, best_fields, best_overlap = cls, fields, overlap
+    if best is None or best_overlap <= 0:
+        return []
+    out: List[Finding] = []
+    field_set = set(best_fields)
+    missing = sorted(field_set - union)
+    unknown = sorted(union - field_set)
+    first_line = min(line for line, _ in parts.values())
+    for name in missing:
+        out.append(Finding(
+            rule="PT01", severity=Severity.ERROR,
+            path=mod.path, line=first_line, scope=best.name,
+            message=f"field {name!r} of {best.name} belongs to no writer "
+                    "plane: writes to it are silently lost in the "
+                    "publish merge",
+            hint="add it to exactly one of the *_LEAVES partitions",
+            detail=f"missing:{name}"))
+    for name in unknown:
+        out.append(Finding(
+            rule="PT01", severity=Severity.ERROR,
+            path=mod.path, line=first_line, scope=best.name,
+            message=f"partition name {name!r} is not a field of "
+                    f"{best.name}",
+            hint="remove the stale name (field renamed or deleted?)",
+            detail=f"unknown:{name}"))
+    # pairwise overlap
+    items = sorted(parts.items())
+    for i, (na, (la, a)) in enumerate(items):
+        for nb, (lb, b) in items[i + 1:]:
+            for name in sorted(set(a) & set(b)):
+                out.append(Finding(
+                    rule="PT02", severity=Severity.ERROR,
+                    path=mod.path, line=min(la, lb), scope=best.name,
+                    message=f"leaf {name!r} is claimed by both {na} and "
+                            f"{nb}: two writer planes on one leaf means "
+                            "torn publish merges",
+                    hint="assign the leaf to exactly one plane",
+                    detail=f"overlap:{name}:{na}:{nb}"))
+    return out
+
+
+def _check_field_types(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in _registered_dataclasses(mod):
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            ann = stmt.annotation
+            if isinstance(ann, ast.Subscript):
+                ann = ann.value
+            name = dotted(ann)
+            if name in _BAD_LEAF_ANNOTATIONS:
+                # field(metadata=...) static markers exempt the field
+                marked_static = (
+                    isinstance(stmt.value, ast.Call)
+                    and any(kw.arg == "metadata"
+                            for kw in stmt.value.keywords))
+                if marked_static:
+                    continue
+                out.append(Finding(
+                    rule="PT03", severity=Severity.ERROR,
+                    path=mod.path, line=stmt.lineno, scope=cls.name,
+                    message=f"register_dataclass field "
+                            f"{stmt.target.id!r} annotated {name!r} "
+                            "becomes a traced leaf: jit rejects or "
+                            "retraces per value",
+                    hint="mark it static (meta_fields / "
+                         "field(metadata=...)) or move it to Statics",
+                    detail=f"field:{stmt.target.id}"))
+    return out
+
+
+def _flatten_aux_expr(flatten: ast.AST,
+                      mod: ModuleInfo) -> Optional[ast.AST]:
+    """The aux_data element of the (leaves, aux) pair a flatten fn
+    returns; None when it cannot be determined syntactically."""
+    if isinstance(flatten, ast.Lambda):
+        body = flatten.body
+        if isinstance(body, ast.Tuple) and len(body.elts) == 2:
+            return body.elts[1]
+        return None
+    name = dotted(flatten)
+    if name is None:
+        return None
+    info = mod.functions.get(name)
+    if info is None:
+        return None
+    for n in ast.walk(info.node):
+        if isinstance(n, ast.Return) and isinstance(n.value, ast.Tuple) \
+                and len(n.value.elts) == 2:
+            return n.value.elts[1]
+    return None
+
+
+_UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp)
+
+
+def _check_manual_nodes(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = canonical(mod.resolve(node.func)) or ""
+        if not name.endswith("register_pytree_node"):
+            continue
+        if len(node.args) < 2:
+            continue
+        aux = _flatten_aux_expr(node.args[1], mod)
+        if aux is None:
+            continue
+        bad = isinstance(aux, _UNHASHABLE_NODES) or (
+            isinstance(aux, ast.Call)
+            and dotted(aux.func) in ("list", "dict", "set"))
+        if bad:
+            cls = dotted(node.args[0]) or "<pytree>"
+            out.append(Finding(
+                rule="PT04", severity=Severity.ERROR,
+                path=mod.path, line=node.lineno, scope=cls,
+                message=f"register_pytree_node for {cls} returns "
+                        "unhashable aux_data: treedef equality (and "
+                        "every jit cache hit) needs hashable aux",
+                hint="return a tuple of hashables (the ScenarioParams "
+                     "tuple-of-names idiom)",
+                detail=f"aux:{cls}"))
+    return out
+
+
+def run(idx: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in idx.modules:
+        out.extend(_check_partitions(mod))
+        out.extend(_check_field_types(mod))
+        out.extend(_check_manual_nodes(mod))
+    return out

@@ -1,0 +1,315 @@
+"""RT* — retrace hazards at jit call sites (DESIGN.md §14.2).
+
+The zero-retrace contract (§9: ``Statics`` is the ONLY compiled-program
+cache key) dies in three syntactic ways:
+
+  RT01  ``jax.jit(...)`` created *and invoked* inside a plain function:
+        every call of the enclosing function mints a fresh jitted
+        callable with an empty cache — compile per call. Accepted
+        patterns: module level; an ``lru_cache``/``cache``-decorated
+        factory; returning the jitted callable (the ``lru_get`` factory
+        idiom); storing it into a cache subscript or ``self``
+        attribute; AOT chains (``.lower()`` / ``.compile()``).
+  RT02  a jit-wrapped closure capturing a *function-local array*: the
+        array is baked in as a constant, and each fresh array identity
+        is a fresh constant — silent recompile per call.
+  RT03  ``static_argnums``/``static_argnames`` marking a parameter whose
+        default is unhashable (list/dict/set) or that is
+        annotated as an Array: jit raises on unhashable statics, and an
+        array-valued static retraces on every new value.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import (
+    FunctionInfo, ModuleInfo, ProjectIndex, canonical, dotted,
+)
+from repro.analysis.findings import Finding, Severity
+
+_CACHE_DECS = {"functools.lru_cache", "functools.cache", "lru_cache",
+               "cache"}
+_ARRAY_ANNOTATIONS = {"Array", "jax.Array", "jnp.ndarray", "np.ndarray",
+                      "numpy.ndarray"}
+
+
+def _is_jit_call(node: ast.Call, mod: ModuleInfo) -> bool:
+    return canonical(mod.resolve(node.func)) == "jax.jit"
+
+
+def _jit_statics(node: ast.Call) -> Optional[ast.AST]:
+    for kw in node.keywords:
+        if kw.arg in ("static_argnums", "static_argnames"):
+            return kw.value
+    return None
+
+
+def _enclosing_chain(fn: FunctionInfo):
+    f = fn
+    while f is not None:
+        yield f
+        f = f.parent
+
+
+def _local_array_names(fn: FunctionInfo, mod: ModuleInfo) -> Set[str]:
+    """Names assigned from jnp/jax array constructors in this scope."""
+    out: Set[str] = set()
+    for node in ast.walk(_body_module(fn)):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            name = canonical(mod.resolve(node.value.func))
+            if name and (name.startswith("jnp.")
+                         or name.startswith("jax.random.")
+                         or name == "jax.device_put"):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.add(tgt.id)
+    return out
+
+
+def _body_module(fn: FunctionInfo) -> ast.Module:
+    body = fn.node.body
+    if not isinstance(body, list):
+        return ast.Module(body=[ast.Expr(value=body)], type_ignores=[])
+    return ast.Module(body=body, type_ignores=[])
+
+
+def _free_names(lam: ast.AST) -> Set[str]:
+    """Names read in a lambda/def body that are not its own params."""
+    if isinstance(lam, ast.Lambda):
+        params = {a.arg for a in lam.args.args + lam.args.kwonlyargs}
+        body_nodes = [lam.body]
+        defaults = list(lam.args.defaults)
+    else:
+        a = lam.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        body_nodes = lam.body
+        defaults = list(a.defaults)
+    # names bound via default args are captured at def time, not call
+    # time — they are fine (the `cfg=cfg` idiom)
+    bound_by_default = set()
+    for d in defaults:
+        for n in ast.walk(d):
+            if isinstance(n, ast.Name):
+                bound_by_default.add(n.id)
+    out: Set[str] = set()
+    for bn in body_nodes:
+        for n in ast.walk(bn):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                if n.id not in params:
+                    out.add(n.id)
+    return out - bound_by_default
+
+
+def _check_module(idx: ProjectIndex, mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+
+    # map: function node -> FunctionInfo (for scope attribution)
+    info_of = {info.node: info for info in mod.functions.values()}
+
+    class _V(ast.NodeVisitor):
+        def __init__(self):
+            self.stack: List[FunctionInfo] = []
+
+        def _fn(self, node):
+            info = info_of.get(node)
+            if info:
+                self.stack.append(info)
+                self.generic_visit(node)
+                self.stack.pop()
+            else:
+                self.generic_visit(node)
+
+        visit_FunctionDef = _fn
+        visit_AsyncFunctionDef = _fn
+        visit_Lambda = _fn
+
+        def visit_Call(self, node: ast.Call):
+            if _is_jit_call(node, mod):
+                self._check_jit_site(node)
+            self.generic_visit(node)
+
+        # -- the three rules ------------------------------------------
+        def _check_jit_site(self, node: ast.Call):
+            scope = self.stack[-1] if self.stack else None
+            self._check_rt03(node, scope)
+            if scope is not None:
+                self._check_rt01(node, scope)
+                self._check_rt02(node, scope)
+
+        def _check_rt01(self, node: ast.Call, scope: FunctionInfo):
+            # scope (or an enclosing factory) cached -> fine
+            for f in _enclosing_chain(scope):
+                if any(d in _CACHE_DECS for d in f.decorators):
+                    return
+            sm = _body_module(scope)
+            name = _assigned_name(node, sm)
+            if _is_aot(node, sm, name):
+                return
+            if _escapes(node, sm, name):
+                return
+            if _is_invoked(node, sm, name):
+                out.append(Finding(
+                    rule="RT01", severity=Severity.WARNING,
+                    path=mod.path, line=node.lineno, scope=scope.qualname,
+                    message="jax.jit created and invoked inside a plain "
+                            "function: every call of the enclosing "
+                            "function compiles from scratch",
+                    hint="hoist to module level behind functools.lru_cache "
+                         "keyed on Statics (router.jit_select_batch "
+                         "idiom), or return the jitted callable from a "
+                         "cached factory",
+                    detail=f"jit:{name or 'anon'}"))
+
+        def _check_rt02(self, node: ast.Call, scope: FunctionInfo):
+            target = node.args[0] if node.args else None
+            if not isinstance(target, (ast.Lambda,)) and not (
+                    isinstance(target, ast.Name)):
+                return
+            lam = target
+            if isinstance(target, ast.Name):
+                qn = f"{scope.qualname}.<locals>.{target.id}"
+                info = mod.functions.get(qn)
+                if info is None:
+                    return
+                lam = info.node
+            arrays = set()
+            for f in _enclosing_chain(scope):
+                arrays |= _local_array_names(f, mod)
+            captured = _free_names(lam) & arrays
+            for name in sorted(captured):
+                out.append(Finding(
+                    rule="RT02", severity=Severity.ERROR,
+                    path=mod.path, line=node.lineno, scope=scope.qualname,
+                    message=f"jitted closure captures local array "
+                            f"{name!r}: it is baked in as a compile-time "
+                            "constant, so each new array identity "
+                            "recompiles",
+                    hint="pass the array as an operand (function "
+                         "argument) instead of capturing it",
+                    detail=f"capture:{name}"))
+
+        def _check_rt03(self, node: ast.Call,
+                        scope: Optional[FunctionInfo]):
+            statics = _jit_statics(node)
+            if statics is None:
+                return
+            static_names = {
+                s.value for s in ast.walk(statics)
+                if isinstance(s, ast.Constant) and isinstance(s.value, str)
+            }
+            target = node.args[0] if node.args else None
+            fn_node = None
+            if isinstance(target, ast.Name):
+                for qn, info in mod.functions.items():
+                    if info.name == target.id and info.parent is None:
+                        fn_node = info.node
+                        break
+            elif isinstance(target, (ast.Lambda, ast.FunctionDef)):
+                fn_node = target
+            # decorator form: partial(jax.jit, static_argnames=...) on a
+            # def — the pass sees the Call node inside the decorator and
+            # self.stack is empty; match the decorated function
+            if fn_node is None and not node.args:
+                for info in mod.functions.values():
+                    dec_calls = [d for d in getattr(
+                        info.node, "decorator_list", [])
+                        if isinstance(d, ast.Call)]
+                    for d in dec_calls:
+                        if node in ast.walk(d):
+                            fn_node = info.node
+                            break
+            if fn_node is None:
+                return
+            args = fn_node.args
+            for p in args.posonlyargs + args.args + args.kwonlyargs:
+                if p.arg not in static_names:
+                    continue
+                ann = getattr(p, "annotation", None)
+                if ann is not None and (dotted(ann) or "") in \
+                        _ARRAY_ANNOTATIONS:
+                    out.append(Finding(
+                        rule="RT03", severity=Severity.ERROR,
+                        path=mod.path, line=fn_node.lineno,
+                        scope=getattr(fn_node, "name", "<lambda>"),
+                        message=f"static arg {p.arg!r} is annotated as an "
+                                "Array: arrays are unhashable as jit "
+                                "statics and retrace per value",
+                        hint="make it an operand, or key on a hashable "
+                             "Statics projection",
+                        detail=f"static:{p.arg}"))
+            defaults = dict(zip(
+                [p.arg for p in (args.posonlyargs + args.args)][::-1],
+                list(args.defaults)[::-1]))
+            for p_name, d in defaults.items():
+                if p_name in static_names and isinstance(
+                        d, (ast.List, ast.Dict, ast.Set)):
+                    out.append(Finding(
+                        rule="RT03", severity=Severity.ERROR,
+                        path=mod.path, line=fn_node.lineno,
+                        scope=getattr(fn_node, "name", "<lambda>"),
+                        message=f"static arg {p_name!r} defaults to an "
+                                "unhashable container: jit raises "
+                                "TypeError on unhashable statics",
+                        hint="use a tuple (hashable) or make it an "
+                             "operand",
+                        detail=f"static:{p_name}"))
+
+    def _assigned_name(node: ast.Call, sm: ast.Module) -> Optional[str]:
+        for n in ast.walk(sm):
+            if isinstance(n, ast.Assign) and n.value is node:
+                for tgt in n.targets:
+                    if isinstance(tgt, ast.Name):
+                        return tgt.id
+        return None
+
+    def _is_aot(node: ast.Call, sm: ast.Module,
+                name: Optional[str]) -> bool:
+        for n in ast.walk(sm):
+            if isinstance(n, ast.Attribute) and n.attr in (
+                    "lower", "compile", "trace"):
+                if n.value is node:
+                    return True
+                if name and isinstance(n.value, ast.Name) \
+                        and n.value.id == name:
+                    return True
+        return False
+
+    def _escapes(node: ast.Call, sm: ast.Module,
+                 name: Optional[str]) -> bool:
+        """Returned, stored into a subscript cache, or set on self."""
+        for n in ast.walk(sm):
+            if isinstance(n, ast.Return) and (
+                    n.value is node
+                    or (name and isinstance(n.value, ast.Name)
+                        and n.value.id == name)):
+                return True
+            if isinstance(n, ast.Assign) and (
+                    n.value is node
+                    or (name and isinstance(n.value, ast.Name)
+                        and n.value.id == name)):
+                for tgt in n.targets:
+                    if isinstance(tgt, (ast.Subscript, ast.Attribute)):
+                        return True
+        return False
+
+    def _is_invoked(node: ast.Call, sm: ast.Module,
+                    name: Optional[str]) -> bool:
+        for n in ast.walk(sm):
+            if isinstance(n, ast.Call):
+                if n.func is node:
+                    return True
+                if name and isinstance(n.func, ast.Name) \
+                        and n.func.id == name:
+                    return True
+        return False
+
+    _V().visit(mod.tree)
+    return out
+
+
+def run(idx: ProjectIndex) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in idx.modules:
+        out.extend(_check_module(idx, mod))
+    return out

@@ -1,0 +1,41 @@
+"""Orchestrates the passes over a scanned project index."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.core import ProjectIndex, build_index
+from repro.analysis.findings import Finding
+from repro.analysis.passes import PASSES
+
+
+def run_analysis(paths: Sequence[str], repo_root: str = ".",
+                 rules: Optional[Sequence[str]] = None,
+                 index: Optional[ProjectIndex] = None) -> List[Finding]:
+    """Run every registered pass (or the named subset) and return all
+    findings sorted by (path, line, rule) for stable output/diffs.
+
+    ``rules`` filters by pass name ("locks") or rule-id prefix ("LK").
+    """
+    idx = index if index is not None else build_index(paths, repo_root)
+    findings: List[Finding] = []
+    for name, pass_fn in PASSES.items():
+        findings.extend(pass_fn(idx))
+    if rules:
+        keep = set(rules)
+        findings = [
+            f for f in findings
+            if f.rule in keep or f.rule[:2] in keep
+            or _pass_of(f.rule) in keep
+        ]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.detail))
+    return findings
+
+
+_PREFIX_TO_PASS: Dict[str, str] = {
+    "JB": "host_sync", "RT": "retrace", "PT": "pytree",
+    "LK": "locks", "PL": "pallas",
+}
+
+
+def _pass_of(rule: str) -> str:
+    return _PREFIX_TO_PASS.get(rule[:2], "")

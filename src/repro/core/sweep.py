@@ -449,18 +449,23 @@ def run_grid(
             "no scenario events)")
     budgets, seeds, flat_b, flat_s = _flatten_grid(budgets, seeds)
     C, S = len(budgets), len(seeds)
-    xs, rmat, cmat, stream_axes, env0 = evaluate.build_run_streams(
-        cfg, env, seeds, shuffle)
-    states = evaluate.make_states(
-        cfg, env0, flat_b, flat_s,
-        priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
-        pacer_enabled=pacer_enabled,
-        hyper=_expand_hyper(hyper, C, S),
-    )
-    if condition_edits is not None:
-        states = _apply_condition_edits(states, condition_edits, S)
-    states, streams, _, _ = _shard_grid(
-        states, (xs, rmat, cmat), stream_axes, C, devices)
+    # Deliberate host->device staging: stream tensors and the stacked
+    # state grid are built eagerly once per call. Annotating it keeps
+    # jax.transfer_guard("disallow") usable around the compiled
+    # dispatch below, where an implicit transfer would be a real bug.
+    with jax.transfer_guard("allow"):
+        xs, rmat, cmat, stream_axes, env0 = evaluate.build_run_streams(
+            cfg, env, seeds, shuffle)
+        states = evaluate.make_states(
+            cfg, env0, flat_b, flat_s,
+            priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
+            pacer_enabled=pacer_enabled,
+            hyper=_expand_hyper(hyper, C, S),
+        )
+        if condition_edits is not None:
+            states = _apply_condition_edits(states, condition_edits, S)
+        states, streams, _, _ = _shard_grid(
+            states, (xs, rmat, cmat), stream_axes, C, devices)
 
     fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size,
                          _n_chunks(C * S, chunk_size))

@@ -290,6 +290,36 @@ SELECT_LEAVES = ("t", "last_play", "key", "force_left")
 CONTROL_LEAVES = ("active", "price", "c_tilde", "force_arm", "hyper")
 
 
+def validate_leaf_partition() -> None:
+    """Assert LEARN/SELECT/CONTROL exactly partition RouterState's
+    fields: pairwise disjoint, union = every field. A field outside
+    every plane would silently lose writes in the gateway publish
+    merge; a field in two planes would be written by two planes
+    concurrently. Cheap (field-name sets only) — the serving gateway
+    calls this at import time so a drifted partition fails fast, before
+    any state is published."""
+    fields = {f.name for f in dataclasses.fields(RouterState)}
+    planes = {"LEARN_LEAVES": LEARN_LEAVES, "SELECT_LEAVES": SELECT_LEAVES,
+              "CONTROL_LEAVES": CONTROL_LEAVES}
+    union: set = set()
+    for name, leaves in planes.items():
+        s = set(leaves)
+        if len(s) != len(leaves):
+            raise ValueError(f"{name} has duplicate entries: {leaves}")
+        dup = union & s
+        if dup:
+            raise ValueError(
+                f"leaf plane overlap: {sorted(dup)} claimed by {name} "
+                "and an earlier plane — two writer planes on one leaf")
+        union |= s
+    if union != fields:
+        missing = sorted(fields - union)
+        unknown = sorted(union - fields)
+        raise ValueError(
+            "LEARN/SELECT/CONTROL_LEAVES must exactly partition "
+            f"RouterState fields; missing={missing} unknown={unknown}")
+
+
 def merge_learn_leaves(select_side: "RouterState",
                        learn_side: "RouterState") -> "RouterState":
     """The gateway publish merge: LEARN_LEAVES from the learner's output,

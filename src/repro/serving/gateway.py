@@ -43,14 +43,21 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import router as router_lib
 from repro.core import statehandle
 from repro.core.statehandle import Snapshot, StateHandle
-from repro.core.types import RouterConfig, RouterState, merge_learn_leaves
+from repro.core.types import (
+    RouterConfig, RouterState, merge_learn_leaves, validate_leaf_partition,
+)
 from repro.serving.feedback_store import InMemoryFeedbackStore
 from repro.serving.telemetry import Telemetry
+
+# The publish merge below is only sound if the writer planes exactly
+# partition RouterState (DESIGN.md §13); fail at import, not mid-serve.
+validate_leaf_partition()
 
 Array = jax.Array
 
@@ -169,6 +176,10 @@ class RouterGateway:
         waits on a learner tick's device work."""
         B = len(request_ids)
         t0 = time.perf_counter()
+        # Explicit device staging outside the lock: the jitted select
+        # must never pay a hidden host->device transfer per call (the
+        # hot-path tests pin this under jax.transfer_guard("disallow")).
+        X = jnp.asarray(X, jnp.float32)
         with self._lock:
             dec, self._live = self._select(self._live, X)
             self._t_host += B
@@ -288,12 +299,17 @@ class RouterGateway:
         if not blocks:
             return None
         n_rows = sum(len(b[1]) for b in blocks)
+        # Stage the numpy feedback batches on device once, explicitly —
+        # not implicitly per update_batch call (and not again on an
+        # epoch-bump retry).
+        staged = [(jnp.asarray(X), jnp.asarray(a), jnp.asarray(r),
+                   jnp.asarray(c)) for X, a, r, c, _ids in blocks]
         while True:
             with self._lock:
                 base = self._live
                 epoch = self._epoch
             learned = base
-            for X, a, r, c, _ids in blocks:
+            for X, a, r, c in staged:
                 learned = self._update(learned, a, X, r, c)
             with self._lock:
                 if self._epoch != epoch:

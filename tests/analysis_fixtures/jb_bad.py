@@ -1,0 +1,26 @@
+"""JB* fixtures: host syncs inside traced functions, one per rule."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def jb01_item(x):
+    return x.item()          # JB01: host sync / fails on tracer
+
+
+@jax.jit
+def jb02_cast(x):
+    return float(x)          # JB02: cast of a traced value
+
+
+@jax.jit
+def jb03_materialize(x):
+    return np.asarray(x)     # JB03: host materialization in the trace
+
+
+@jax.jit
+def jb04_iterate(x):
+    total = 0.0
+    for v in x:              # JB04: python iteration over a traced value
+        total = total + v
+    return total

@@ -1,0 +1,6 @@
+"""PL03 fixture: public wrapper forwards operands without padding."""
+from tests.analysis_fixtures.kernels.badwrap import kernel
+
+
+def run(x):
+    return kernel.kernel_call(x)     # PL03: no jnp.pad on the way in

@@ -1,0 +1,17 @@
+"""PL01 fixture: pallas kernel closing over a module-level array."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SCALE = jnp.float32(2.0)         # module-level *array* constant
+
+
+def scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * SCALE   # PL01: captured array constant
+
+
+def apply_scale(x):
+    return pl.pallas_call(
+        scale_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

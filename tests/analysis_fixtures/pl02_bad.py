@@ -1,0 +1,15 @@
+"""PL02 fixture: input_output_aliases index out of operand range."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def apply_copy(x):
+    return pl.pallas_call(
+        copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        input_output_aliases={3: 0},   # PL02: only 1 operand below
+    )(x)

@@ -1,0 +1,16 @@
+"""PT01 fixture: writer-plane partition misses a field (`c`)."""
+import dataclasses
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PartState:
+    a: jax.Array
+    b: jax.Array
+    c: jax.Array
+
+
+LEFT_LEAVES = ("a",)
+RIGHT_LEAVES = ("b",)        # PT01: `c` has no owning plane

@@ -1,0 +1,15 @@
+"""PT02 fixture: two writer planes claim the same leaf (`b`)."""
+import dataclasses
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SharedState:
+    a: jax.Array
+    b: jax.Array
+
+
+LEFT_LEAVES = ("a", "b")
+RIGHT_LEAVES = ("b",)        # PT02: `b` owned by both planes

@@ -1,0 +1,11 @@
+"""PT03 fixture: a host-typed field becomes a traced leaf."""
+import dataclasses
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Carrier:
+    x: jax.Array
+    names: dict              # PT03: dict leaf — jit rejects / retraces

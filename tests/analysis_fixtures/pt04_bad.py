@@ -1,0 +1,19 @@
+"""PT04 fixture: manual pytree node with unhashable aux_data."""
+import jax
+
+
+class Box:
+    def __init__(self, v, tag):
+        self.v = v
+        self.tag = tag
+
+
+def _flatten(box):
+    return (box.v,), [box.tag]       # PT04: list aux is unhashable
+
+
+def _unflatten(aux, leaves):
+    return Box(leaves[0], aux[0])
+
+
+jax.tree_util.register_pytree_node(Box, _flatten, _unflatten)

@@ -1,0 +1,22 @@
+"""RT* fixtures: retrace hazards at jit call sites, one per rule."""
+import jax
+import jax.numpy as jnp
+
+
+def rt01_fresh_jit_per_call(x):
+    f = jax.jit(lambda v: v + 1)   # RT01: minted and invoked per call
+    return f(x)
+
+
+def rt02_factory(scale):
+    w = jnp.ones(4)
+    # RT02: `w` is baked in as a constant; RT01 is satisfied because
+    # the jitted callable escapes via return (the factory idiom).
+    return jax.jit(lambda v: v * w + scale)
+
+
+def _rt03_fn(x, n: jax.Array):
+    return x * n
+
+
+rt03 = jax.jit(_rt03_fn, static_argnames=("n",))  # RT03: array static

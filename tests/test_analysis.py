@@ -1,0 +1,169 @@
+"""Self-tests for the repro.analysis lint suite: every rule fires
+exactly once on its known-bad fixture, the committed baseline keeps
+the real tree clean, and the baseline file round-trips (with mandatory
+justifications) through save/load/split."""
+import collections
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import load_baseline, run_analysis
+from repro.analysis.findings import (
+    Finding, Severity, dedupe_keys, save_baseline, split_new,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = "tests/analysis_fixtures"
+
+ALL_RULES = (
+    "JB01", "JB02", "JB03", "JB04",
+    "RT01", "RT02", "RT03",
+    "PT01", "PT02", "PT03", "PT04",
+    "LK01", "LK02",
+    "PL01", "PL02", "PL03",
+)
+
+RULE_FILE = {
+    "JB01": "jb_bad.py", "JB02": "jb_bad.py", "JB03": "jb_bad.py",
+    "JB04": "jb_bad.py",
+    "RT01": "rt_bad.py", "RT02": "rt_bad.py", "RT03": "rt_bad.py",
+    "PT01": "pt01_bad.py", "PT02": "pt02_bad.py", "PT03": "pt03_bad.py",
+    "PT04": "pt04_bad.py",
+    "LK01": "lk_bad.py", "LK02": "lk_bad.py",
+    "PL01": "pl01_bad.py", "PL02": "pl02_bad.py",
+    "PL03": "kernels/badwrap/ops.py",
+}
+
+
+@pytest.fixture(scope="module")
+def fixture_findings():
+    return run_analysis([FIXTURES], repo_root=ROOT)
+
+
+class TestRulesFireOnFixtures:
+    def test_every_rule_fires_exactly_once(self, fixture_findings):
+        counts = collections.Counter(f.rule for f in fixture_findings)
+        assert counts == {r: 1 for r in ALL_RULES}
+
+    @pytest.mark.parametrize("rule", ALL_RULES)
+    def test_rule_fires_in_its_fixture_file(self, fixture_findings, rule):
+        (f,) = [f for f in fixture_findings if f.rule == rule]
+        assert f.path == f"{FIXTURES}/{RULE_FILE[rule]}"
+        assert f.line > 0 and f.message and f.hint
+
+    def test_rules_filter(self):
+        only_lk = run_analysis([FIXTURES], repo_root=ROOT, rules=["LK"])
+        assert {f.rule for f in only_lk} == {"LK01", "LK02"}
+        only_locks = run_analysis([FIXTURES], repo_root=ROOT,
+                                  rules=["locks"])
+        assert [f.key for f in only_locks] == [f.key for f in only_lk]
+
+    def test_render_is_one_liner_per_field(self, fixture_findings):
+        f = fixture_findings[0]
+        text = f.render()
+        assert f.rule in text and f.path in text and f.hint in text
+
+
+class TestRepoIsClean:
+    def test_src_and_benchmarks_clean_against_baseline(self):
+        findings = run_analysis(["src", "benchmarks"], repo_root=ROOT)
+        baseline = load_baseline(os.path.join(
+            ROOT, "analysis_baseline.json"))
+        new, _old = split_new(findings, baseline)
+        assert not new, "new findings:\n" + "\n".join(
+            f.render() for f in new)
+
+    def test_baseline_entries_all_still_fire(self):
+        """A baseline key whose finding no longer exists is stale —
+        the exception was fixed, so drop the entry."""
+        findings = run_analysis(["src", "benchmarks"], repo_root=ROOT)
+        baseline = load_baseline(os.path.join(
+            ROOT, "analysis_baseline.json"))
+        live = set(dedupe_keys(findings))
+        stale = sorted(set(baseline) - live)
+        assert not stale, f"stale baseline entries: {stale}"
+
+
+def _mk(rule="JB02", path="src/x.py", scope="f", detail="float(v)",
+        line=10):
+    return Finding(rule=rule, severity=Severity.ERROR, path=path,
+                   line=line, scope=scope, message="m", hint="h",
+                   detail=detail)
+
+
+class TestBaselineRoundTrip:
+    def test_round_trip_preserves_whys_and_ordinals(self, tmp_path):
+        p = str(tmp_path / "base.json")
+        findings = [_mk(line=10), _mk(line=20), _mk(rule="LK01",
+                                                    detail="_n")]
+        keys = dedupe_keys(findings)
+        assert keys[1] == keys[0] + "#1"      # duplicate gets ordinal
+        whys = {k: f"because {i}" for i, k in enumerate(keys)}
+        save_baseline(p, findings, whys=whys)
+        loaded = load_baseline(p)
+        assert loaded == whys
+        new, old = split_new(findings, loaded)
+        assert not new and len(old) == 3
+
+    def test_line_moves_do_not_invalidate_keys(self, tmp_path):
+        p = str(tmp_path / "base.json")
+        save_baseline(p, [_mk(line=10)], whys={_mk().key: "ok"})
+        moved = [_mk(line=99)]                # same finding, new line
+        new, old = split_new(moved, load_baseline(p))
+        assert not new and len(old) == 1
+
+    def test_missing_why_is_rejected(self, tmp_path):
+        p = str(tmp_path / "base.json")
+        save_baseline(p, [_mk()])             # no whys -> empty why
+        with pytest.raises(ValueError, match="why"):
+            load_baseline(p)
+
+    def test_missing_file_is_empty_baseline(self, tmp_path):
+        assert load_baseline(str(tmp_path / "nope.json")) == {}
+
+    def test_new_finding_splits_out(self, tmp_path):
+        p = str(tmp_path / "base.json")
+        save_baseline(p, [_mk()], whys={_mk().key: "grandfathered"})
+        current = [_mk(), _mk(rule="RT02", detail="capture:w")]
+        new, old = split_new(current, load_baseline(p))
+        assert [f.rule for f in new] == ["RT02"]
+        assert [f.rule for f in old] == ["JB02"]
+
+
+class TestCli:
+    def _run(self, *args, cwd=ROOT):
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            cwd=cwd, env=env, capture_output=True, text=True)
+
+    def test_fixtures_fail_without_baseline(self):
+        r = self._run(FIXTURES, "--no-baseline")
+        assert r.returncode == 1
+        assert "new finding(s)" in r.stdout
+
+    def test_write_baseline_then_justify_then_clean(self, tmp_path):
+        base = str(tmp_path / "fixture_base.json")
+        report = str(tmp_path / "report.json")
+        r = self._run(FIXTURES, "--baseline", base, "--write-baseline")
+        assert r.returncode == 0, r.stdout + r.stderr
+        # unjustified entries are rejected outright...
+        r = self._run(FIXTURES, "--baseline", base)
+        assert r.returncode != 0
+        # ...until a human fills in every why
+        with open(base) as fh:
+            data = json.load(fh)
+        for e in data["findings"]:
+            e["why"] = "fixture: deliberately bad"
+        with open(base, "w") as fh:
+            json.dump(data, fh)
+        r = self._run(FIXTURES, "--baseline", base, "--report", report)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "all baselined" in r.stdout
+        with open(report) as fh:
+            rep = json.load(fh)
+        assert rep["total"] == len(ALL_RULES)
+        assert not rep["new"] and len(rep["baselined"]) == rep["total"]

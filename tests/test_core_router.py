@@ -8,25 +8,28 @@ from repro.core import linucb, pacer, registry, router, warmup
 from repro.core.types import (
     HyperParams, RouterConfig, init_state, log_normalized_cost,
 )
+from tests.trace_guard import staging_ok
 
 CFG = RouterConfig(d=6, max_arms=4)
 
 
 def mk_state(budget=1.0, prices=(0.1, 1.0, 10.0, 1e9), active=(1, 1, 1, 0),
              cfg=CFG, **kw):
-    return init_state(
-        cfg,
-        jnp.asarray(prices, jnp.float32),
-        jnp.asarray(prices, jnp.float32),
-        budget,
-        active=jnp.asarray(active, bool),
-        **kw,
-    )
+    with staging_ok():  # state init transfers on purpose
+        return init_state(
+            cfg,
+            jnp.asarray(prices, jnp.float32),
+            jnp.asarray(prices, jnp.float32),
+            budget,
+            active=jnp.asarray(active, bool),
+            **kw,
+        )
 
 
 def rand_x(seed=0, d=CFG.d):
-    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
-    return x.at[-1].set(1.0)
+    with staging_ok():  # PRNG key creation transfers on purpose
+        x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+        return x.at[-1].set(1.0)
 
 
 class TestShermanMorrison:

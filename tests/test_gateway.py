@@ -24,6 +24,7 @@ from repro.serving.feedback_store import (
 )
 from repro.serving.gateway import MicroBatcher, RouterGateway
 from repro.serving.telemetry import Telemetry
+from tests.trace_guard import assert_traces, staging_ok
 
 CFG = RouterConfig(d=8, max_arms=4, forced_pulls=6)
 STORES = [InMemoryFeedbackStore,
@@ -33,12 +34,13 @@ STORE_IDS = ["inmemory", "sqlite"]
 
 def mk_state(cfg=CFG, prices=(0.1, 1.0, 10.0, 1e9), active=(1, 1, 1, 0),
              budget=1.0, seed=0):
-    prices = jnp.asarray(prices[: cfg.max_arms], jnp.float32)
-    return init_state(
-        cfg, prices, prices, budget,
-        active=jnp.asarray(active[: cfg.max_arms], bool),
-        key=jax.random.PRNGKey(seed),
-    )
+    with staging_ok():  # state/key init transfers on purpose
+        prices = jnp.asarray(prices[: cfg.max_arms], jnp.float32)
+        return init_state(
+            cfg, prices, prices, budget,
+            active=jnp.asarray(active[: cfg.max_arms], bool),
+            key=jax.random.PRNGKey(seed),
+        )
 
 
 def blocks_of(n_blocks, B, d=CFG.d, seed=0):
@@ -65,19 +67,23 @@ def sync_fold(state, stream, feedback_order=None):
     arms_out = []
     if feedback_order is None:
         for _ids, X, r, c in stream:
+            X = jnp.asarray(X)                 # explicit staging
             dec, state = sel(state, X)
             arms = np.asarray(dec.arms)
             arms_out.append(arms)
-            state = upd(state, jnp.asarray(arms, jnp.int32), X, r, c)
+            state = upd(state, jnp.asarray(arms, jnp.int32), X,
+                        jnp.asarray(r), jnp.asarray(c))
         return state, arms_out
     decs = []
     for _ids, X, r, c in stream:
+        X = jnp.asarray(X)
         dec, state = sel(state, X)
         decs.append((np.asarray(dec.arms), X, r, c))
         arms_out.append(decs[-1][0])
     for i in feedback_order:
         arms, X, r, c = decs[i]
-        state = upd(state, jnp.asarray(arms, jnp.int32), X, r, c)
+        state = upd(state, jnp.asarray(arms, jnp.int32), X,
+                    jnp.asarray(r), jnp.asarray(c))
     return state, arms_out
 
 
@@ -90,6 +96,7 @@ def assert_states_equal(a, b, leaves=LEARN_LEAVES + SELECT_LEAVES):
                 np.asarray(x), np.asarray(y), err_msg=name)
 
 
+@pytest.mark.usefixtures("no_implicit_transfers", "no_leaked_tracers")
 class TestBitIdentity:
     def test_gateway_matches_sync_path_at_cadence_1(self):
         """Same stream through the gateway (route -> enqueue -> tick per
@@ -433,6 +440,7 @@ class TestTelemetryContract:
         assert "paretobandit_store_ttl_s -1" in text
 
 
+@pytest.mark.usefixtures("no_implicit_transfers", "no_leaked_tracers")
 class TestZeroRetraces:
     def test_publishes_and_second_gateway_do_not_retrace(self):
         """Snapshot publishes, control retunes and a SECOND gateway on
@@ -443,17 +451,17 @@ class TestZeroRetraces:
         res = gw.route_block(ids, X)
         gw.enqueue_feedback(ids, res.arms, r, c)
         gw.learn_tick()                      # both programs now traced
-        before = router.TRACE_COUNT[0]
-        for ids, X, r, c in stream[1:]:
-            res = gw.route_block(ids, X)
-            gw.enqueue_feedback(ids, res.arms, r, c)
-            gw.learn_tick()
-        gw.apply_control(
-            lambda s: dataclasses.replace(
-                s, hyper=dataclasses.replace(
-                    s.hyper, alpha=jnp.float32(0.02))))
-        gw2 = RouterGateway(CFG, mk_state(seed=5))
-        res = gw2.route_block(ids, X)
-        gw2.enqueue_feedback(ids, res.arms, r, c)
-        gw2.learn_tick()
-        assert router.TRACE_COUNT[0] == before
+        with assert_traces(router, 0):
+            for ids, X, r, c in stream[1:]:
+                res = gw.route_block(ids, X)
+                gw.enqueue_feedback(ids, res.arms, r, c)
+                gw.learn_tick()
+            with staging_ok():  # control-plane constant, not hot path
+                gw.apply_control(
+                    lambda s: dataclasses.replace(
+                        s, hyper=dataclasses.replace(
+                            s.hyper, alpha=jnp.float32(0.02))))
+            gw2 = RouterGateway(CFG, mk_state(seed=5))
+            res = gw2.route_block(ids, X)
+            gw2.enqueue_feedback(ids, res.arms, r, c)
+            gw2.learn_tick()

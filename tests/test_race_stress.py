@@ -1,0 +1,198 @@
+"""Threaded race-stress harness for the serving gateway (DESIGN.md §13).
+
+Hammers one ``RouterGateway`` from four concurrent roles — router
+threads (route + feedback), a learner thread (ticks), a control thread
+(hyper retunes + budget edits through ``apply_control``), and a reader
+thread spinning on ``handle.read()`` — then checks the invariants the
+lock/epoch/publish design promises:
+
+  * no thread raises;
+  * reader-visible snapshot versions are monotonically non-decreasing
+    (a torn or rolled-back version would show up here);
+  * every snapshot the reader saw is internally consistent
+    (version/step pairs never regress against each other);
+  * the host step mirror agrees with the device clock once quiesced;
+  * learned statistics stay finite under arbitrary interleavings.
+
+The GIL serialises Python bytecode but NOT the regions between lock
+acquisitions — grab/compute/merge in ``learn_tick`` deliberately runs
+off-lock, which is exactly the window this harness stresses.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.types import RouterConfig
+from repro.serving.gateway import RouterGateway
+
+from tests.test_gateway import mk_state
+
+CFG = RouterConfig(d=8, max_arms=4, forced_pulls=0)
+
+N_ROUTER_THREADS = 3
+BLOCKS_PER_THREAD = 12
+B = 8
+
+
+def _mk_blocks(thread_idx, rng):
+    """Disjoint request-id ranges per thread."""
+    base = thread_idx * BLOCKS_PER_THREAD * B
+    out = []
+    for j in range(BLOCKS_PER_THREAD):
+        ids = list(range(base + j * B, base + (j + 1) * B))
+        X = rng.standard_normal((B, CFG.d)).astype(np.float32)
+        r = rng.uniform(0.2, 0.9, B).astype(np.float32)
+        c = rng.uniform(1e-5, 1e-3, B).astype(np.float32)
+        out.append((ids, X, r, c))
+    return out
+
+
+class TestGatewayRaceStress:
+    def test_no_torn_snapshots_under_contention(self):
+        gw = RouterGateway(CFG, mk_state(cfg=CFG))
+        errors = []
+        stop = threading.Event()
+        seen = []            # (version, step) pairs the reader observed
+
+        def guard(fn):
+            def run():
+                try:
+                    fn()
+                except BaseException as e:  # noqa: BLE001 - reraised below
+                    errors.append(e)
+                    stop.set()
+            return run
+
+        def router_role(idx):
+            rng = np.random.default_rng(100 + idx)
+            blocks = _mk_blocks(idx, rng)
+
+            def run():
+                for ids, X, r, c in blocks:
+                    if stop.is_set():
+                        return
+                    res = gw.route_block(ids, X)
+                    gw.enqueue_feedback(ids, res.arms, r, c)
+            return run
+
+        def learner_role():
+            while not stop.is_set():
+                gw.learn_tick()
+                time.sleep(0.0005)
+
+        def control_role():
+            alphas = [0.02, 0.05, 0.1, 0.02, 0.05]
+            import dataclasses
+
+            import jax.numpy as jnp
+            for a in alphas:
+                if stop.is_set():
+                    return
+                gw.apply_control(
+                    lambda s, a=a: dataclasses.replace(
+                        s, hyper=dataclasses.replace(
+                            s.hyper, alpha=jnp.float32(a))))
+                time.sleep(0.002)
+
+        def reader_role():
+            while not stop.is_set():
+                snap = gw.handle.read()
+                seen.append((snap.version, snap.step))
+                time.sleep(0.0001)  # bound the sample list, stay hot
+
+        threads = [threading.Thread(target=guard(router_role(i)))
+                   for i in range(N_ROUTER_THREADS)]
+        threads.append(threading.Thread(target=guard(learner_role),
+                                        daemon=True))
+        threads.append(threading.Thread(target=guard(control_role)))
+        threads.append(threading.Thread(target=guard(reader_role),
+                                        daemon=True))
+        for t in threads:
+            t.start()
+        # Routers and control run to completion; then quiesce the
+        # learner/reader loops.
+        for t in threads[:N_ROUTER_THREADS]:
+            t.join(timeout=60)
+        threads[N_ROUTER_THREADS + 1].join(timeout=60)  # control
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads), "stress hung"
+        assert not errors, f"thread raised: {errors[0]!r}"
+
+        # Final tick applies any feedback still pending at stop time.
+        gw.learn_tick()
+
+        # -- no torn version: reader saw a non-decreasing sequence ----
+        versions = [v for v, _ in seen]
+        assert versions == sorted(versions), (
+            "snapshot versions regressed under contention")
+        # step stamped on a later version never moves backwards either
+        by_version = {}
+        for v, s in seen:
+            by_version.setdefault(v, set()).add(s)
+        assert all(len(s) == 1 for s in by_version.values()), (
+            "one version published with two different steps (torn)")
+        ordered = sorted(by_version)
+        steps = [max(by_version[v]) for v in ordered]
+        assert steps == sorted(steps)
+
+        # -- host/device clocks agree once quiesced -------------------
+        routed = N_ROUTER_THREADS * BLOCKS_PER_THREAD * B
+        assert gw._t_host == routed
+        assert int(gw.live_state.t) == routed
+
+        # -- learned statistics stay finite ---------------------------
+        final = gw.handle.read().state
+        assert np.isfinite(np.asarray(final.A_inv)).all()
+        assert np.isfinite(np.asarray(final.theta)).all()
+        assert np.isfinite(np.asarray(final.b)).all()
+
+        # -- the learner plane actually ran under contention ----------
+        m = gw.telemetry.metrics()
+        assert m.get("publishes_total", 0) >= 1
+        assert gw.handle.version == int(m["publishes_total"]) + 5, (
+            "every publish (learn ticks + 5 control ops) bumps exactly "
+            "one version")
+
+    def test_epoch_retry_never_clobbers_control_write(self):
+        """A learn tick racing a control op must retry, not merge a
+        result computed against the pre-op state (the §13 epoch rule).
+        Forced here by applying control between grab and merge."""
+        import dataclasses
+
+        import jax.numpy as jnp
+
+        gw = RouterGateway(CFG, mk_state(cfg=CFG))
+        rng = np.random.default_rng(7)
+        ids = list(range(B))
+        X = rng.standard_normal((B, CFG.d)).astype(np.float32)
+        res = gw.route_block(ids, X)
+        gw.enqueue_feedback(ids, res.arms,
+                            rng.uniform(0.2, 0.9, B).astype(np.float32),
+                            rng.uniform(1e-5, 1e-3, B).astype(np.float32))
+
+        real_update = gw._update
+        fired = threading.Event()
+
+        def update_with_racing_control(*args):
+            out = real_update(*args)
+            if not fired.is_set():
+                fired.set()
+                gw.apply_control(
+                    lambda s: dataclasses.replace(
+                        s, pacer=dataclasses.replace(
+                            s.pacer, budget=jnp.float32(0.25))))
+            return out
+
+        gw._update = update_with_racing_control
+        snap = gw.learn_tick()
+        assert fired.is_set()
+        assert snap is not None
+        # Retry happened, and because ``pacer`` is a LEARN leaf, a merge
+        # of the pre-op result would have clobbered the control write —
+        # the surviving budget is direct evidence of the retry path.
+        assert gw.telemetry.metrics()["learn_retries_total"] >= 1
+        assert float(gw.live_state.pacer.budget) == pytest.approx(0.25)

@@ -18,6 +18,7 @@ from repro.core.scenario import (
 )
 from repro.core.types import HyperParams, RouterConfig
 from repro.launch import mesh as mesh_lib
+from tests.trace_guard import assert_traces
 
 CFG = RouterConfig()
 SEEDS = (0, 1, 2)
@@ -89,6 +90,7 @@ class TestGridEquivalence:
         _assert_bitwise(grid.condition(1), off)
 
 
+@pytest.mark.usefixtures("no_implicit_transfers", "no_leaked_tracers")
 class TestOneCompiledProgram:
     def test_full_pareto_grid_single_trace(self, env, priors):
         """The paper's 7-budget x 20-seed Fig. 1 grid is ONE trace."""
@@ -97,16 +99,15 @@ class TestOneCompiledProgram:
         BUDGET_SWEEP = (1.0e-4, 2.3e-4, 3.0e-4, 6.6e-4, 1.0e-3, 1.9e-3,
                         4.0e-3)
         seeds = tuple(range(20))
-        before = sweep.TRACE_COUNT[0]
-        grid = sweep.run_grid(CFG, env, BUDGET_SWEEP, seeds=seeds,
-                              priors=priors, n_eff=1164.0)
-        assert sweep.TRACE_COUNT[0] == before + 1, (
-            "7x20 grid must compile as one program")
+        with assert_traces(sweep, 1, what="7x20 grid must compile as "
+                                          "one program"):
+            grid = sweep.run_grid(CFG, env, BUDGET_SWEEP, seeds=seeds,
+                                  priors=priors, n_eff=1164.0)
         assert grid.arms.shape == (7, 20, env.n)
         # New budget values, same shapes: the program is reused as-is.
-        sweep.run_grid(CFG, env, [2 * b for b in BUDGET_SWEEP], seeds=seeds,
-                       priors=priors, n_eff=1164.0)
-        assert sweep.TRACE_COUNT[0] == before + 1, "fabric retraced"
+        with assert_traces(sweep, 0, what="fabric retraced"):
+            sweep.run_grid(CFG, env, [2 * b for b in BUDGET_SWEEP],
+                           seeds=seeds, priors=priors, n_eff=1164.0)
 
     def test_grid_result_accessors(self, env):
         grid = sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS)
@@ -150,10 +151,9 @@ class TestScenarioGrid:
 
     def test_single_trace_and_budget_reuse(self, env):
         sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS, seeds=SEEDS)
-        before = sweep.TRACE_COUNT[0]
-        sweep.run_scenario_grid(CFG, self.SPEC, env, (2e-4, 5e-4, 2e-3),
-                                seeds=SEEDS)
-        assert sweep.TRACE_COUNT[0] == before, "scenario fabric retraced"
+        with assert_traces(sweep, 0, what="scenario fabric retraced"):
+            sweep.run_scenario_grid(CFG, self.SPEC, env,
+                                    (2e-4, 5e-4, 2e-3), seeds=SEEDS)
 
     def test_batched_plane(self, env):
         grid = sweep.run_scenario_grid(CFG, self.SPEC, env, BUDGETS[:2],
@@ -193,13 +193,12 @@ class TestScenarioParamGrid:
 
     def test_price_multiplier_grid_bitwise_single_trace(self, env):
         b_flat, m_flat = self._grid_axes(self.MULTS)
-        before = sweep.TRACE_COUNT[0]
-        grid = sweep.run_scenario_grid(
-            CFG, self._price_spec(Param("mult")), env, b_flat, seeds=SEEDS,
-            scenario_params=ScenarioParams(mult=m_flat))
-        assert sweep.TRACE_COUNT[0] == before + 1, (
-            "the whole (multiplier x budget x seed) family must compile "
-            "as one program")
+        with assert_traces(sweep, 1, what="the whole (multiplier x "
+                           "budget x seed) family must compile as one "
+                           "program"):
+            grid = sweep.run_scenario_grid(
+                CFG, self._price_spec(Param("mult")), env, b_flat,
+                seeds=SEEDS, scenario_params=ScenarioParams(mult=m_flat))
         for i, (m, b) in enumerate(zip(m_flat, b_flat)):
             res = evaluate.run_scenario(
                 CFG, self._price_spec(float(m)), env, b, seeds=SEEDS)
@@ -208,11 +207,10 @@ class TestScenarioParamGrid:
 
     def test_quality_target_grid_bitwise_single_trace(self, env):
         b_flat, t_flat = self._grid_axes(self.TARGETS)
-        before = sweep.TRACE_COUNT[0]
-        grid = sweep.run_scenario_grid(
-            CFG, self._quality_spec(Param("target")), env, b_flat,
-            seeds=SEEDS, scenario_params=ScenarioParams(target=t_flat))
-        assert sweep.TRACE_COUNT[0] == before + 1
+        with assert_traces(sweep, 1):
+            grid = sweep.run_scenario_grid(
+                CFG, self._quality_spec(Param("target")), env, b_flat,
+                seeds=SEEDS, scenario_params=ScenarioParams(target=t_flat))
         for i, (t, b) in enumerate(zip(t_flat, b_flat)):
             res = evaluate.run_scenario(
                 CFG, self._quality_spec(float(t)), env, b, seeds=SEEDS)
@@ -223,12 +221,11 @@ class TestScenarioParamGrid:
         spec = self._price_spec(Param("mult"))
         sweep.run_scenario_grid(CFG, spec, env, b_flat, seeds=SEEDS,
                                 scenario_params=ScenarioParams(mult=m_flat))
-        before = sweep.TRACE_COUNT[0]
-        sweep.run_scenario_grid(
-            CFG, spec, env, b_flat, seeds=SEEDS,
-            scenario_params=ScenarioParams(mult=2.0 * m_flat))
-        assert sweep.TRACE_COUNT[0] == before, (
-            "payload values are data; re-running must not retrace")
+        with assert_traces(sweep, 0, what="payload values are data; "
+                                          "re-running must not retrace"):
+            sweep.run_scenario_grid(
+                CFG, spec, env, b_flat, seeds=SEEDS,
+                scenario_params=ScenarioParams(mult=2.0 * m_flat))
 
     def test_param_edit_equals_stacked_leaves(self, env):
         """Per-condition ``param_edit`` entries fold into the same
@@ -471,10 +468,9 @@ class TestChunkedFabric:
 
     def test_chunked_single_trace(self, env):
         sweep.run_grid(CFG, env, BUDGETS, seeds=SEEDS, chunk_size=3)
-        before = sweep.TRACE_COUNT[0]
-        sweep.run_grid(CFG, env, (2e-4, 5e-4, 2e-3), seeds=SEEDS,
-                       chunk_size=3)
-        assert sweep.TRACE_COUNT[0] == before, "chunked fabric retraced"
+        with assert_traces(sweep, 0, what="chunked fabric retraced"):
+            sweep.run_grid(CFG, env, (2e-4, 5e-4, 2e-3), seeds=SEEDS,
+                           chunk_size=3)
 
     def test_non_divisor_chunk_rejected(self, env):
         with pytest.raises(ValueError, match="divisor"):

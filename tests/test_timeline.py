@@ -16,6 +16,7 @@ from repro.core.scenario import (
     retime,
 )
 from repro.core.types import RouterConfig
+from tests.trace_guard import assert_traces
 
 CFG = RouterConfig(max_arms=4)
 SEEDS = (0, 1, 2)
@@ -224,11 +225,10 @@ class TestTraceCountContracts:
             QualityShift(80, MISTRAL, 0.7)), stream_seed_base=927)
         evaluate.run_scenario(CFG, spec, env, 6.6e-4, seeds=(0,),
                               timeline=Timeline((40, 80)))
-        count = scenario.TRACE_COUNT[0]
-        evaluate.run_scenario(CFG, spec, env, 3.0e-4, seeds=(1,),
-                              timeline=Timeline((70, 15), horizon=100))
-        assert scenario.TRACE_COUNT[0] == count, (
-            "event times/horizon must be data, not structure")
+        with assert_traces(scenario, 0, what="event times/horizon must "
+                                             "be data, not structure"):
+            evaluate.run_scenario(CFG, spec, env, 3.0e-4, seeds=(1,),
+                                  timeline=Timeline((70, 15), horizon=100))
 
     def test_grid_no_retrace_on_new_timelines(self, env):
         spec = ScenarioSpec(horizon=120, events=(
@@ -237,12 +237,12 @@ class TestTraceCountContracts:
         sweep.run_scenario_grid(CFG, spec, env, budgets, seeds=(0, 1),
                                 timelines=[Timeline((30,)),
                                            Timeline((90,))])
-        count = sweep.TRACE_COUNT[0]
-        sweep.run_scenario_grid(CFG, spec, env, budgets, seeds=(0, 1),
-                                timelines=[Timeline((55,), horizon=80),
-                                           Timeline((5,), horizon=110)])
-        assert sweep.TRACE_COUNT[0] == count, (
-            "grid timelines must re-enter one compiled program")
+        with assert_traces(sweep, 0, what="grid timelines must re-enter "
+                                          "one compiled program"):
+            sweep.run_scenario_grid(
+                CFG, spec, env, budgets, seeds=(0, 1),
+                timelines=[Timeline((55,), horizon=80),
+                           Timeline((5,), horizon=110)])
 
 
 class TestGridTimelines:

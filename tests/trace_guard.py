@@ -1,0 +1,63 @@
+"""Shared zero-retrace assertion helper.
+
+Every compiled-program module (``repro.core.router`` / ``scenario`` /
+``sweep``) keeps a ``TRACE_COUNT = [0]`` counter incremented inside its
+traced bodies — it moves only at trace time, so a frozen counter is a
+direct witness that a call re-entered an already-compiled program
+(DESIGN.md §9). Tests and benchmark gates used to copy-paste the
+before/after bookkeeping; this context manager is the one shared
+spelling:
+
+    from tests.trace_guard import assert_traces
+
+    with assert_traces(sweep, 1, what="7x20 grid compiles once"):
+        sweep.run_grid(...)
+    with assert_traces(sweep, 0):          # reuse: no retrace allowed
+        sweep.run_grid(...)
+
+The yielded record exposes ``before``/``after``/``delta`` for benchmark
+rows that report the frozen counter value.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+
+
+@contextlib.contextmanager
+def staging_ok():
+    """Marks a block as deliberate init-time host->device staging
+    (PRNG key creation, state construction). Inside a test running
+    under the ``no_implicit_transfers`` fixture, helpers wrapped in
+    this still work; the guard keeps biting in the steady-state code
+    between them."""
+    with jax.transfer_guard("allow"):
+        yield
+
+
+@dataclasses.dataclass
+class TraceDelta:
+    before: int
+    after: Optional[int] = None
+
+    @property
+    def delta(self) -> int:
+        assert self.after is not None, "read .delta after the block"
+        return self.after - self.before
+
+
+@contextlib.contextmanager
+def assert_traces(module, n: int = 0, *, what: str = ""):
+    """Assert ``module.TRACE_COUNT`` advances by exactly ``n`` across
+    the block. ``n=0`` is the zero-retrace gate; ``n=1`` asserts a
+    whole family compiled as one program."""
+    rec = TraceDelta(before=module.TRACE_COUNT[0])
+    yield rec
+    rec.after = module.TRACE_COUNT[0]
+    label = what or f"{getattr(module, '__name__', module)} traces"
+    assert rec.delta == n, (
+        f"{label}: expected exactly {n} trace(s), got {rec.delta} "
+        f"(TRACE_COUNT {rec.before} -> {rec.after})")
