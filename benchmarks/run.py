@@ -31,6 +31,8 @@ BENCHES = [
     ("sweep", "Sweep fabric: looped-vs-fabric grid wall clock"),
     ("gateway",
      "Serving gateway: decoupled-plane decisions/sec + select p95"),
+    ("tenants",
+     "Multi-tenant pacing: per-tenant fold identity + 0.4% compliance"),
     ("latency", "Tables 10-11: routing latency microbenchmark"),
     ("roofline", "Roofline: dry-run roofline table"),
 ]
@@ -66,7 +68,7 @@ def main(argv=None) -> None:
                 mod.param_grid(smoke=args.quick)
             elif name == "scenario_mc":
                 mod.mc_grid(smoke=args.quick)
-            elif name == "gateway":
+            elif name in ("gateway", "tenants"):
                 mod.main(smoke=args.quick)
             elif args.quick and name in ("pareto", "cost_drift",
                                          "degradation", "onboarding",

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import router, scenario as scenario_lib, warmup
+from repro.core import router, scenario as scenario_lib, tenancy, warmup
 from repro.core.simulator import Environment
 from repro.core.types import (
     HYPER_FIELDS, ArmPrior, HyperParams, RouterConfig, RouterState,
@@ -139,6 +139,32 @@ def _hyper_stack(cfg: RouterConfig, hyper: Optional[HyperParams], n: int):
     return HyperParams(**leaves), HyperParams(**axes)
 
 
+def _tenant_stack(tenants: "tenancy.TenantTable", n: int):
+    """(table, vmap in_axes) for a tenant table that is either one shared
+    (T,) table — broadcast to every stacked state — or one with (n, T)
+    leaves (a per-state axis, the sweep fabric's flattened grid). Budgets
+    are positivity-checked here (host boundary, satellite of the Eq. 4
+    division hazard) when concrete."""
+    ndim = jnp.ndim(tenants.budget)
+    if not isinstance(tenants.budget, jax.core.Tracer):
+        b = np.asarray(tenants.budget)
+        if not np.all(b > 0.0):
+            raise ValueError(
+                "tenant budgets must be > 0 ($/request ceilings); got "
+                f"min={b.min()!r}")
+    if ndim == 1:
+        axes = tenancy.TenantTable(lam=None, c_ema=None, budget=None,
+                                   enabled=None, pulls=None, spend=None)
+        return tenants, axes
+    if ndim == 2 and tenants.budget.shape[0] == n:
+        axes = tenancy.TenantTable(lam=0, c_ema=0, budget=0,
+                                   enabled=0, pulls=0, spend=0)
+        return tenants, axes
+    raise ValueError(
+        f"tenants.budget must be (T,) shared or ({n}, T) per-state; got "
+        f"shape {jnp.shape(tenants.budget)}")
+
+
 def make_states(
     cfg: RouterConfig,
     env: Environment,
@@ -150,6 +176,7 @@ def make_states(
     pacer_enabled: bool = True,
     active_arms: Optional[int] = None,
     hyper: Optional[HyperParams] = None,
+    tenants: Optional["tenancy.TenantTable"] = None,
 ) -> RouterState:
     """Stacked initial states, one per seed: a single ``jax.vmap`` over
     (PRNG key, budget, hyper, n_eff) tuples — everything else broadcasts
@@ -167,9 +194,18 @@ def make_states(
     n_eff from each cell's gamma via Eq. 13), applied inside the same
     vmap — all warm or all cold; a mixed stack would need the warmup
     branch to be data-dependent (use per-condition ``condition_edits``
-    for that instead)."""
+    for that instead).
+
+    ``tenants`` attaches a per-tenant pacer table (DESIGN.md §15): one
+    shared (T,) ``tenancy.TenantTable`` copied into every state, or one
+    with (len(seeds), T) stacked leaves for a per-state tenant axis.
+    """
     k = env.k
     assert k <= cfg.max_arms, (k, cfg.max_arms)
+    b_host = np.asarray(budget, np.float32)
+    if not np.all(b_host > 0.0):
+        raise ValueError(
+            f"budget must be > 0 ($/request ceiling); got {budget!r}")
     pad = cfg.max_arms - k
     preq = np.concatenate([env.prices_per_req, np.full(pad, 1e9)]).astype(np.float32)
     p1k = np.concatenate([env.prices_per_1k, np.full(pad, 1e9)]).astype(np.float32)
@@ -205,8 +241,17 @@ def make_states(
     budgets = jnp.broadcast_to(
         jnp.asarray(budget, jnp.float32), (len(seeds),))
     ne_in = jnp.asarray(ne) if ne.ndim else float(ne)
-    return jax.vmap(one, in_axes=(0, 0, hp_axes, 0 if ne.ndim else None))(
-        keys, budgets, hp, ne_in)
+    ne_ax = 0 if ne.ndim else None
+    if tenants is None:
+        return jax.vmap(one, in_axes=(0, 0, hp_axes, ne_ax))(
+            keys, budgets, hp, ne_in)
+    tab, tab_axes = _tenant_stack(tenants, len(seeds))
+
+    def one_t(key, b, h, ne_, tb):
+        return dataclasses.replace(one(key, b, h, ne_), tenants=tb)
+
+    return jax.vmap(one_t, in_axes=(0, 0, hp_axes, ne_ax, tab_axes))(
+        keys, budgets, hp, ne_in, tab)
 
 
 def _pad_env_arrays(cfg: RouterConfig, env: Environment):
@@ -266,6 +311,8 @@ def run(
     return_states: bool = False,
     batch_size: Optional[int] = None,
     hyper: Optional[HyperParams] = None,
+    tenants: Optional["tenancy.TenantTable"] = None,
+    tenant_ids: Optional[np.ndarray] = None,
 ):
     """Vectorised multi-seed run of Algorithm 1 over an environment stream.
 
@@ -282,18 +329,46 @@ def run(
 
     ``hyper`` overrides ``cfg.hyper`` for the run — a *data* change, so
     sweeping it re-enters the same compiled program (DESIGN.md §9).
+
+    ``tenants`` + ``tenant_ids`` switch the run to the tenant plane
+    (DESIGN.md §15): ``tenants`` is a shared (T,) or per-seed (S, T)
+    ``tenancy.TenantTable`` and ``tenant_ids`` tags each stream step
+    with its tenant — (L,) shared by every seed or (S, L) per seed.
+    Requires ``batch_size`` (tenant routing runs on the batched data
+    plane). Tables and ids are data: new budgets or a new mix re-enter
+    the same compiled program with zero retraces.
     """
+    if (tenants is None) != (tenant_ids is None) and states is None:
+        raise ValueError("pass tenants and tenant_ids together")
     xs, rmat, cmat, stream_axes, env0 = build_run_streams(
         cfg, env, seeds, shuffle)
     if states is None:
         states = make_states(
             cfg, env0, budget, seeds,
             priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
-            hyper=hyper,
+            hyper=hyper, tenants=tenants,
         )
 
-    run_fn = _cached_run_fn(cfg.statics, stream_axes, batch_size)
-    finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
+    if tenant_ids is not None:
+        if not batch_size:
+            raise ValueError(
+                "tenant runs need batch_size: tenant routing is a batched-"
+                "data-plane feature (DESIGN.md §15)")
+        tids = jnp.asarray(tenant_ids, jnp.int32)
+        if tids.ndim == 1:
+            tid_axes = None
+        elif tids.ndim == 2 and tids.shape[0] == len(seeds):
+            tid_axes = 0
+        else:
+            raise ValueError(
+                f"tenant_ids must be (L,) shared or ({len(seeds)}, L) "
+                f"per-seed; got shape {tids.shape}")
+        run_fn = _cached_run_fn_tenants(
+            cfg.statics, stream_axes, batch_size, tid_axes)
+        finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat, tids)
+    else:
+        run_fn = _cached_run_fn(cfg.statics, stream_axes, batch_size)
+        finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat)
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
         costs=np.asarray(c), lams=np.asarray(lam),
@@ -330,6 +405,30 @@ def _cached_run_fn(statics, stream_axes, batch_size=None):
     )
 
 
+def stream_body_tenants(cfg: RouterConfig, batch_size):
+    """Tenant-mode per-seed scan program: ``stream_body`` with a
+    ``tenant_ids`` (L,) operand threaded to the batched data plane."""
+
+    def one_seed(state, x, rm, cm, tids):
+        return router.run_stream_batched(cfg, state, x, rm, cm, batch_size,
+                                         tenant_ids=tids)
+
+    return one_seed
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_run_fn_tenants(statics, stream_axes, batch_size, tid_axes):
+    """Tenant-mode companion of ``_cached_run_fn``: the extra key is the
+    tenant-id layout (None = one mix shared by every seed, 0 = per-seed
+    (S, L) mixes). Tables and ids are data — new tenant budgets never
+    retrace."""
+    one_seed = stream_body_tenants(statics, batch_size)
+    return jax.jit(
+        jax.vmap(one_seed, in_axes=(0, stream_axes, stream_axes, stream_axes,
+                                    tid_axes))
+    )
+
+
 def run_scenario(
     cfg: RouterConfig,
     spec: "scenario_lib.ScenarioSpec",
@@ -345,6 +444,8 @@ def run_scenario(
     hyper: Optional[HyperParams] = None,
     scenario_params: Optional["scenario_lib.ScenarioParams"] = None,
     timeline: Optional["scenario_lib.Timeline"] = None,
+    tenants: Optional["tenancy.TenantTable"] = None,
+    tenant_ids: Optional[np.ndarray] = None,
 ):
     """Run a declarative ``ScenarioSpec`` over ``env`` as ONE jitted,
     seed-vmapped segmented-scan call (scenario.py).
@@ -371,10 +472,16 @@ def run_scenario(
     """
     params = scenario_lib.resolve_params(spec, scenario_params)
     full = params.updated(**scenario_lib.auto_param_values(spec))
+    if (tenants is None) != (tenant_ids is None):
+        raise ValueError("pass tenants and tenant_ids together")
+    if tenants is not None and timeline is not None:
+        raise NotImplementedError(
+            "tenant runs are not wired through the masked timeline "
+            "runner; use the concrete scenario path (timeline=None)")
     states = make_states(
         cfg, env, budget, seeds,
         priors=priors, n_eff=n_eff, pacer_enabled=pacer_enabled,
-        active_arms=spec.init_active, hyper=hyper,
+        active_arms=spec.init_active, hyper=hyper, tenants=tenants,
     )
     if timeline is not None:
         rspec = scenario_lib.retime(spec, timeline)
@@ -402,10 +509,23 @@ def run_scenario(
         return res
     xs, rmat, cmat = scenario_lib.build_streams(cfg, spec, env, seeds,
                                                 params=params)
-    run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size)
-    finals, (arms, r, c, lam) = run_fn(
-        states, xs, rmat, cmat,
-        scenario_lib.broadcast_params(full, len(seeds)))
+    run_fn = scenario_lib.compiled_runner(cfg, spec, env, batch_size,
+                                          with_tenants=tenants is not None)
+    bp = scenario_lib.broadcast_params(full, len(seeds))
+    if tenants is not None:
+        tids = np.asarray(tenant_ids, np.int32)
+        if tids.ndim == 1:
+            tids = np.broadcast_to(tids, (len(seeds),) + tids.shape)
+        if tids.shape != (len(seeds), spec.horizon):
+            raise ValueError(
+                f"tenant_ids must be ({spec.horizon},) shared or "
+                f"({len(seeds)}, {spec.horizon}) per-seed; got "
+                f"{np.asarray(tenant_ids).shape}")
+        finals, (arms, r, c, lam) = run_fn(
+            states, xs, rmat, cmat, bp,
+            jnp.asarray(np.ascontiguousarray(tids)))
+    else:
+        finals, (arms, r, c, lam) = run_fn(states, xs, rmat, cmat, bp)
     res = RunResult(
         arms=np.asarray(arms), rewards=np.asarray(r),
         costs=np.asarray(c), lams=np.asarray(lam),

@@ -125,7 +125,7 @@ def ucb_scores_batch(
     c_tilde: Array,   # (K,)
     X: Array,         # (B, d) block of request contexts
     dt: Array,        # (K,) staleness per arm, shared by the block
-    lam: Array,       # scalar dual variable
+    lam: Array,       # scalar dual variable, or (B,) per-request duals
 ) -> Array:
     """Eq. 2 scores for a block of B contexts against all arms: (B, K).
 
@@ -133,10 +133,18 @@ def ucb_scores_batch(
     Pallas ``linucb_score`` kernel computes the same quantity on TPU. Each
     arm's quadratic form is one (B, d) x (d, d) matmul, so the whole block
     is scored in O(K B d^2) with no per-request dispatch.
+
+    ``lam`` may be a (B,) vector of per-request duals (the tenant plane
+    gathers each request's tenant lambda, §15). Only the cost penalty
+    depends on lambda and it is elementwise, so row b of the vector path
+    is bit-identical to scoring the whole block under scalar ``lam[b]``.
     """
     exploit = X @ theta.T                                   # (B, K)
     t = jnp.einsum("bd,kde->bke", X, A_inv)
     quad = jnp.maximum(jnp.einsum("bke,be->bk", t, X), 0.0)
     v = quad / staleness_inflation(cfg, hp, dt)[None, :]
+    if jnp.ndim(lam) == 1:
+        penalty = (hp.lambda_c + lam)[:, None] * c_tilde[None, :]   # (B, K)
+        return exploit + hp.alpha * jnp.sqrt(v) - penalty
     penalty = (hp.lambda_c + lam) * c_tilde
     return exploit + hp.alpha * jnp.sqrt(v) - penalty[None, :]

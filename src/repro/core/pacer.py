@@ -15,9 +15,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import HyperParams, PacerState
+from repro.core.types import HyperParams, PacerState, _concrete
 
 Array = jax.Array
+
+# Traced floor for the Eq. 4 gradient's 1/B. Budgets are validated > 0 at
+# every host boundary (``set_budget``, ``evaluate.make_states``,
+# ``tenancy.make_table``), but traced paths — scenario ``BudgetChange``
+# payloads, stacked grid leaves — can still carry a zero through a
+# sweep's param axis; the floor keeps the dual finite instead of NaN.
+BUDGET_EPS = 1e-12
+
+
+def validate_budget(budget, *, what: str = "budget") -> None:
+    """Host-boundary positivity check. Concrete non-positive budgets
+    raise ``ValueError``; traced or stacked values pass through (the
+    ``BUDGET_EPS`` floor in ``pacer_update`` covers those)."""
+    v = _concrete(budget)
+    if v is not None and not v > 0.0:
+        raise ValueError(f"{what}={v!r}: must be > 0 ($/request ceiling)")
 
 
 def pacer_update(hp: HyperParams, p: PacerState, cost: Array) -> PacerState:
@@ -31,7 +47,8 @@ def pacer_update(hp: HyperParams, p: PacerState, cost: Array) -> PacerState:
     current value (zero unless explicitly set).
     """
     c_ema = (1.0 - hp.alpha_ema) * p.c_ema + hp.alpha_ema * cost
-    lam = jnp.clip(p.lam + hp.eta * (c_ema / p.budget - 1.0), 0.0,
+    denom = jnp.maximum(p.budget, BUDGET_EPS)
+    lam = jnp.clip(p.lam + hp.eta * (c_ema / denom - 1.0), 0.0,
                    hp.lambda_bar)
     lam = jnp.where(p.enabled, lam, p.lam)
     c_ema = jnp.where(p.enabled, c_ema, p.c_ema)
@@ -87,7 +104,13 @@ def hard_ceiling_mask(p: PacerState, price: Array, active: Array) -> Array:
 
 
 def set_budget(p: PacerState, budget: float) -> PacerState:
-    """Operator retargets the ceiling at runtime (no recompilation)."""
+    """Operator retargets the ceiling at runtime (no recompilation).
+
+    Concrete non-positive budgets are rejected here (host boundary);
+    traced payloads (scenario ``BudgetChange``) rely on the
+    ``BUDGET_EPS`` floor inside ``pacer_update``.
+    """
+    validate_budget(budget)
     return PacerState(
         lam=p.lam,
         c_ema=p.c_ema,

@@ -30,13 +30,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import backend as backend_lib
-from repro.core import linucb, pacer
+from repro.core import linucb, pacer, tenancy
 from repro.core.types import PacerState, RouterConfig, RouterState
 
 Array = jax.Array
@@ -173,9 +173,12 @@ def run_stream(cfg: RouterConfig, state: RouterState, xs: Array,
 class BatchDecision(NamedTuple):
     arms: Array        # (B,) i32   — chosen arm per request
     scores: Array      # (B, K) f32 — Eq. 2 scores + tiebreak (NEG_INF masked)
-    candidates: Array  # (K,) bool  — post-hard-ceiling candidate set
-    lam: Array         # scalar f32 — dual variable at block-decision time
+    candidates: Array  # (K,) bool candidate set — (B, K) in tenant mode,
+                       # where each row carries its tenant's hard ceiling
+    lam: Array         # scalar f32 — portfolio dual at block-decision time
     forced: Array      # (B,) bool  — forced-exploration override fired
+    # (B,) f32 per-request tenant duals (tenant mode only, else None).
+    row_lams: Optional[Array] = None
 
 
 def _tiebreak_noise(cfg: RouterConfig, hp, key: Array, B: int):
@@ -206,7 +209,21 @@ def _forced_mask(state: RouterState, B: int):
     return idx, farm, forced
 
 
-def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
+def _tenant_mode_check(cfg: RouterConfig, state: RouterState, what: str):
+    """Host-side guards for the tenant routing path (DESIGN.md §15)."""
+    if state.tenants is None:
+        raise ValueError(
+            f"{what}: tenant_ids given but state.tenants is None — build "
+            "the state with a tenancy.TenantTable (init_state(tenants=...))")
+    if cfg.backend != "jnp":
+        raise NotImplementedError(
+            f"{what}: tenant-aware routing needs per-request duals, which "
+            f"the {cfg.backend!r} kernels take as a (K,) operand; use "
+            "backend='jnp' for tenant mode (DESIGN.md §15)")
+
+
+def select_batch(cfg: RouterConfig, state: RouterState, X: Array,
+                 tenant_ids: Optional[Array] = None):
     """Algorithm 1 lines 3-15 for a (B, d) block of concurrent requests.
 
     Returns (BatchDecision, new_state). All B requests are scored against
@@ -228,20 +245,41 @@ def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
     ``select``; under gamma = 1 (no staleness inflation) the block
     decisions coincide with sequential no-feedback selects bit-for-bit
     up to backend summation order.
+
+    With ``tenant_ids`` (B,) each request is scored under ITS tenant's
+    dual: the tenant plane gathers per-row ``PacerState``s, the cost
+    penalty uses the (B,) lambda vector, and the hard price ceiling is
+    per-row — row b is bit-identical to scoring the whole block under
+    tenant ``tenant_ids[b]``'s scalar pacer (only the lambda-dependent
+    terms vary per row, and they are elementwise). The portfolio pacer
+    is ignored for scoring in tenant mode.
     """
     TRACE_COUNT[0] += 1       # moves only while tracing (under jit)
     B = X.shape[0]
     hp = state.hyper
-    cand = pacer.hard_ceiling_mask(state.pacer, state.price, state.active)
+    row_lams = None
+    if tenant_ids is not None:
+        _tenant_mode_check(cfg, state, "select_batch")
+        rows = tenancy.gather_rows(state.tenants, tenant_ids)
+        cand = jax.vmap(
+            lambda p: pacer.hard_ceiling_mask(p, state.price, state.active)
+        )(rows)                                                   # (B, K)
+        lam_op = rows.lam                                         # (B,)
+        row_lams = rows.lam
+    else:
+        cand = pacer.hard_ceiling_mask(state.pacer, state.price,
+                                       state.active)              # (K,)
+        lam_op = state.pacer.lam
     dt = state.t - jnp.maximum(state.last_upd, state.last_play)   # line 10
     backend = backend_lib.get_backend(cfg.backend)
     scores = backend.score(
         cfg, hp, state.theta, state.A_inv, state.c_tilde, X, dt,
-        state.pacer.lam,
+        lam_op,
     )                                                             # (B, K)
 
     key, noise = _tiebreak_noise(cfg, hp, state.key, B)
-    masked = jnp.where(cand[None, :], scores + noise, NEG_INF)    # line 13
+    cand_rows = cand if cand.ndim == 2 else cand[None, :]
+    masked = jnp.where(cand_rows, scores + noise, NEG_INF)        # line 13
     arms = jnp.argmax(masked, axis=1).astype(jnp.int32)           # line 14
 
     idx, farm, forced = _forced_mask(state, B)
@@ -257,7 +295,7 @@ def select_batch(cfg: RouterConfig, state: RouterState, X: Array):
     )
     dec = BatchDecision(
         arms=arms, scores=masked, candidates=cand, lam=state.pacer.lam,
-        forced=forced,
+        forced=forced, row_lams=row_lams,
     )
     return dec, new_state
 
@@ -269,6 +307,7 @@ def update_batch(
     X: Array,        # (B, d) contexts cached at route time
     rewards: Array,  # (B,) f32
     costs: Array,    # (B,) f32
+    tenant_ids: Optional[Array] = None,
 ) -> RouterState:
     """Apply a block of delayed feedback: fused scan of the per-arm rank-1
     updates + one pacer dual-ascent pass over the batch's costs.
@@ -279,6 +318,12 @@ def update_batch(
     matters under geometric forgetting). The result is exactly the
     sequential fold of ``update`` — one jitted call instead of B host
     round-trips.
+
+    With ``tenant_ids`` (B,) each cost folds into ITS tenant's pacer via
+    ``tenancy.tenant_fold`` — bit-identical to grouping the block by
+    tenant and folding each group through ``pacer_update_batch`` in
+    arrival order. The portfolio-wide scalar pacer is left untouched in
+    tenant mode (it is inert; the tenant rows ARE the duals).
     """
 
     def body(s, inp):
@@ -286,6 +331,11 @@ def update_batch(
         return _apply_feedback(cfg, s, arm, x, r), None
 
     state, _ = jax.lax.scan(body, state, (arms, X, rewards))
+    if tenant_ids is not None:
+        _tenant_mode_check(cfg, state, "update_batch")
+        tab = tenancy.tenant_fold(state.hyper, state.tenants, tenant_ids,
+                                  costs)                          # l. 25-26
+        return dataclasses.replace(state, tenants=tab)
     p = pacer.pacer_update_batch(state.hyper, state.pacer, costs)  # l. 25-26
     return dataclasses.replace(state, pacer=p)
 
@@ -330,32 +380,40 @@ def _step_batch_fused(cfg: RouterConfig, backend, state: RouterState,
 
 
 def step_batch(cfg: RouterConfig, state: RouterState, X: Array,
-               rewards: Array, costs: Array):
+               rewards: Array, costs: Array,
+               tenant_ids: Optional[Array] = None):
     """One closed-loop block step against a (B, K) matrix environment:
     route the block, observe the chosen arms' (reward, cost), feed back.
 
     Returns (new_state, (arms, r, c, lam)) with per-request traces (B,).
+    In tenant mode the traced ``lam`` is each request's tenant dual at
+    block-decision time.
 
     A backend advertising ``fused_step`` (the ``pallas_fused``
     megakernel) runs the whole body as one ``pallas_call``; otherwise the
     block goes through ``select_batch`` + ``update_batch``. Both paths
-    hold the ``EQUIV_TOL`` contract against the jnp oracle.
+    hold the ``EQUIV_TOL`` contract against the jnp oracle. Tenant mode
+    always takes the select/update path (``_tenant_mode_check`` rejects
+    the fused backend before dispatch).
     """
     backend = backend_lib.get_backend(cfg.backend)
     if getattr(backend, "fused_step", False):
+        if tenant_ids is not None:
+            _tenant_mode_check(cfg, state, "step_batch")
         return _step_batch_fused(cfg, backend, state, X, rewards, costs)
     B = X.shape[0]
-    dec, state = select_batch(cfg, state, X)
+    dec, state = select_batch(cfg, state, X, tenant_ids)
     rows = jnp.arange(B)
     r = rewards[rows, dec.arms]
     c = costs[rows, dec.arms]
-    state = update_batch(cfg, state, dec.arms, X, r, c)
-    lam = jnp.full((B,), dec.lam)
+    state = update_batch(cfg, state, dec.arms, X, r, c, tenant_ids)
+    lam = dec.row_lams if dec.row_lams is not None else jnp.full((B,), dec.lam)
     return state, (dec.arms, r, c, lam)
 
 
 def run_stream_batched(cfg: RouterConfig, state: RouterState, xs: Array,
-                       rewards: Array, costs: Array, batch_size: int):
+                       rewards: Array, costs: Array, batch_size: int,
+                       tenant_ids: Optional[Array] = None):
     """Scan Algorithm 1 over a request stream in blocks of ``batch_size``.
 
     Same contract as ``run_stream`` (xs (T, d); rewards/costs (T, K);
@@ -363,14 +421,18 @@ def run_stream_batched(cfg: RouterConfig, state: RouterState, xs: Array,
     consumed through the batched data plane — the exact code path the
     batch-serving gateway runs — so scenario benchmarks and production
     exercise the same kernels. A trailing partial block (T mod B requests)
-    is processed as one smaller block.
+    is processed as one smaller block. ``tenant_ids`` (T,) tags each
+    request with its tenant (DESIGN.md §15); blocks then route and pace
+    per tenant.
     """
     T = xs.shape[0]
     nb, rem = divmod(T, batch_size)
+    tids = None if tenant_ids is None else jnp.asarray(tenant_ids, jnp.int32)
 
     def block(s, inp):
-        xb, rb, cb = inp
-        return step_batch(cfg, s, xb, rb, cb)
+        xb, rb, cb = inp[:3]
+        tb = inp[3] if tids is not None else None
+        return step_batch(cfg, s, xb, rb, cb, tb)
 
     trace = None
     if nb:
@@ -379,11 +441,15 @@ def run_stream_batched(cfg: RouterConfig, state: RouterState, xs: Array,
             rewards[: nb * batch_size].reshape(nb, batch_size, -1),
             costs[: nb * batch_size].reshape(nb, batch_size, -1),
         )
+        if tids is not None:
+            blocks = blocks + (
+                tids[: nb * batch_size].reshape(nb, batch_size),)
         state, trace = jax.lax.scan(block, state, blocks)
         trace = jax.tree.map(lambda a: a.reshape(nb * batch_size), trace)
     if rem:
         state, tail = step_batch(
-            cfg, state, xs[T - rem:], rewards[T - rem:], costs[T - rem:]
+            cfg, state, xs[T - rem:], rewards[T - rem:], costs[T - rem:],
+            None if tids is None else tids[T - rem:],
         )
         trace = tail if trace is None else jax.tree.map(
             lambda a, b: jnp.concatenate([a, b]), trace, tail
@@ -413,3 +479,18 @@ def jit_update_batch(statics):
     """Compiled ``update_batch`` for one ``Statics`` value."""
     return jax.jit(
         lambda s, arms, X, r, c: update_batch(statics, s, arms, X, r, c))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_select_batch_tenants(statics):
+    """Compiled tenant-mode ``select_batch`` (tenant_ids operand)."""
+    return jax.jit(
+        lambda s, X, tids: select_batch(statics, s, X, tids))
+
+
+@functools.lru_cache(maxsize=None)
+def jit_update_batch_tenants(statics):
+    """Compiled tenant-mode ``update_batch`` (tenant_ids operand)."""
+    return jax.jit(
+        lambda s, arms, X, r, c, tids: update_batch(
+            statics, s, arms, X, r, c, tids))

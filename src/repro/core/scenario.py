@@ -369,12 +369,40 @@ class TrafficMixShift:
     weights: Optional[Union[Tuple[float, ...], Param]]
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantBudgetChange:
+    """Operator retargets ONE tenant's ceiling to ``budget`` $/req at
+    step ``t`` (DESIGN.md §15). A pure state edit on the row of
+    ``RouterState.tenants`` — requires the state to carry a
+    ``tenancy.TenantTable``. ``budget`` may be a ``Param``; concrete
+    values auto-lift onto ``__auto{i}`` leaves like ``BudgetChange``, so
+    a contract-renegotiation family shares one compiled program."""
+
+    t: int
+    tenant: int
+    budget: Payload
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantMixShift:
+    """From step ``t``, requests are tagged with tenants drawn with the
+    given ``(T,)`` ``weights`` (proportional sampling; None restores the
+    uniform tenant draw). A host-side *stream* event: it shapes the
+    tenant-id overlay built by ``data/synthetic.py``'s tenant-stream
+    generators (``tenant_stream_for_spec``), not the state — the
+    scenario engine itself only uses its time as a segment boundary."""
+
+    t: int
+    weights: Optional[Tuple[float, ...]]
+
+
 Event = Union[
     PriceChange, QualityShift, AddArm, DeleteArm, BudgetChange,
-    TrafficMixShift, HyperShift,
+    TrafficMixShift, HyperShift, TenantBudgetChange, TenantMixShift,
 ]
 
-_STATE_EVENTS = (PriceChange, AddArm, DeleteArm, BudgetChange, HyperShift)
+_STATE_EVENTS = (PriceChange, AddArm, DeleteArm, BudgetChange, HyperShift,
+                 TenantBudgetChange)
 
 
 # ---------------------------------------------------------------------------
@@ -501,7 +529,8 @@ def auto_param_values(spec: ScenarioSpec) -> Dict[str, np.ndarray]:
     for i, e in enumerate(spec.events):
         if isinstance(e, PriceChange) and not isinstance(e.multiplier, Param):
             out[_auto_name(i)] = np.float32(e.multiplier)
-        elif isinstance(e, BudgetChange) and not isinstance(e.budget, Param):
+        elif (isinstance(e, (BudgetChange, TenantBudgetChange))
+                and not isinstance(e.budget, Param)):
             out[_auto_name(i)] = np.float32(e.budget)
     return out
 
@@ -557,6 +586,9 @@ def _key_event(e: Event, mask_times: bool = False):
     if isinstance(e, BudgetChange):
         b = e.budget if isinstance(e.budget, Param) else _LIFTED
         return ("BudgetChange", t, _hashable(b))
+    if isinstance(e, TenantBudgetChange):
+        b = e.budget if isinstance(e.budget, Param) else _LIFTED
+        return ("TenantBudgetChange", t, e.tenant, _hashable(b))
     # AddArm / DeleteArm / HyperShift / TrafficMixShift payloads stay
     # structural (concrete values are trace constants or host-side).
     return (type(e).__name__, t) + tuple(
@@ -1130,6 +1162,23 @@ def _one_edit(cfg: RouterConfig, spec: ScenarioSpec, i: int,
         ref = _budget_ref(spec, i)
         return lambda st, ps: dataclasses.replace(
             st, pacer=pacer_lib.set_budget(st.pacer, ps.get(ref.name)))
+    if isinstance(e, TenantBudgetChange):
+        ref = _budget_ref(spec, i)
+        tenant = e.tenant
+
+        def tenant_budget(st, ps):
+            if st.tenants is None:
+                raise ValueError(
+                    f"TenantBudgetChange(t={e.t}, tenant={tenant}) needs "
+                    "a tenant table on the state: build it with "
+                    "init_state(tenants=tenancy.make_table(...))")
+            tab = dataclasses.replace(
+                st.tenants,
+                budget=st.tenants.budget.at[..., tenant].set(
+                    jnp.asarray(ps.get(ref.name), jnp.float32)))
+            return dataclasses.replace(st, tenants=tab)
+
+        return tenant_budget
     if isinstance(e, HyperShift):
         ov = e.overrides()
         if not ov:
@@ -1371,7 +1420,7 @@ _RUNNER_CACHE_MAX = 64   # mirrors evaluate._cached_run_fn's lru bound
 
 
 def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size,
-                 stream_tfs=None):
+                 stream_tfs=None, with_tenants: bool = False):
     """The pure per-seed segmented-scan program: segments unrolled at
     trace time, each a ``lax.scan`` through the scalar or batched data
     plane, with the pure state edits applied in between — no host
@@ -1379,11 +1428,19 @@ def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size,
     take the per-element ``ScenarioParams`` (payloads as data, DESIGN.md
     §10). Shared by the seed-vmapped runner below and the grid-sweep
     fabric (sweep.py), which vmaps it over a flattened
-    (condition x seed) axis instead."""
-    tfs = stream_tfs if stream_tfs is not None else (None,) * len(seg_lens)
+    (condition x seed) axis instead.
 
-    def one_seed(state: RouterState, xs, rmat, cmat,
-                 params: ScenarioParams):
+    ``with_tenants`` adds a per-seed ``(horizon,)`` tenant-id operand,
+    sliced per segment and threaded to the batched data plane
+    (DESIGN.md §15; requires ``batch_size``)."""
+    tfs = stream_tfs if stream_tfs is not None else (None,) * len(seg_lens)
+    if with_tenants and not (batch_size is not None and batch_size > 1):
+        raise ValueError(
+            "tenant scenario runs need batch_size > 1: tenant routing is "
+            "a batched-data-plane feature (DESIGN.md §15)")
+
+    def run_segments(state: RouterState, xs, rmat, cmat,
+                     params: ScenarioParams, tids=None):
         traces, off = [], 0
         for L, edit, tf in zip(seg_lens, edits, tfs):
             if edit is not None:
@@ -1393,7 +1450,8 @@ def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size,
                 seg = tf(*seg, params)
             if batch_size is not None and batch_size > 1:
                 state, tr = router.run_stream_batched(
-                    cfg, state, *seg, batch_size=batch_size)
+                    cfg, state, *seg, batch_size=batch_size,
+                    tenant_ids=None if tids is None else tids[off:off + L])
             else:
                 state, tr = router.run_stream(cfg, state, *seg)
             traces.append(tr)
@@ -1401,28 +1459,39 @@ def segment_body(cfg: RouterConfig, seg_lens, edits, batch_size,
         trace = jax.tree.map(lambda *ts: jnp.concatenate(ts), *traces)
         return state, trace
 
+    if with_tenants:
+        def one_seed(state, xs, rmat, cmat, params, tids):
+            return run_segments(state, xs, rmat, cmat, params, tids)
+        return one_seed
+
+    def one_seed(state, xs, rmat, cmat, params):
+        return run_segments(state, xs, rmat, cmat, params)
+
     return one_seed
 
 
 def spec_body(cfg: RouterConfig, spec: ScenarioSpec,
-              env: simulator.Environment, batch_size=None):
+              env: simulator.Environment, batch_size=None,
+              with_tenants: bool = False):
     """``segment_body`` compiled from a spec (edits + segment lengths +
     traced stream transforms for parameterized payloads)."""
     seg_lens = tuple(b - a for a, b in spec.segments)
     return segment_body(cfg, seg_lens, _edit_fns(cfg, spec, env),
-                        batch_size, _stream_tfs(spec, env))
+                        batch_size, _stream_tfs(spec, env), with_tenants)
 
 
 def _make_runner(cfg: RouterConfig, spec: ScenarioSpec,
-                 env: simulator.Environment, batch_size):
+                 env: simulator.Environment, batch_size,
+                 with_tenants: bool = False):
     """One jitted, seed-vmapped program around ``segment_body``."""
-    body = spec_body(cfg, spec, env, batch_size)
+    body = spec_body(cfg, spec, env, batch_size, with_tenants)
+    n_in = 6 if with_tenants else 5
 
-    def one_seed(state: RouterState, xs, rmat, cmat, params):
+    def one_seed(state: RouterState, *args):
         TRACE_COUNT[0] += 1       # moves only while tracing
-        return body(state, xs, rmat, cmat, params)
+        return body(state, *args)
 
-    return jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0)))
+    return jax.jit(jax.vmap(one_seed, in_axes=(0,) * n_in))
 
 
 def _env_sig(env: simulator.Environment):
@@ -1436,6 +1505,7 @@ def compiled_runner(
     spec: ScenarioSpec,
     env: simulator.Environment,
     batch_size: Optional[int] = None,
+    with_tenants: bool = False,
 ):
     """Cached jitted runner for (config, spec, env rate card, batch size).
 
@@ -1451,10 +1521,11 @@ def compiled_runner(
     # from the spec part (``runner_spec_key``): concrete payloads are
     # auto-lifted, so a spec family differing only in values shares one
     # runner too.
-    key = (cfg.statics, runner_spec_key(spec), _env_sig(env), batch_size)
+    key = (cfg.statics, runner_spec_key(spec), _env_sig(env), batch_size,
+           with_tenants)
 
     def make():
-        return _make_runner(cfg, spec, env, batch_size)
+        return _make_runner(cfg, spec, env, batch_size, with_tenants)
 
     return lru_get(_RUNNER_CACHE, key, make, _RUNNER_CACHE_MAX)
 

@@ -38,7 +38,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import linucb
+from repro.core import linucb, tenancy
 from repro.core.types import RouterConfig, RouterState
 from repro.training import checkpoint
 
@@ -113,8 +113,14 @@ def decay_on_restore(cfg: RouterConfig, state: RouterState,
     equality also requires elapsed + gap <= cfg.dt_max, the same clamp
     the live path has).
 
-    The pacer dual (lam, c_ema) survives restore unchanged: Eq. 3-4
-    track the operator's budget, which does not decay with idleness.
+    The portfolio pacer dual (lam, c_ema) survives restore unchanged:
+    Eq. 3-4 track the operator's budget, which does not decay with
+    idleness. The *tenant* table, when present, DOES relax — each
+    tenant's dual pressure is a live control signal with no requests
+    behind it after Δt offline steps, so ``tenancy.decay_table`` applies
+    the same gamma^min(Δt, dt_max) clock per tenant (lam toward 0,
+    c_ema toward its budget anchor; DESIGN.md §15). Both maps compose
+    across repeated restores like the statistics decay does.
     """
     elapsed = int(elapsed)
     if elapsed < 0:
@@ -128,12 +134,17 @@ def decay_on_restore(cfg: RouterConfig, state: RouterState,
     )(state.A, state.A_inv, state.b)
     theta = jnp.einsum("kij,kj->ki", A_inv, b)
     shift = jnp.asarray(elapsed, jnp.int32)
+    tenants = state.tenants
+    if tenants is not None:
+        tenants = tenancy.decay_table(
+            cfg.statics, state.hyper, tenants, elapsed)
     return dataclasses.replace(
         state,
         A=A, A_inv=A_inv, b=b, theta=theta,
         last_upd=state.last_upd + shift,
         last_play=state.last_play + shift,
         t=state.t + shift,
+        tenants=tenants,
     )
 
 

@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import evaluate, router, warmup
+from repro.core import evaluate, router, tenancy, warmup
 from repro.core import scenario as scenario_lib
 from repro.core import types as types_lib
 from repro.core.simulator import Environment
@@ -169,6 +169,28 @@ def _expand_hyper(hyper, C: int, S: int):
         n: _per_condition_axis(getattr(hyper, n), C, S)
         for n in types_lib.HYPER_FIELDS
     })
+
+
+def _expand_tenants(tables, C: int, S: int):
+    """A tenant-table spec for the flattened grid (DESIGN.md §15):
+    shared (T,) leaves pass through (every grid element gets a copy),
+    per-condition (C, T) leaves repeat S times to (C*S, T), and
+    pre-flattened (C*S, T) leaves pass through."""
+    if tables is None:
+        return None
+    ndim = jnp.ndim(tables.budget)
+    if ndim == 1:
+        return tables
+    n0 = tables.budget.shape[0]
+    if ndim == 2 and n0 == C and C != C * S:
+        return jax.tree.map(
+            lambda l: jnp.repeat(jnp.asarray(l), S, axis=0), tables)
+    if ndim == 2 and n0 == C * S:
+        return tables
+    raise ValueError(
+        f"tenant_tables.budget must be (T,) shared, ({C}, T) per-"
+        f"condition or ({C * S}, T) pre-flattened; got shape "
+        f"{jnp.shape(tables.budget)}")
 
 
 def _tile_conditions(arr: Array, C: int, sh) -> Array:
@@ -309,6 +331,26 @@ def _cached_grid_fn(statics, stream_axes, batch_size, n_chunks=1):
     )
 
 
+@functools.lru_cache(maxsize=64)
+def _cached_grid_fn_tenants(statics, stream_axes, batch_size, n_chunks=1):
+    """Tenant-mode fabric program (DESIGN.md §15): every grid element
+    carries its own (L,) tenant-id stream (expanded host-side to the
+    flattened (C*S, L) layout, sharded with the states). Tables and ids
+    are data — a new (tenants x budgets) grid with the same shapes
+    re-enters this executable with zero retraces."""
+    body = evaluate.stream_body_tenants(statics, batch_size)
+
+    def one(state, x, rm, cm, tids):
+        TRACE_COUNT[0] += 1       # moves only while tracing
+        return body(state, x, rm, cm, tids)
+
+    vm = jax.vmap(one, in_axes=(0, stream_axes, stream_axes, stream_axes, 0))
+    return jax.jit(
+        _chunk_wrap(vm, n_chunks, (stream_axes == 0,) * 3 + (True,)),
+        donate_argnums=0,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Condition-edit helpers (DESIGN.md §7 stacking rules)
 # ---------------------------------------------------------------------------
@@ -413,6 +455,8 @@ def run_grid(
     return_states: bool = False,
     hyper: Optional[HyperParams] = None,
     chunk_size: Optional[int] = None,
+    tenant_tables: Optional["tenancy.TenantTable"] = None,
+    tenant_ids=None,
 ):
     """Evaluate a (budget x seed) grid as one compiled, sharded call.
 
@@ -439,8 +483,21 @@ def run_grid(
     per-step working set so wide grids stop spilling the last-level
     cache (DESIGN.md §11). Results are bit-identical to the unchunked
     fabric. ``None`` (default) keeps the whole grid live.
+
+    ``tenant_tables`` + ``tenant_ids`` put the tenant plane on the grid
+    (DESIGN.md §15): tables with (T,) shared, (C, T) per-condition or
+    (C*S, T) pre-flattened leaves, ids shaped (L,) shared, (S, L)
+    per-seed or (C*S, L) per-element — so a (tenants x budgets x seeds)
+    grid fuses into this one compiled sharded call. Requires
+    ``batch_size`` (tenant routing is a batched-data-plane feature).
     """
     budgets, seeds = _check_grid_args(budgets, seeds, condition_edits)
+    if (tenant_tables is None) != (tenant_ids is None):
+        raise ValueError("pass tenant_tables and tenant_ids together")
+    if tenant_tables is not None and not batch_size:
+        raise ValueError(
+            "tenant grids need batch_size: tenant routing is a batched-"
+            "data-plane feature (DESIGN.md §15)")
     if condition_edits is not None and any(
             getattr(e, "param_overrides", None) for e in condition_edits):
         raise ValueError(
@@ -461,15 +518,34 @@ def run_grid(
             priors=priors, n_eff=_per_condition_axis(n_eff, C, S),
             pacer_enabled=pacer_enabled,
             hyper=_expand_hyper(hyper, C, S),
+            tenants=_expand_tenants(tenant_tables, C, S),
         )
         if condition_edits is not None:
             states = _apply_condition_edits(states, condition_edits, S)
-        states, streams, _, _ = _shard_grid(
-            states, (xs, rmat, cmat), stream_axes, C, devices)
+        extras = ()
+        if tenant_ids is not None:
+            tids = np.asarray(tenant_ids, np.int32)
+            if tids.ndim == 1:
+                tids = np.broadcast_to(tids, (C * S,) + tids.shape)
+            elif tids.ndim == 2 and tids.shape[0] == S and S != C * S:
+                tids = np.broadcast_to(
+                    tids[None], (C,) + tids.shape).reshape(C * S, -1)
+            elif not (tids.ndim == 2 and tids.shape[0] == C * S):
+                raise ValueError(
+                    f"tenant_ids must be (L,) shared, ({S}, L) per-seed "
+                    f"or ({C * S}, L) per-element; got shape {tids.shape}")
+            extras = (jnp.asarray(np.ascontiguousarray(tids)),)
+        states, streams, _, extras = _shard_grid(
+            states, (xs, rmat, cmat), stream_axes, C, devices,
+            extras=extras)
 
-    fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size,
-                         _n_chunks(C * S, chunk_size))
-    finals, (arms, r, c, lam) = fn(states, *streams)
+    if tenant_ids is not None:
+        fn = _cached_grid_fn_tenants(cfg.statics, stream_axes, batch_size,
+                                     _n_chunks(C * S, chunk_size))
+    else:
+        fn = _cached_grid_fn(cfg.statics, stream_axes, batch_size,
+                             _n_chunks(C * S, chunk_size))
+    finals, (arms, r, c, lam) = fn(states, *streams, *extras)
     res = GridResult(
         budgets=budgets, seeds=seeds,
         arms=np.asarray(arms).reshape(C, S, -1),

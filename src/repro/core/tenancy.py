@@ -1,0 +1,214 @@
+"""Tenant plane: T independent budget pacers over ONE shared portfolio.
+
+Production portfolios serve many tenants with independent dollar
+contracts against the same model pool. The LinUCB sufficient statistics
+(A, A_inv, b, theta) stay shared — quality estimates are a property of
+the portfolio, not the customer — while the §3.2 primal-dual pacer
+(Eqs. 3-4) is replicated per tenant: each request is scored under ITS
+tenant's dual lambda and hard price ceiling, and each realised cost
+folds into ITS tenant's EMA only.
+
+Representation: a ``TenantTable`` registered pytree of (..., T) leaves —
+structurally a vmapped ``PacerState`` plus per-tenant pull/spend
+accumulators. Leading batch dims stack naturally in the sweep fabric
+((C, T) tables ride the condition axis like every other state leaf), and
+the whole table lives on ``RouterState.tenants`` as a LEARN-plane leaf
+(DESIGN.md §13/§15).
+
+The exactness contract (DESIGN.md §15): ``tenant_fold`` over a mixed
+block is bit-identical to grouping the block by tenant and folding each
+group through ``pacer.pacer_update_batch`` in arrival order. Distinct
+tenants touch disjoint table rows and the per-step clip (the reason the
+fold is a scan, not a closed form) only ever sees one tenant's carry, so
+interleaving commutes across tenants while preserving within-tenant
+order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pacer as pacer_lib
+from repro.core.types import HyperParams, PacerState, Statics
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TenantTable:
+    """T per-tenant pacers + spend accounting, all (..., T) f32/i32/bool
+    leaves. Row i is tenant i's ``PacerState`` plus its accumulators;
+    leading dims (if any) are stacking axes (sweep conditions/seeds)."""
+
+    lam: Array      # (..., T) f32  per-tenant dual lambda_t >= 0
+    c_ema: Array    # (..., T) f32  per-tenant EMA-smoothed cost (init: B_i)
+    budget: Array   # (..., T) f32  per-tenant ceiling B_i ($/req)
+    enabled: Array  # (..., T) bool per-tenant pacer gate
+    pulls: Array    # (..., T) i32  requests routed per tenant
+    spend: Array    # (..., T) f32  cumulative realised cost per tenant
+
+
+def num_tenants(table: TenantTable) -> int:
+    return int(table.budget.shape[-1])
+
+
+def make_table(
+    budgets: Union[Sequence[float], np.ndarray, Array],
+    *,
+    enabled: Union[bool, Sequence[bool], np.ndarray] = True,
+) -> TenantTable:
+    """Fresh tenant table from per-tenant budgets (host boundary).
+
+    Every budget is validated > 0 with ``ValueError`` (satellite of the
+    §3.2 division hazard: a zero ceiling would NaN the dual). ``c_ema``
+    initialises at each tenant's budget, mirroring ``init_state``'s
+    ``\\bar c_0 <- B`` (Algorithm 1).
+    """
+    b = np.asarray(budgets, np.float32)
+    if b.ndim != 1 or b.size < 1:
+        raise ValueError(
+            f"budgets must be a non-empty 1-D sequence; got shape {b.shape}")
+    if not np.all(b > 0.0):
+        bad = np.flatnonzero(~(b > 0.0))
+        raise ValueError(
+            f"tenant budgets must be > 0 ($/request ceilings); "
+            f"tenants {bad.tolist()} have {b[bad].tolist()}")
+    T = b.shape[0]
+    en = np.broadcast_to(np.asarray(enabled, bool), (T,))
+    return TenantTable(
+        lam=jnp.zeros((T,), jnp.float32),
+        c_ema=jnp.asarray(b, jnp.float32),
+        budget=jnp.asarray(b, jnp.float32),
+        enabled=jnp.asarray(en, bool),
+        pulls=jnp.zeros((T,), jnp.int32),
+        spend=jnp.zeros((T,), jnp.float32),
+    )
+
+
+def set_tenant_budget(table: TenantTable, tenant: int, budget) -> TenantTable:
+    """Operator retargets ONE tenant's ceiling (host boundary; concrete
+    non-positive budgets raise, traced payloads are floor-guarded in the
+    fold). Pure — budgets are data leaves, so no recompile."""
+    pacer_lib.validate_budget(budget, what=f"tenant[{tenant}] budget")
+    return dataclasses.replace(
+        table,
+        budget=table.budget.at[..., tenant].set(
+            jnp.asarray(budget, jnp.float32)),
+    )
+
+
+def gather_rows(table: TenantTable, tenant_ids: Array) -> PacerState:
+    """Rows ``tenant_ids`` (B,) of the table as a batched ``PacerState``
+    with (B,) leaves — the per-request view the router scores under."""
+    tid = jnp.asarray(tenant_ids, jnp.int32)
+    return PacerState(
+        lam=jnp.take(table.lam, tid, axis=-1),
+        c_ema=jnp.take(table.c_ema, tid, axis=-1),
+        budget=jnp.take(table.budget, tid, axis=-1),
+        enabled=jnp.take(table.enabled, tid, axis=-1),
+    )
+
+
+def tenant_fold(
+    hp: HyperParams,
+    table: TenantTable,
+    tenant_ids: Array,
+    costs: Array,
+) -> TenantTable:
+    """One dual-ascent pass over a mixed-tenant block, in arrival order.
+
+    A single fused ``lax.scan`` over the block: each step gathers the
+    request's tenant row, applies ``pacer.pacer_update`` (Eqs. 3-4 with
+    the per-step clip), and scatters the row back, bumping that tenant's
+    pull/spend accumulators. Bit-identical to grouping the block by
+    tenant and folding each group through ``pacer_update_batch`` —
+    distinct tenants touch disjoint rows, so the interleaved scan and
+    the grouped scans compute the same per-tenant recursions in the same
+    within-tenant order.
+
+    Assumes single-table leaves (T,); stacked (C, T) tables are driven
+    through this under ``vmap`` by the sweep fabric.
+    """
+    tid = jnp.asarray(tenant_ids, jnp.int32)
+    costs = jnp.asarray(costs, jnp.float32)
+
+    def body(tab, xs):
+        i, c = xs
+        row = PacerState(
+            lam=tab.lam[i], c_ema=tab.c_ema[i],
+            budget=tab.budget[i], enabled=tab.enabled[i])
+        row2 = pacer_lib.pacer_update(hp, row, c)
+        tab2 = TenantTable(
+            lam=tab.lam.at[i].set(row2.lam),
+            c_ema=tab.c_ema.at[i].set(row2.c_ema),
+            budget=tab.budget,
+            enabled=tab.enabled,
+            pulls=tab.pulls.at[i].add(1),
+            spend=tab.spend.at[i].add(c),
+        )
+        return tab2, None
+
+    table2, _ = jax.lax.scan(body, table, (tid, costs))
+    return table2
+
+
+def decay_table(
+    statics: Statics,
+    hp: HyperParams,
+    table: TenantTable,
+    elapsed: int,
+) -> TenantTable:
+    """Per-tenant ``gamma^Δt`` relaxation on snapshot restore (§8/§15).
+
+    While a snapshot sits on disk no requests flow, so each tenant's
+    dual pressure and cost EMA relax toward their quiescent anchors with
+    the same geometric clock the LinUCB statistics use:
+
+        g      = gamma^min(Δt, dt_max)
+        lam   <- g * lam                       (dual decays toward 0)
+        c_ema <- B + g * (c_ema - B)           (EMA decays toward its
+                                                init anchor \\bar c_0 = B)
+
+    Both maps compose: decaying by Δt1 then Δt2 equals decaying by
+    Δt1 + Δt2 (up to the dt_max clamp) — the lazy-decay equivalence the
+    snapshot round-trip tests pin. Pull/spend accumulators are lifetime
+    counters and survive untouched. Live folds never relax; this runs
+    only on the restore path.
+    """
+    if elapsed < 0:
+        raise ValueError(f"elapsed={elapsed}: must be >= 0")
+    if elapsed == 0:
+        return table
+    g = jnp.asarray(hp.gamma, jnp.float32) ** jnp.minimum(
+        jnp.asarray(elapsed, jnp.float32), float(statics.dt_max))
+    return dataclasses.replace(
+        table,
+        lam=g * table.lam,
+        c_ema=table.budget + g * (table.c_ema - table.budget),
+    )
+
+
+def stack_tables(tables: Sequence[TenantTable]) -> TenantTable:
+    """C single tables -> one (C, T) stacked table (sweep condition axis)."""
+    if not tables:
+        raise ValueError("need at least one table to stack")
+    T = {num_tenants(t) for t in tables}
+    if len(T) != 1:
+        raise ValueError(f"cannot stack tables with mixed T: {sorted(T)}")
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *tables)
+
+
+def table_row(table: TenantTable, tenant: int) -> PacerState:
+    """Tenant ``tenant``'s pacer as a scalar ``PacerState`` (host/debug
+    view; the single-tenant baseline the bit-identity gates compare to)."""
+    return PacerState(
+        lam=table.lam[..., tenant],
+        c_ema=table.c_ema[..., tenant],
+        budget=table.budget[..., tenant],
+        enabled=table.enabled[..., tenant],
+    )

@@ -274,6 +274,12 @@ class RouterState:
     force_left: Array  # scalar i32, remaining forced pulls
     key: Array         # PRNG key for random tiebreaks
     hyper: HyperParams  # live (α, γ, λ_c, ...) — f32 leaves, retunable
+    # Optional tenant plane (DESIGN.md §15): a ``tenancy.TenantTable``
+    # of (..., T) per-tenant pacer leaves sharing this state's LinUCB
+    # statistics, or None for the single-tenant paper configuration.
+    # Typed ``object`` to keep types.py import-free of tenancy.py
+    # (tenancy imports PacerState from here).
+    tenants: Optional[object] = None
 
 
 # Plane ownership of RouterState leaves (gateway double-buffering,
@@ -285,7 +291,7 @@ class RouterState:
 # Control-plane ops (registry add/delete, set_budget, set_hyperparams)
 # write CONTROL_LEAVES (and sometimes force_left) and must serialize
 # against both planes — the gateway takes its state lock for those.
-LEARN_LEAVES = ("A", "A_inv", "b", "theta", "last_upd", "pacer")
+LEARN_LEAVES = ("A", "A_inv", "b", "theta", "last_upd", "pacer", "tenants")
 SELECT_LEAVES = ("t", "last_play", "key", "force_left")
 CONTROL_LEAVES = ("active", "price", "c_tilde", "force_arm", "hyper")
 
@@ -396,6 +402,7 @@ def init_state(
     active: Optional[jnp.ndarray] = None,
     pacer_enabled: bool = True,
     hyper: Optional[HyperParams] = None,
+    tenants: Optional[object] = None,
 ) -> RouterState:
     """Uninformative (tabula-rasa) initial state; warm start via warmup.py.
 
@@ -405,6 +412,9 @@ def init_state(
       prices_per_1k: (K,) blended $/1k-token rate per arm (drives Eq. 6).
       budget: operator ceiling B in $/request.
       hyper: overrides ``cfg.hyper`` as the state's live hyper-parameters.
+      tenants: optional ``tenancy.TenantTable`` enabling per-tenant pacing
+        (DESIGN.md §15); the scalar pacer stays as the portfolio-wide
+        aggregate view but is inert when a table is present.
     """
     K, d = cfg.max_arms, cfg.d
     hp = (cfg.hyper if hyper is None else hyper).as_leaves()
@@ -439,4 +449,5 @@ def init_state(
         force_left=jnp.zeros((), jnp.int32),
         key=key,
         hyper=hp,
+        tenants=tenants,
     )

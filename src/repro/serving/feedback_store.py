@@ -18,7 +18,10 @@ Each entry also carries the router-state snapshot ``version`` the
 request was routed under (gateway double-buffering, DESIGN.md §13), so
 feedback arriving after later publishes can be attributed: ``pop``
 keeps its original ``(ctx, arm)`` signature for existing callers, and
-``pop_record`` returns ``(ctx, arm, version)`` for the gateway.
+``pop_record`` returns ``(ctx, arm, version, tenant)`` for the gateway.
+The ``tenant`` id (DESIGN.md §15) rides alongside the version so the
+learner can fold each reward into the right tenant's pacer row; rows
+written before multi-tenancy read back as tenant 0.
 """
 from __future__ import annotations
 
@@ -42,7 +45,7 @@ class InMemoryFeedbackStore:
                  clock: Callable[[], float] = time.monotonic):
         # insertion-ordered: puts are timestamped monotonically, so the
         # expired prefix is always at the front and sweeps are O(expired)
-        self._d: "collections.OrderedDict[int, Tuple[np.ndarray, int, float, int]]" = (
+        self._d: "collections.OrderedDict[int, Tuple[np.ndarray, int, float, int, int]]" = (
             collections.OrderedDict())
         self._lock = threading.Lock()
         self.ttl = ttl
@@ -50,24 +53,28 @@ class InMemoryFeedbackStore:
         self.expired_total = 0
 
     def put(self, request_id: int, context: np.ndarray, arm: int,
-            version: int = 0) -> None:
+            version: int = 0, tenant: int = 0) -> None:
         now = self._clock()
         with self._lock:
             self._d[request_id] = (
-                np.asarray(context, np.float32), int(arm), now, int(version))
+                np.asarray(context, np.float32), int(arm), now, int(version),
+                int(tenant))
             self._d.move_to_end(request_id)  # re-put keeps time order
             self._sweep_locked(now)
 
     def put_block(self, request_ids, contexts: np.ndarray, arms,
-                  version: int = 0) -> None:
+                  version: int = 0, tenants=None) -> None:
         """Batched ``put``: one lock round-trip for a whole routed block
-        (the gateway's select-plane hot path)."""
+        (the gateway's select-plane hot path). ``tenants`` is a per-row
+        sequence of tenant ids (None = tenant 0 for every row)."""
         now = self._clock()
         ctxs = np.asarray(contexts, np.float32)
         v = int(version)
+        tids = ([0] * len(ctxs) if tenants is None
+                else [int(t) for t in tenants])
         with self._lock:
-            for rid, x, a in zip(request_ids, ctxs, arms):
-                self._d[rid] = (x, int(a), now, v)
+            for rid, x, a, tid in zip(request_ids, ctxs, arms, tids):
+                self._d[rid] = (x, int(a), now, v, tid)
                 self._d.move_to_end(rid)
             self._sweep_locked(now)
 
@@ -77,18 +84,18 @@ class InMemoryFeedbackStore:
 
     def pop_record(
         self, request_id: int
-    ) -> Optional[Tuple[np.ndarray, int, int]]:
-        """Like ``pop`` but also returns the snapshot version the request
-        was routed under (0 for pre-gateway writers)."""
+    ) -> Optional[Tuple[np.ndarray, int, int, int]]:
+        """Like ``pop`` but also returns the snapshot version and tenant
+        id the request was routed under (0/0 for pre-gateway writers)."""
         with self._lock:
             hit = self._d.pop(request_id, None)
             if hit is None:
                 return None
-            ctx, arm, ts, version = hit
+            ctx, arm, ts, version, tenant = hit
             if self.ttl is not None and self._clock() - ts > self.ttl:
                 self.expired_total += 1   # reward arrived after the TTL
                 return None
-            return ctx, arm, version
+            return ctx, arm, version, tenant
 
     def pop_block(self, request_ids):
         """Batched ``pop_record``: one lock round-trip, one record (or
@@ -101,12 +108,12 @@ class InMemoryFeedbackStore:
                 if hit is None:
                     out.append(None)
                     continue
-                ctx, arm, ts, version = hit
+                ctx, arm, ts, version, tenant = hit
                 if self.ttl is not None and now - ts > self.ttl:
                     self.expired_total += 1
                     out.append(None)
                 else:
-                    out.append((ctx, arm, version))
+                    out.append((ctx, arm, version, tenant))
         return out
 
     def sweep_expired(self) -> int:
@@ -120,7 +127,8 @@ class InMemoryFeedbackStore:
         if self.ttl is None:
             return
         while self._d:
-            rid, (_, _, ts, _) = next(iter(self._d.items()))
+            rid, rec = next(iter(self._d.items()))
+            ts = rec[2]
             if now - ts <= self.ttl:
                 break
             del self._d[rid]
@@ -152,7 +160,8 @@ class SQLiteFeedbackStore:
             " dim INTEGER NOT NULL,"
             " arm INTEGER NOT NULL,"
             " created_at REAL NOT NULL DEFAULT 0,"
-            " version INTEGER NOT NULL DEFAULT 0)"
+            " version INTEGER NOT NULL DEFAULT 0,"
+            " tenant INTEGER NOT NULL DEFAULT 0)"
         )
         # Migrate pre-TTL databases (no created_at column) in place.
         # Legacy rows are stamped with the migration time, NOT 0: a
@@ -174,29 +183,38 @@ class SQLiteFeedbackStore:
             self._conn.execute(
                 "ALTER TABLE ctx ADD COLUMN version INTEGER NOT NULL "
                 "DEFAULT 0")
+        # Pre-tenancy databases likewise gain the tenant column; DEFAULT 0
+        # ("the operator's own traffic") is the right legacy stamp.
+        if "tenant" not in cols:
+            self._conn.execute(
+                "ALTER TABLE ctx ADD COLUMN tenant INTEGER NOT NULL "
+                "DEFAULT 0")
         self._conn.commit()
 
     def put(self, request_id: int, context: np.ndarray, arm: int,
-            version: int = 0) -> None:
+            version: int = 0, tenant: int = 0) -> None:
         c = np.asarray(context, np.float32)
         with self._lock:
             self._conn.execute(
-                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?)",
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?, ?)",
                 (int(request_id), c.tobytes(), c.size, int(arm),
-                 float(self._clock()), int(version)),
+                 float(self._clock()), int(version), int(tenant)),
             )
             self._conn.commit()
 
     def put_block(self, request_ids, contexts: np.ndarray, arms,
-                  version: int = 0) -> None:
-        """Batched ``put``: one transaction for a whole routed block."""
+                  version: int = 0, tenants=None) -> None:
+        """Batched ``put``: one transaction for a whole routed block.
+        ``tenants`` is a per-row sequence of tenant ids (None = 0)."""
         ctxs = np.asarray(contexts, np.float32)
         now, v = float(self._clock()), int(version)
+        tids = ([0] * len(ctxs) if tenants is None
+                else [int(t) for t in tenants])
         with self._lock:
             self._conn.executemany(
-                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?)",
-                [(int(rid), x.tobytes(), x.size, int(a), now, v)
-                 for rid, x, a in zip(request_ids, ctxs, arms)],
+                "INSERT OR REPLACE INTO ctx VALUES (?, ?, ?, ?, ?, ?, ?)",
+                [(int(rid), x.tobytes(), x.size, int(a), now, v, tid)
+                 for rid, x, a, tid in zip(request_ids, ctxs, arms, tids)],
             )
             self._conn.commit()
 
@@ -216,32 +234,33 @@ class SQLiteFeedbackStore:
                 marks = ",".join("?" * len(chunk))
                 rows += self._conn.execute(
                     f"SELECT request_id, context, dim, arm, created_at,"
-                    f" version FROM ctx WHERE request_id IN ({marks})",
+                    f" version, tenant FROM ctx WHERE request_id IN"
+                    f" ({marks})",
                     chunk).fetchall()
                 self._conn.execute(
                     f"DELETE FROM ctx WHERE request_id IN ({marks})", chunk)
             self._conn.commit()
             now = self._clock()
             by_id = {}
-            for rid, blob, dim, arm, created, version in rows:
+            for rid, blob, dim, arm, created, version, tenant in rows:
                 if (self.ttl is not None
                         and now - float(created) > self.ttl):
                     self.expired_total += 1
                     continue
                 by_id[rid] = (
                     np.frombuffer(blob, np.float32, count=dim).copy(),
-                    int(arm), int(version))
+                    int(arm), int(version), int(tenant))
         return [by_id.get(rid) for rid in ids]
 
     def pop_record(
         self, request_id: int
-    ) -> Optional[Tuple[np.ndarray, int, int]]:
-        """Like ``pop`` but also returns the snapshot version the request
-        was routed under (0 for pre-gateway rows)."""
+    ) -> Optional[Tuple[np.ndarray, int, int, int]]:
+        """Like ``pop`` but also returns the snapshot version and tenant
+        id the request was routed under (0/0 for pre-gateway rows)."""
         with self._lock:
             row = self._conn.execute(
-                "SELECT context, dim, arm, created_at, version FROM ctx "
-                "WHERE request_id = ?",
+                "SELECT context, dim, arm, created_at, version, tenant "
+                "FROM ctx WHERE request_id = ?",
                 (int(request_id),),
             ).fetchone()
             if row is None:
@@ -250,13 +269,13 @@ class SQLiteFeedbackStore:
                 "DELETE FROM ctx WHERE request_id = ?", (int(request_id),)
             )
             self._conn.commit()
-            blob, dim, arm, created, version = row
+            blob, dim, arm, created, version, tenant = row
             if (self.ttl is not None
                     and self._clock() - float(created) > self.ttl):
                 self.expired_total += 1   # reward arrived after the TTL
                 return None
         return (np.frombuffer(blob, np.float32, count=dim).copy(),
-                int(arm), int(version))
+                int(arm), int(version), int(tenant))
 
     def sweep_expired(self) -> int:
         """Evict every aged-out row; returns how many were dropped."""

@@ -142,6 +142,7 @@ class RouterGateway:
         store=None,
         telemetry: Optional[Telemetry] = None,
         batcher: Optional[MicroBatcher] = None,
+        tenant_names: Optional[Sequence[str]] = None,
     ):
         self.cfg = cfg
         self._lock = threading.Lock()
@@ -151,13 +152,20 @@ class RouterGateway:
         self.handle = StateHandle(state, step=self._t_host)
         # Explicit None checks — an empty store/batcher is falsy.
         self.store = InMemoryFeedbackStore() if store is None else store
-        self.telemetry = telemetry or Telemetry(cfg.max_arms)
+        self.telemetry = telemetry or Telemetry(
+            cfg.max_arms, tenant_names=tenant_names)
         self.batcher = MicroBatcher() if batcher is None else batcher
-        self._pending: List[Tuple[np.ndarray, np.ndarray,
+        self._pending: List[Tuple[np.ndarray, np.ndarray, np.ndarray,
                                   np.ndarray, np.ndarray, List[int]]] = []
+        # tenant tag for requests sitting in the admission window — the
+        # MicroBatcher flush contract stays (ids, rows); tenants rejoin
+        # the block here at route time (DESIGN.md §15)
+        self._tenant_of: Dict[int, int] = {}
         statics = cfg.statics
         self._select = router_lib.jit_select_batch(statics)
         self._update = router_lib.jit_update_batch(statics)
+        self._select_t = router_lib.jit_select_batch_tenants(statics)
+        self._update_t = router_lib.jit_update_batch_tenants(statics)
 
     # -- selection plane ---------------------------------------------------
     @property
@@ -168,22 +176,42 @@ class RouterGateway:
     def version(self) -> int:
         return self.handle.version
 
-    def route_block(self, request_ids: Sequence[int], X) -> RouteResult:
+    def route_block(self, request_ids: Sequence[int], X,
+                    tenant_ids=None) -> RouteResult:
         """Route one admission window with a single ``select_batch``.
 
         The state swap under the lock is the whole critical section: the
         jitted call dispatches asynchronously, so the select plane never
-        waits on a learner tick's device work."""
+        waits on a learner tick's device work.
+
+        When the live state carries a tenant table, each row is scored
+        under ITS tenant's dual and ceiling (``tenant_ids``; None = all
+        tenant 0); passing tenant_ids without a table is an error."""
         B = len(request_ids)
+        tenanted = self._live.tenants is not None
+        if tenant_ids is not None and not tenanted:
+            raise ValueError(
+                "route_block: tenant_ids given but the live state has no "
+                "tenant table (init_state(..., tenants=make_table(...)))")
         t0 = time.perf_counter()
         # Explicit device staging outside the lock: the jitted select
         # must never pay a hidden host->device transfer per call (the
         # hot-path tests pin this under jax.transfer_guard("disallow")).
         X = jnp.asarray(X, jnp.float32)
-        with self._lock:
-            dec, self._live = self._select(self._live, X)
-            self._t_host += B
-            version = self.handle.version
+        if tenanted:
+            tids_np = (np.zeros(B, np.int32) if tenant_ids is None
+                       else np.asarray(tenant_ids, np.int32))
+            tids = jnp.asarray(tids_np)
+            with self._lock:
+                dec, self._live = self._select_t(self._live, X, tids)
+                self._t_host += B
+                version = self.handle.version
+        else:
+            tids_np = None
+            with self._lock:
+                dec, self._live = self._select(self._live, X)
+                self._t_host += B
+                version = self.handle.version
         arms = np.asarray(dec.arms)
         forced = np.asarray(dec.forced)
         lam = float(dec.lam)
@@ -191,19 +219,31 @@ class RouterGateway:
         X_np = np.asarray(X)
         put_block = getattr(self.store, "put_block", None)
         if put_block is not None:
-            put_block(request_ids, X_np, arms, version=version)
+            if tids_np is None:    # keep pre-tenancy store compatibility
+                put_block(request_ids, X_np, arms, version=version)
+            else:
+                put_block(request_ids, X_np, arms, version=version,
+                          tenants=tids_np)
         else:  # third-party stores: per-row contract
-            for rid, x, a in zip(request_ids, X_np, arms):
-                self.store.put(rid, x, int(a), version=version)
+            for i, (rid, x, a) in enumerate(zip(request_ids, X_np, arms)):
+                if tids_np is None:
+                    self.store.put(rid, x, int(a), version=version)
+                else:
+                    self.store.put(rid, x, int(a), version=version,
+                                   tenant=int(tids_np[i]))
         self.telemetry.record_route(
             arms, route_us, lam, forced=int(forced.sum()), version=version)
         return RouteResult(
             request_ids=tuple(int(r) for r in request_ids), arms=arms,
             lam=lam, version=version, route_us=route_us, forced=forced)
 
-    def submit(self, request_id: int, context) -> Optional[RouteResult]:
+    def submit(self, request_id: int, context,
+               tenant: int = 0) -> Optional[RouteResult]:
         """Admission path: collect into the micro-batch window; routes
-        and returns the block when the window fills."""
+        and returns the block when the window fills. ``tenant`` tags the
+        request for per-tenant pacing (ignored without a tenant table)."""
+        if tenant:
+            self._tenant_of[int(request_id)] = int(tenant)
         win = self.batcher.submit(request_id, context)
         self.telemetry.record_admission(
             len(self.batcher), len(self.batcher), self.batcher.max_batch)
@@ -223,6 +263,12 @@ class RouterGateway:
         ids, rows = win
         self.telemetry.record_admission(
             len(self.batcher), len(ids), self.batcher.max_batch)
+        if self._live.tenants is not None:
+            tids = np.asarray(
+                [self._tenant_of.pop(int(r), 0) for r in ids], np.int32)
+            return self.route_block(ids, rows, tenant_ids=tids)
+        for r in ids:                       # tags are no-ops without a table
+            self._tenant_of.pop(int(r), None)
         return self.route_block(ids, rows)
 
     # -- learner plane -----------------------------------------------------
@@ -259,26 +305,31 @@ class RouterGateway:
             recs = pop_block(request_ids)
         else:  # third-party stores: per-row contract
             recs = [self.store.pop_record(rid) for rid in request_ids]
-        kept_X, kept_a, kept_r, kept_c, kept_ids = [], [], [], [], []
+        kept_X, kept_a, kept_r, kept_c = [], [], [], []
+        kept_t, kept_ids = [], []
         for rid, a, rw, co, rec in zip(
                 request_ids, arms, rewards, costs, recs):
             if rec is None:          # unknown, duplicate, or replayed id
                 self.telemetry.inc("dropped_feedback")
                 continue
-            x, cached_arm, routed_version = rec
+            # pre-tenancy stores return 3-tuples; tenant then defaults 0
+            x, cached_arm, routed_version = rec[:3]
+            tenant = rec[3] if len(rec) > 3 else 0
             arm = int(a) if a >= 0 else cached_arm
             if not (0 <= arm < self.cfg.max_arms and bool(active[arm])):
                 self.telemetry.inc("dropped_feedback")  # retired in flight
                 continue
             self.telemetry.record_feedback_version(routed_version, version)
             kept_X.append(x), kept_a.append(arm)
-            kept_r.append(rw), kept_c.append(co), kept_ids.append(int(rid))
+            kept_r.append(rw), kept_c.append(co)
+            kept_t.append(int(tenant)), kept_ids.append(int(rid))
         if not kept_a:
             return 0
         block = (np.stack(kept_X).astype(np.float32),
                  np.asarray(kept_a, np.int32),
                  np.asarray(kept_r, np.float32),
                  np.asarray(kept_c, np.float32),
+                 np.asarray(kept_t, np.int32),
                  kept_ids)
         with self._lock:
             self._pending.append(block)
@@ -303,14 +354,19 @@ class RouterGateway:
         # not implicitly per update_batch call (and not again on an
         # epoch-bump retry).
         staged = [(jnp.asarray(X), jnp.asarray(a), jnp.asarray(r),
-                   jnp.asarray(c)) for X, a, r, c, _ids in blocks]
+                   jnp.asarray(c), jnp.asarray(t))
+                  for X, a, r, c, t, _ids in blocks]
         while True:
             with self._lock:
                 base = self._live
                 epoch = self._epoch
             learned = base
-            for X, a, r, c in staged:
-                learned = self._update(learned, a, X, r, c)
+            tenanted = base.tenants is not None
+            for X, a, r, c, t in staged:
+                if tenanted:   # fold each row into ITS tenant's pacer (§15)
+                    learned = self._update_t(learned, a, X, r, c, t)
+                else:
+                    learned = self._update(learned, a, X, r, c)
             with self._lock:
                 if self._epoch != epoch:
                     self.telemetry.inc("learn_retries_total")
@@ -320,6 +376,13 @@ class RouterGateway:
             break
         self.telemetry.record_publish(
             snap.version, n_feedback=n_rows, n_blocks=len(blocks))
+        tab = snap.state.tenants
+        if tab is not None:
+            # host readback off the request path: latest table reading for
+            # the per-tenant operator series
+            self.telemetry.record_tenants(
+                np.asarray(tab.spend), np.asarray(tab.pulls),
+                np.asarray(tab.lam), np.asarray(tab.budget))
         return snap
 
     # -- control plane (hot swap goes through the publish path) ------------

@@ -50,13 +50,26 @@ def _percentile(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q))
 
 
+def _escape_label(value) -> str:
+    """Escape a Prometheus label *value* per the exposition format:
+    backslash, double-quote, and newline must be backslash-escaped or
+    one hostile tenant name corrupts the whole scrape page."""
+    return (str(value)
+            .replace("\\", "\\\\")
+            .replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 class Telemetry:
     """Thread-safe gateway telemetry: counters, per-arm pulls, bounded
     latency/lambda windows, admission gauges."""
 
-    def __init__(self, max_arms: int, *, window: int = 4096):
+    def __init__(self, max_arms: int, *, window: int = 4096,
+                 tenant_names: Optional[Sequence[str]] = None):
         self.max_arms = int(max_arms)
         self.window = int(window)
+        self.tenant_names = (None if tenant_names is None
+                             else tuple(str(n) for n in tenant_names))
         self._lock = threading.Lock()
         self._counters = {name: 0 for name in COUNTERS}
         self._pulls = np.zeros(self.max_arms, np.int64)
@@ -67,6 +80,9 @@ class Telemetry:
         self._window_cap = 0
         self._snapshot_version = 0
         self._version_lag_max = 0
+        # latest tenant-plane readings (DESIGN.md §15); None until the
+        # learner records a table snapshot
+        self._tenant: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     # recording
@@ -119,6 +135,27 @@ class Telemetry:
                 self._counters["feedback_late_total"] += 1
             self._version_lag_max = max(self._version_lag_max, lag)
 
+    def record_tenants(self, spend, pulls, lam, budget) -> None:
+        """Latest tenant-table reading (learner plane, after a publish):
+        cumulative spend and pull counts, current dual lambda, and the
+        budget ceiling, one entry per tenant (DESIGN.md §15)."""
+        snap = {
+            "spend": np.asarray(spend, np.float64).ravel(),
+            "pulls": np.asarray(pulls, np.int64).ravel(),
+            "lam": np.asarray(lam, np.float64).ravel(),
+            "budget": np.asarray(budget, np.float64).ravel(),
+        }
+        n = {v.shape for v in snap.values()}
+        if len(n) != 1:
+            raise ValueError(f"tenant arrays disagree on shape: {n}")
+        with self._lock:
+            self._tenant = snap
+
+    def _tenant_label(self, i: int) -> str:
+        if self.tenant_names is not None and i < len(self.tenant_names):
+            return self.tenant_names[i]
+        return str(i)
+
     # ------------------------------------------------------------------
     # reading
     def counter(self, name: str) -> int:
@@ -148,6 +185,7 @@ class Telemetry:
             route = list(self._route_us)
             lam = list(self._lam)
             pulls = self._pulls.copy()
+            tenant = self._tenant
             out: Dict[str, float] = {
                 name: float(v) for name, v in self._counters.items()
             }
@@ -165,6 +203,19 @@ class Telemetry:
         total = pulls.sum()
         for k in range(self.max_arms):
             out[f"pull_rate_{k}"] = float(pulls[k] / total) if total else 0.0
+        if tenant is not None:
+            for i in range(tenant["lam"].size):
+                n_i = int(tenant["pulls"][i])
+                mean_cost = (tenant["spend"][i] / n_i) if n_i else -1.0
+                out[f"tenant_spend_{i}"] = float(tenant["spend"][i])
+                out[f"tenant_pulls_{i}"] = float(n_i)
+                out[f"tenant_lam_{i}"] = float(tenant["lam"][i])
+                out[f"tenant_budget_{i}"] = float(tenant["budget"][i])
+                # mean realized cost over the budget ceiling: 1.0 = exactly
+                # paced, > 1 = overspend; -1.0 before any traffic
+                out[f"tenant_compliance_{i}"] = (
+                    float(mean_cost / tenant["budget"][i])
+                    if n_i and tenant["budget"][i] > 0 else -1.0)
         return out
 
     def prometheus_text(self,
@@ -186,6 +237,7 @@ class Telemetry:
             occ = (self._window_fill / self._window_cap
                    if self._window_cap else 0.0)
             version = self._snapshot_version
+            tenant = self._tenant
         for name, v in sorted(counters.items()):
             emit(name, "counter", float(v), f"{name} counter")
         lines.append("# HELP paretobandit_arm_pulls_total "
@@ -193,15 +245,36 @@ class Telemetry:
         lines.append("# TYPE paretobandit_arm_pulls_total counter")
         for k in range(self.max_arms):
             lines.append(
-                f'paretobandit_arm_pulls_total{{arm="{k}"}} {int(pulls[k])}')
+                f'paretobandit_arm_pulls_total'
+                f'{{arm="{_escape_label(k)}"}} {int(pulls[k])}')
         lines.append("# HELP paretobandit_route_latency_us "
                      "per-decision route latency (microseconds)")
         lines.append("# TYPE paretobandit_route_latency_us summary")
         for q in (0.5, 0.95, 0.99):
             v = _percentile(route, 100 * q)
             lines.append(
-                f'paretobandit_route_latency_us{{quantile="{q:g}"}} '
+                f'paretobandit_route_latency_us'
+                f'{{quantile="{_escape_label(f"{q:g}")}"}} '
                 f"{v:.10g}")
+        if tenant is not None:
+            series = (
+                ("tenant_spend_total", "counter", "spend",
+                 "cumulative realized cost per tenant"),
+                ("tenant_pulls_total", "counter", "pulls",
+                 "routed decisions per tenant"),
+                ("tenant_lambda", "gauge", "lam",
+                 "per-tenant pacer dual lambda_t (DESIGN.md section 15)"),
+                ("tenant_budget", "gauge", "budget",
+                 "per-tenant budget ceiling B_j"),
+            )
+            for name, kind, key, help_ in series:
+                lines.append(f"# HELP paretobandit_{name} {help_}")
+                lines.append(f"# TYPE paretobandit_{name} {kind}")
+                for i, v in enumerate(tenant[key]):
+                    lines.append(
+                        f'paretobandit_{name}'
+                        f'{{tenant="{_escape_label(self._tenant_label(i))}"}}'
+                        f" {float(v):.10g}")
         emit("pacer_lambda", "gauge", float(lam[-1]) if lam else 0.0,
              "pacer dual variable lambda_t (Eq. 4)")
         emit("queue_depth", "gauge", float(queue_depth),

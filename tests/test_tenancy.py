@@ -1,0 +1,413 @@
+"""Tenant-plane tests (DESIGN.md §15).
+
+Covers the ``TenantTable`` pytree and its host-boundary validation, the
+gather/fold exactness contracts (per-row duals bit-identical to the
+grouped single-tenant pacer folds), decay-on-restore composition, the
+snapshot round trip with a non-trivial table, scenario tenant events,
+the tenant-mix stream generators, and the Prometheus label escaping
+that tenant-labelled series rely on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evaluate, pacer, router, scenario, statehandle, tenancy
+from repro.core.types import (
+    HyperParams, PacerState, RouterConfig, init_state,
+)
+from repro.data import synthetic
+from repro.serving.gateway import MicroBatcher, RouterGateway
+from repro.serving.telemetry import Telemetry, _escape_label
+from tests.trace_guard import assert_traces, staging_ok
+
+CFG = RouterConfig(d=8, max_arms=4, forced_pulls=0)
+PRICES = (1e-4, 3e-4, 1e-3, 1e9)
+ACTIVE = (1, 1, 1, 0)
+BUDGETS = (2.0e-4, 3.0e-4, 4.5e-4, 6.0e-4)
+
+
+def mk_state(cfg=CFG, budget=1.0, tenants=None, seed=0):
+    with staging_ok():
+        prices = jnp.asarray(PRICES[: cfg.max_arms], jnp.float32)
+        return init_state(
+            cfg, prices, prices, budget,
+            active=jnp.asarray(ACTIVE[: cfg.max_arms], bool),
+            key=jax.random.PRNGKey(seed), tenants=tenants)
+
+
+def mk_table(budgets=BUDGETS):
+    with staging_ok():
+        return tenancy.make_table(budgets)
+
+
+def rand_block(B, d=CFG.d, seed=0, T=4):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((B, d)).astype(np.float32)
+    r = rng.uniform(0.2, 0.9, B).astype(np.float32)
+    c = rng.uniform(1e-5, 8e-4, B).astype(np.float32)
+    tids = rng.integers(0, T, B).astype(np.int32)
+    return X, r, c, tids
+
+
+class TestTenantTable:
+    def test_make_table_shapes_and_init(self):
+        tab = mk_table()
+        assert tenancy.num_tenants(tab) == 4
+        np.testing.assert_array_equal(np.asarray(tab.lam), np.zeros(4))
+        # c_ema anchors at the budget (same convention as make_states)
+        np.testing.assert_array_equal(np.asarray(tab.c_ema),
+                                      np.asarray(BUDGETS, np.float32))
+        assert np.asarray(tab.enabled).all()
+        assert np.asarray(tab.pulls).sum() == 0
+
+    def test_make_table_rejects_nonpositive_budgets(self):
+        with pytest.raises(ValueError, match="tenant"):
+            tenancy.make_table([1e-4, 0.0, 2e-4])
+        with pytest.raises(ValueError, match="tenant"):
+            tenancy.make_table([1e-4, -3.0])
+
+    def test_set_tenant_budget_validates(self):
+        tab = mk_table()
+        tab2 = tenancy.set_tenant_budget(tab, 1, 9e-4)
+        assert float(tab2.budget[1]) == np.float32(9e-4)
+        with pytest.raises(ValueError):
+            tenancy.set_tenant_budget(tab, 1, 0.0)
+
+    def test_set_budget_validates(self):
+        p = PacerState(lam=jnp.float32(0), c_ema=jnp.float32(1e-4),
+                       budget=jnp.float32(1e-4), enabled=jnp.asarray(True))
+        with pytest.raises(ValueError):
+            pacer.set_budget(p, -1.0)
+
+    def test_make_states_rejects_nonpositive_portfolio_budget(self):
+        env_prices = jnp.asarray(PRICES[: CFG.max_arms], jnp.float32)
+        del env_prices
+        with pytest.raises(ValueError):
+            with staging_ok():
+                pacer.validate_budget(0.0)
+
+    def test_stack_tables_requires_equal_T(self):
+        with pytest.raises(ValueError):
+            tenancy.stack_tables([mk_table(), mk_table(BUDGETS[:3])])
+
+    def test_table_is_pytree(self):
+        tab = mk_table()
+        leaves = jax.tree_util.tree_leaves(tab)
+        assert len(leaves) == 6  # lam, c_ema, budget, enabled, pulls, spend
+        tab2 = jax.tree.map(lambda x: x, tab)
+        assert isinstance(tab2, tenancy.TenantTable)
+
+
+class TestFoldAndGather:
+    def test_tenant_fold_matches_grouped_single_tenant_folds(self):
+        """The §15 contract: interleaved scatter-fold == grouping the
+        block by tenant and folding each group through
+        ``pacer_update_batch`` in arrival order, bit for bit."""
+        hp = HyperParams()
+        tab = mk_table()
+        _X, _r, costs, tids = rand_block(96, seed=3)
+        out = tenancy.tenant_fold(hp, tab, jnp.asarray(tids),
+                                  jnp.asarray(costs))
+        for j in range(4):
+            cs = costs[tids == j]
+            ref = pacer.pacer_update_batch(
+                hp, tenancy.table_row(tab, j), jnp.asarray(cs))
+            assert float(out.lam[j]) == float(ref.lam), f"tenant {j} lam"
+            assert float(out.c_ema[j]) == float(ref.c_ema), f"tenant {j}"
+            assert int(out.pulls[j]) == len(cs)
+
+    def test_gather_rows_views(self):
+        tab = mk_table()
+        rows = tenancy.gather_rows(tab, jnp.asarray([2, 0, 2], jnp.int32))
+        np.testing.assert_array_equal(
+            np.asarray(rows.budget),
+            np.asarray([BUDGETS[2], BUDGETS[0], BUDGETS[2]], np.float32))
+
+    def test_single_tenant_mode_matches_scalar_path_arms(self):
+        """All rows on tenant j with row j mirroring the portfolio pacer
+        => identical arm choices to the scalar (non-tenant) path."""
+        budget = 3.0e-4
+        tab = mk_table((budget,) * 4)
+        st_t = mk_state(budget=budget, tenants=tab)
+        st_s = mk_state(budget=budget)
+        X, _r, _c, _t = rand_block(32, seed=9)
+        tids = jnp.zeros(32, jnp.int32)
+        dec_t, _ = router.select_batch(CFG, st_t, jnp.asarray(X), tids)
+        dec_s, _ = router.select_batch(CFG, st_s, jnp.asarray(X))
+        np.testing.assert_array_equal(np.asarray(dec_t.arms),
+                                      np.asarray(dec_s.arms))
+        assert dec_t.row_lams is not None and dec_s.row_lams is None
+
+    def test_update_batch_folds_only_tenant_table(self):
+        st = mk_state(tenants=mk_table())
+        X, r, c, tids = rand_block(16, seed=1)
+        out = router.update_batch(CFG, st, jnp.zeros(16, jnp.int32),
+                                  jnp.asarray(X), jnp.asarray(r),
+                                  jnp.asarray(c), jnp.asarray(tids))
+        # the portfolio pacer is inert in tenant mode
+        assert float(out.pacer.lam) == float(st.pacer.lam)
+        assert float(out.pacer.c_ema) == float(st.pacer.c_ema)
+        assert int(np.asarray(out.tenants.pulls).sum()) == 16
+
+    def test_tenant_mode_requires_table_and_jnp_backend(self):
+        st = mk_state()   # no table
+        X, _r, _c, tids = rand_block(8)
+        with pytest.raises(ValueError, match="tenant"):
+            router.select_batch(CFG, st, jnp.asarray(X),
+                                jnp.asarray(tids))
+        cfg_p = RouterConfig(d=8, max_arms=4, backend="pallas")
+        st_p = mk_state(cfg_p, tenants=mk_table())
+        with pytest.raises(NotImplementedError):
+            router.select_batch(cfg_p, st_p, jnp.asarray(X),
+                                jnp.asarray(tids))
+
+    def test_zero_retrace_on_new_budgets(self):
+        sel = router.jit_select_batch_tenants(CFG.statics)
+        upd = router.jit_update_batch_tenants(CFG.statics)
+        X, r, c, tids = rand_block(16, seed=2)
+        with staging_ok():
+            args = (jnp.asarray(X), jnp.asarray(r), jnp.asarray(c),
+                    jnp.asarray(tids))
+        st = mk_state(tenants=mk_table())
+        dec, st2 = sel(st, args[0], args[3])
+        upd(st2, dec.arms, args[0], args[1], args[2], args[3])
+        fresh = mk_state(tenants=mk_table((1e-4, 2e-4, 3e-4, 4e-4)),
+                         seed=5)
+        with assert_traces(router, 0, what="new tenant budgets retraced"):
+            dec, stx = sel(fresh, args[0], args[3])
+            upd(stx, dec.arms, args[0], args[1], args[2], args[3])
+
+
+class TestDecayTable:
+    def test_two_stage_composition_matches_one_stage(self):
+        hp = HyperParams()
+        tab = mk_table()
+        X, r, c, tids = rand_block(64, seed=4)
+        tab = tenancy.tenant_fold(hp, tab, jnp.asarray(tids),
+                                  jnp.asarray(c))
+        one = tenancy.decay_table(CFG.statics, hp, tab, 30)
+        two = tenancy.decay_table(
+            CFG.statics, hp, tenancy.decay_table(CFG.statics, hp, tab, 10),
+            20)
+        np.testing.assert_allclose(np.asarray(one.lam), np.asarray(two.lam),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(one.c_ema),
+                                   np.asarray(two.c_ema),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_identity_and_validation(self):
+        tab = mk_table()
+        assert tenancy.decay_table(CFG.statics, HyperParams(), tab, 0) is tab
+        with pytest.raises(ValueError):
+            tenancy.decay_table(CFG.statics, HyperParams(), tab, -1)
+
+    def test_relaxes_toward_budget_anchor(self):
+        hp = HyperParams()
+        tab = mk_table()
+        tab = dataclasses.replace(
+            tab, lam=jnp.full(4, 2.0, jnp.float32),
+            c_ema=jnp.asarray(np.asarray(tab.budget) * 3.0, jnp.float32))
+        aged = tenancy.decay_table(CFG.statics, hp, tab, 10_000)
+        assert np.all(np.asarray(aged.lam) < 0.1)
+        np.testing.assert_allclose(np.asarray(aged.c_ema),
+                                   np.asarray(tab.budget), rtol=1e-3)
+
+
+class TestSnapshotRoundTrip:
+    """Satellite: snapshot round trip with a NON-trivial tenant table."""
+
+    def _warm_gateway(self, n_blocks=3, B=16):
+        gw = RouterGateway(CFG, mk_state(tenants=mk_table()),
+                           batcher=MicroBatcher(max_batch=B))
+        rid = 0
+        for i in range(n_blocks):
+            X, r, c, tids = rand_block(B, seed=10 + i)
+            ids = list(range(rid, rid + B))
+            rid += B
+            res = gw.route_block(ids, X, tenant_ids=tids)
+            gw.enqueue_feedback(ids, res.arms, r, c)
+            gw.learn_tick()
+        return gw
+
+    def test_round_trip_preserves_table(self, tmp_path):
+        gw = self._warm_gateway()
+        tab = gw.live_state.tenants
+        assert int(np.asarray(tab.pulls).sum()) == 48   # non-trivial
+        path = str(tmp_path / "snap")
+        saved = gw.save(path)
+        gw2 = RouterGateway(CFG, mk_state(tenants=mk_table(), seed=9))
+        restored = gw2.restore(path)
+        assert restored.version == saved.version
+        for leaf in ("lam", "c_ema", "budget", "pulls", "spend"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(gw2.live_state.tenants, leaf)),
+                np.asarray(getattr(tab, leaf)), err_msg=leaf)
+
+    def test_restore_with_elapsed_matches_lazy_decay_1e6(self, tmp_path):
+        """save -> restore with elapsed>0 must match the lazy
+        ``decay_table`` path to 1e-6 per tenant."""
+        gw = self._warm_gateway()
+        elapsed = 40
+        path = str(tmp_path / "snap")
+        gw.save(path)
+        gw2 = RouterGateway(CFG, mk_state(tenants=mk_table(), seed=9))
+        gw2.restore(path, elapsed=elapsed)
+        lazy = tenancy.decay_table(CFG.statics, gw.live_state.hyper,
+                                   gw.live_state.tenants, elapsed)
+        for leaf in ("lam", "c_ema"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(gw2.live_state.tenants, leaf)),
+                np.asarray(getattr(lazy, leaf)),
+                rtol=1e-6, atol=1e-6, err_msg=leaf)
+        # pull/spend accounting is bookkeeping, not a control signal —
+        # it survives restore un-decayed
+        np.testing.assert_array_equal(
+            np.asarray(gw2.live_state.tenants.pulls),
+            np.asarray(gw.live_state.tenants.pulls))
+
+    def test_pre_restore_feedback_resolves_with_drop_semantics(
+            self, tmp_path):
+        """§8: feedback routed before a restore must never crash the
+        learner — known ids still resolve against the store, unknown or
+        replayed ids are dropped and counted."""
+        gw = self._warm_gateway()
+        X, r, c, tids = rand_block(16, seed=44)
+        ids = list(range(1000, 1016))
+        res = gw.route_block(ids, X, tenant_ids=tids)
+        path = str(tmp_path / "snap")
+        gw.save(path)
+        gw.restore(path, elapsed=5)
+        # routed-before-restore ids: still in the store, still apply
+        kept = gw.enqueue_feedback(ids, res.arms, r, c)
+        assert kept == 16
+        assert gw.learn_tick() is not None
+        # replayed (already consumed) + unknown ids: dropped, counted
+        before = gw.telemetry.counter("dropped_feedback")
+        assert gw.enqueue_feedback(ids, res.arms, r, c) == 0
+        assert gw.enqueue_feedback([777777], None, [0.5], [1e-4]) == 0
+        assert gw.telemetry.counter("dropped_feedback") == before + 17
+
+
+class TestScenarioTenantEvents:
+    def test_tenant_budget_change_applies(self):
+        from repro.core import simulator
+        env = simulator.make_benchmark(
+            seed=0, splits={"train": 128, "val": 32, "test": 256}).test
+        cfg = RouterConfig()
+        spec = scenario.ScenarioSpec(horizon=256, events=(
+            scenario.TenantBudgetChange(t=128, tenant=1, budget=0.02),))
+        tab = tenancy.make_table([0.004, 0.005, 0.006, 0.007])
+        tids = synthetic.tenant_mix_stream(256, 4, seed=3)
+        _res, finals = evaluate.run_scenario(
+            cfg, spec, env, 0.01, (0, 1), batch_size=64, tenants=tab,
+            tenant_ids=tids, return_states=True)
+        np.testing.assert_allclose(
+            np.asarray(finals.tenants.budget)[:, 1], 0.02)
+        np.testing.assert_allclose(
+            np.asarray(finals.tenants.budget)[:, 0], 0.004)
+
+    def test_tenant_budget_change_on_tenantless_run_raises(self):
+        from repro.core import simulator
+        env = simulator.make_benchmark(
+            seed=0, splits={"train": 128, "val": 32, "test": 256}).test
+        spec = scenario.ScenarioSpec(horizon=256, events=(
+            scenario.TenantBudgetChange(t=128, tenant=1, budget=0.02),))
+        with pytest.raises(ValueError, match="tenant"):
+            evaluate.run_scenario(RouterConfig(), spec, env, 0.01, (0,),
+                                  batch_size=64)
+
+
+class TestStreams:
+    def test_mix_stream_shapes_and_weights(self):
+        tids = synthetic.tenant_mix_stream(4096, 3, weights=(0, 1, 1),
+                                           seed=0)
+        assert tids.dtype == np.int32 and tids.shape == (4096,)
+        assert not (tids == 0).any()
+        with pytest.raises(ValueError):
+            synthetic.tenant_mix_stream(8, 3, weights=(1, 1))
+        with pytest.raises(ValueError):
+            synthetic.tenant_mix_stream(8, 3, weights=(-1, 1, 1))
+
+    def test_flash_crowd_window(self):
+        n = 8192
+        tids = synthetic.flash_crowd_tenant_stream(
+            n, 4, hot=2, start=2048, stop=4096, boost=8.0, seed=0)
+        inside = (tids[2048:4096] == 2).mean()
+        outside = (tids[:2048] == 2).mean()
+        assert inside > 2 * outside
+        with pytest.raises(ValueError):
+            synthetic.flash_crowd_tenant_stream(8, 4, hot=4)
+        with pytest.raises(ValueError):
+            synthetic.flash_crowd_tenant_stream(8, 4, start=6, stop=2)
+
+    def test_diurnal_rotates_leadership(self):
+        n, T, period = 2048, 4, 512
+        tids = synthetic.diurnal_tenant_stream(n, T, period=period,
+                                               sharpness=8.0, seed=1)
+        # each tenant leads its own phase window of the first cycle
+        leaders = [np.bincount(
+            tids[i * (period // T):(i + 1) * (period // T)],
+            minlength=T).argmax() for i in range(T)]
+        assert len(set(leaders)) > 1
+
+    def test_stream_for_spec_honours_mix_shifts(self):
+        spec = scenario.ScenarioSpec(horizon=1024, events=(
+            scenario.TenantMixShift(t=256, weights=(0, 0, 1)),
+            scenario.TenantMixShift(t=512, weights=None),))
+        tids = synthetic.tenant_stream_for_spec(spec, 3, seed=0)
+        assert tids.shape == (1024,)
+        assert (tids[256:512] == 2).all()          # pinned mix window
+        assert len(np.unique(tids[512:])) == 3     # uniform restored
+
+
+class TestTelemetryEscaping:
+    def test_escape_label(self):
+        assert _escape_label('plain') == 'plain'
+        assert _escape_label('a"b') == 'a\\"b'
+        assert _escape_label('a\\b') == 'a\\\\b'
+        assert _escape_label('a\nb') == 'a\\nb'
+
+    def test_prometheus_text_survives_hostile_tenant_names(self):
+        tel = Telemetry(4, tenant_names=['ok', 'ev"il\n\\co'])
+        tel.record_tenants([1.0, 2.0], [3, 4], [0.1, 0.2], [0.5, 0.5])
+        text = tel.prometheus_text()
+        # every sample line stays one line and parses as name{labels} value
+        for line in text.splitlines():
+            if line.startswith("#") or not line:
+                continue
+            assert line.count(" ") >= 1
+            name = line.split("{")[0].split(" ")[0]
+            assert name.startswith("paretobandit_")
+        assert 'tenant="ev\\"il\\n\\\\co"' in text
+
+    def test_metrics_tenant_floats(self):
+        tel = Telemetry(4)
+        tel.record_tenants([2.0, 0.0], [10, 0], [0.3, 0.0], [0.2, 0.1])
+        m = tel.metrics()
+        assert m["tenant_compliance_0"] == pytest.approx(1.0)
+        assert m["tenant_compliance_1"] == -1.0   # no traffic yet
+        assert m["tenant_lam_0"] == pytest.approx(0.3)
+
+    def test_record_tenants_validates_shapes(self):
+        tel = Telemetry(4)
+        with pytest.raises(ValueError):
+            tel.record_tenants([1.0], [1, 2], [0.1], [0.5])
+
+
+class TestEvaluateValidation:
+    def test_tenants_and_ids_go_together(self):
+        from repro.core import simulator
+        env = simulator.make_benchmark(
+            seed=0, splits={"train": 64, "val": 16, "test": 64}).test
+        with pytest.raises(ValueError, match="together"):
+            evaluate.run(RouterConfig(), env, 1e-3, (0,),
+                         tenants=tenancy.make_table([1e-3] * 2))
+        with pytest.raises(ValueError, match="batch_size"):
+            evaluate.run(RouterConfig(), env, 1e-3, (0,),
+                         tenants=tenancy.make_table([1e-3] * 2),
+                         tenant_ids=np.zeros(64, np.int32))
